@@ -1,0 +1,69 @@
+"""Paper Fig. 3: classification accuracy vs bit-width.
+
+Quantizes the trained float model at each width and fine-tunes briefly
+(the paper's footnote-2 retraining), reproducing the knee: LeNet5 is usable
+at ~3 bits, the Cifar10/SVHN topology needs ~6.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.quant import search_bitwidth
+from repro.data import make_image_dataset
+from repro.models.cnn import PAPER_TOPOLOGIES
+from repro.paper.train_cnn import evaluate, get_trained_cnn, train_cnn
+
+BIT_RANGE = (2, 3, 4, 6, 8)
+FINETUNE_STEPS = 40
+
+
+def run(networks=("lenet5",)) -> list:
+    """Full sweep for LeNet5 by default (cifar10/svhn add ~minutes each;
+    enable via networks=('lenet5','cifar10','svhn'))."""
+    rows = []
+    for name in networks:
+        topo = PAPER_TOPOLOGIES[name]
+        trained = get_trained_cnn(name)
+        ds = make_image_dataset(
+            hw=topo.input_hw, channels=topo.input_channels, seed=0
+        )
+
+        def eval_at(bits: int) -> float:
+            ft = train_cnn(
+                topo,
+                steps=FINETUNE_STEPS,
+                dataset=ds,
+                weight_bits=bits,
+                act_bits=max(bits, 4),
+                init_params=trained.params,
+                peak_lr=5e-4,
+            )
+            return ft.float_accuracy  # accuracy of the fine-tuned quant model
+
+        t0 = time.time()
+        res = search_bitwidth(
+            eval_at,
+            float_accuracy=trained.float_accuracy,
+            bit_range=BIT_RANGE,
+            max_drop=0.04,
+        )
+        us = (time.time() - t0) * 1e6
+        curve = " ".join(f"{b}b:{a:.3f}" for b, a in res.curve())
+        rows.append(
+            {
+                "name": f"fig3/{name}",
+                "us_per_call": us,
+                "derived": (
+                    f"float={res.float_accuracy:.3f} {curve} "
+                    f"selected={res.selected_bits}b "
+                    f"[paper selected: "
+                    f"{'3' if name == 'lenet5' else '6'}b]"
+                ),
+            }
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(networks=("lenet5", "cifar10", "svhn")):
+        print(r["name"], "|", r["derived"])

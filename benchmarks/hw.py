@@ -1,0 +1,4 @@
+"""Target hardware constants (TPU v5e-class, per chip)."""
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link

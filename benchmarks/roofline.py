@@ -1,0 +1,185 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch x shape x mesh) cell, in seconds:
+
+  compute    = HLO_FLOPs / (chips * peak)    [= per-device FLOPs / peak]
+  memory     = HLO_bytes / (chips * HBM_bw)  [= per-device bytes / HBM_bw]
+  collective = collective operand bytes per device / link_bw
+
+cost_analysis() reports *per-partition* FLOPs/bytes under SPMD, so the
+division by chips is already done. Collective bytes come from parsing the
+post-optimization HLO (operand shard sizes of all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute); ring-algorithm wire
+amplification (~2x for all-reduce) is noted, not modeled.
+
+Also reported: MODEL_FLOPS (6*N_active*D or 2*N_active*D), the useful-work
+ratio MODEL_FLOPS / HLO_FLOPs, and the roofline fraction
+ideal_time / max(terms) — the headline number in §Perf.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.hw import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS_DIR", "results")
+
+
+def load_cells(mesh: str = "16x16", opt_name: str = "baseline"):
+    suffix = f"__{mesh}.json" if opt_name == "baseline" else (
+        f"__{mesh}__{opt_name}.json"
+    )
+    cells = []
+    for f in sorted(glob.glob(os.path.join(RESULTS_DIR, "dryrun", "*" + suffix))):
+        with open(f) as fh:
+            cells.append(json.load(fh))
+    return cells
+
+
+def analyze(cell: dict) -> dict:
+    if cell["status"] != "ok":
+        return {**cell, "analysis": None}
+    n_dev = cell["n_devices"]
+    if "analysis" in cell:  # trip-count-aware HLO analysis (preferred)
+        flops_dev = cell["analysis"]["flops_per_device"]
+        bytes_dev = cell["analysis"]["hbm_bytes_per_device"]
+        coll_dev = cell["analysis"]["collective_bytes_per_device"]
+    else:  # legacy cells: XLA cost model (undercounts while bodies)
+        flops_dev = cell["cost"]["flops_per_device"]
+        bytes_dev = cell["cost"]["bytes_accessed_per_device"]
+        coll_dev = sum(
+            s["operand_bytes"] for s in cell["collectives"].values()
+        )
+    compute_s = flops_dev / PEAK_FLOPS_BF16
+    memory_s = bytes_dev / HBM_BW
+    collective_s = coll_dev / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    ideal_s = cell["model_flops"] / (n_dev * PEAK_FLOPS_BF16)
+    max_term = max(terms.values())
+    return {
+        "arch": cell["arch"],
+        "shape": cell["shape"],
+        "mesh": cell["mesh"],
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "model_flops": cell["model_flops"],
+        "hlo_flops_total": flops_dev * n_dev,
+        "useful_ratio": cell["model_flops"] / max(1.0, flops_dev * n_dev),
+        "ideal_s": ideal_s,
+        "roofline_fraction": ideal_s / max(1e-12, max_term),
+        "params": cell.get("params"),
+        "memory_per_device_gb": (
+            cell["memory"]["argument_size_in_bytes"]
+            + cell["memory"]["temp_size_in_bytes"]
+            + cell["memory"]["output_size_in_bytes"]
+            - cell["memory"]["alias_size_in_bytes"]
+        )
+        / 2**30,
+    }
+
+
+def table(mesh: str = "16x16", opt_name: str = "baseline") -> list:
+    return [analyze(c) for c in load_cells(mesh, opt_name)]
+
+
+def render_markdown(mesh: str = "16x16", opt_name: str = "baseline") -> str:
+    rows = table(mesh, opt_name)
+    out = [
+        f"| arch | shape | compute s | memory s | collective s | dominant "
+        f"| useful ratio | roofline frac | mem/dev GB |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("compute_s") is None:
+            if r.get("status") == "skipped":
+                out.append(
+                    f"| {r['arch']} | {r['shape']} | — | — | — | skipped "
+                    f"(full attn @500k) | — | — | — |"
+                )
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} "
+            f"| {r['memory_s']:.3e} | {r['collective_s']:.3e} "
+            f"| {r['dominant']} | {r['useful_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.3f} | {r['memory_per_device_gb']:.2f} |"
+        )
+    return "\n".join(out)
+
+
+def _all_variants(mesh: str = "16x16"):
+    """Every artifact for a mesh, keyed (arch, shape) -> [(opt_name, row)]."""
+    out: dict = {}
+    for f in sorted(glob.glob(os.path.join(RESULTS_DIR, "dryrun", "*.json"))):
+        with open(f) as fh:
+            cell = json.load(fh)
+        if cell.get("status") != "ok" or cell.get("mesh") != mesh:
+            continue
+        row = analyze(cell)
+        out.setdefault((cell["arch"], cell["shape"]), []).append(
+            (cell.get("opt", "baseline"), row)
+        )
+    return out
+
+
+def best_table(mesh: str = "16x16") -> list:
+    """Per-cell best configuration (min bottleneck) across all recorded
+    opt variants — what a per-cell tuning loop deploys."""
+    rows = []
+    for (arch, shape), variants in sorted(_all_variants(mesh).items()):
+        base = next((r for n, r in variants if n == "baseline"), None)
+
+        def bottleneck(r):
+            return max(r["compute_s"], r["memory_s"], r["collective_s"])
+
+        opt_name, best = min(variants, key=lambda nv: bottleneck(nv[1]))
+        rows.append(
+            {
+                "arch": arch,
+                "shape": shape,
+                "best_opt": opt_name,
+                "bottleneck_s": bottleneck(best),
+                "baseline_s": bottleneck(base) if base else None,
+                "speedup": (bottleneck(base) / bottleneck(best))
+                if base
+                else None,
+                "roofline_fraction": best["roofline_fraction"],
+                "dominant": best["dominant"],
+            }
+        )
+    return rows
+
+
+def render_best_markdown(mesh: str = "16x16") -> str:
+    out = [
+        "| arch | shape | best config | baseline s | best s | speedup "
+        "| roofline frac | dominant |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in best_table(mesh):
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['best_opt']} "
+            f"| {r['baseline_s']:.3f} | {r['bottleneck_s']:.3f} "
+            f"| {r['speedup']:.2f}x | {r['roofline_fraction']:.4f} "
+            f"| {r['dominant']} |"
+        )
+    return "\n".join(out)
+
+
+def main():
+    for mesh in ("16x16", "2x16x16"):
+        rows = [r for r in table(mesh) if r.get("compute_s") is not None]
+        if not rows:
+            continue
+        print(f"\n=== Roofline ({mesh}) ===")
+        print(render_markdown(mesh))
+    print("\n=== Best configuration per cell (16x16) ===")
+    print(render_best_markdown("16x16"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Invoke as
+``PYTHONPATH=src python -m benchmarks.run`` (add ``--full`` to run the
+slow full Fig. 3 sweep for all three CNNs and the full roofline dump).
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full Fig. 3 sweep (all 3 CNNs)")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        fig3_bitwidth,
+        kernel_bench,
+        table1_param_classes,
+        table2_mult_strategies,
+        table3_device_fit,
+        table4_throughput,
+    )
+
+    rows = []
+    rows += table1_param_classes.run()
+    rows += table2_mult_strategies.run()
+    rows += table3_device_fit.run()
+    rows += table4_throughput.run()
+    rows += fig3_bitwidth.run(
+        networks=("lenet5", "cifar10", "svhn") if args.full else ("lenet5",)
+    )
+    rows += kernel_bench.run()
+
+    # Roofline summary rows (from the dry-run artifacts, if present).
+    try:
+        from benchmarks import roofline
+
+        for mesh in ("16x16", "2x16x16"):
+            for r in roofline.table(mesh):
+                if r.get("compute_s") is None:
+                    continue
+                rows.append(
+                    {
+                        "name": f"roofline/{r['arch']}/{r['shape']}/{mesh}",
+                        "us_per_call": max(
+                            r["compute_s"], r["memory_s"], r["collective_s"]
+                        )
+                        * 1e6,
+                        "derived": (
+                            f"dominant={r['dominant']} "
+                            f"frac={r['roofline_fraction']:.3f} "
+                            f"useful={r['useful_ratio']:.2f}"
+                        ),
+                    }
+                )
+    except Exception as e:  # noqa: BLE001 — roofline needs dry-run artifacts
+        print(f"# roofline skipped: {e}", file=sys.stderr)
+
+    w = csv.writer(sys.stdout)
+    w.writerow(["name", "us_per_call", "derived"])
+    for r in rows:
+        w.writerow([r["name"], f"{r['us_per_call']:.1f}", r["derived"]])
+
+
+if __name__ == "__main__":
+    main()

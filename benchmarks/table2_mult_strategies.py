@@ -1,0 +1,56 @@
+"""Paper Table 2: LeNet5@5bit on Cyclone V under the three multiplier
+strategies. Published points: DSP 24480 blocks (7159%), LE 433,500 ALMs
+(381%), LE+const 50,452 ALMs (44%)."""
+from __future__ import annotations
+
+import time
+
+from repro.core.dhm import (
+    CYCLONE_V_5CGXFC9E7,
+    MultiplierStrategy,
+    cnn_to_dpn,
+    estimate_resources,
+)
+from repro.core.dhm.resources import PAPER_TABLE1
+from repro.models.cnn import LENET5
+
+PAPER = {
+    MultiplierStrategy.DSP: ("dsp", 24480, 71.59),
+    MultiplierStrategy.LE: ("alm", 433_500, 3.81),
+    MultiplierStrategy.LE_CONST: ("alm", 50_452, 0.44),
+}
+
+
+def run() -> list:
+    rows = []
+    g = cnn_to_dpn(LENET5, bits=5)
+    for strat in MultiplierStrategy:
+        t0 = time.time()
+        rep = estimate_resources(
+            g,
+            CYCLONE_V_5CGXFC9E7,
+            bits=5,
+            strategy=strat,
+            fractions=PAPER_TABLE1["lenet5"],
+        )
+        us = (time.time() - t0) * 1e6
+        unit, paper_n, paper_util = PAPER[strat]
+        used = rep.dsp_used if unit == "dsp" else rep.logic_used
+        util = rep.dsp_utilization if unit == "dsp" else rep.logic_utilization
+        rows.append(
+            {
+                "name": f"table2/{strat.value}",
+                "us_per_call": us,
+                "derived": (
+                    f"{unit}={used} ({100*util:.0f}%) "
+                    f"fits={rep.fits} "
+                    f"[paper: {paper_n} ({100*paper_util:.0f}%)]"
+                ),
+            }
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r["name"], "|", r["derived"])

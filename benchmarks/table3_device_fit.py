@@ -1,0 +1,58 @@
+"""Paper Table 3: the three accelerators on Cyclone V and Kintex 7 —
+all fit, zero DSPs, ~1% memory."""
+from __future__ import annotations
+
+import time
+
+from repro.core.dhm import (
+    CYCLONE_V_5CGXFC9E7,
+    KINTEX7_XC7Z045,
+    MultiplierStrategy,
+    cnn_to_dpn,
+    estimate_resources,
+)
+from repro.core.dhm.resources import PAPER_TABLE1
+from repro.models.cnn import CIFAR10, LENET5
+
+PAPER_LOGIC = {  # (cyclone ALMs, kintex LUTs)
+    "lenet5": (8067, 25031),
+    "cifar10": (51276, 172219),
+    "svhn": (39513, 136675),
+}
+BITS = {"lenet5": 3, "cifar10": 6, "svhn": 6}
+
+
+def run() -> list:
+    rows = []
+    topos = {"lenet5": LENET5, "cifar10": CIFAR10, "svhn": CIFAR10}
+    for name, topo in topos.items():
+        g = cnn_to_dpn(topo, bits=BITS[name])
+        for di, dev in enumerate((CYCLONE_V_5CGXFC9E7, KINTEX7_XC7Z045)):
+            t0 = time.time()
+            rep = estimate_resources(
+                g,
+                dev,
+                bits=BITS[name],
+                strategy=MultiplierStrategy.LE_CONST,
+                fractions=PAPER_TABLE1[name],
+            )
+            us = (time.time() - t0) * 1e6
+            paper = PAPER_LOGIC[name][di]
+            rows.append(
+                {
+                    "name": f"table3/{name}/{dev.name}",
+                    "us_per_call": us,
+                    "derived": (
+                        f"logic={rep.logic_used} ({100*rep.logic_utilization:.0f}%) "
+                        f"dsp=0 mem_bits={rep.memory_bits} fits={rep.fits} "
+                        f"[paper: {paper}, model/paper="
+                        f"{rep.logic_used/paper:.2f}]"
+                    ),
+                }
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r["name"], "|", r["derived"])

@@ -1,0 +1,54 @@
+"""Paper Table 4: DHM throughput vs published accelerators.
+
+The DHM law (throughput = f_clk * ops_per_frame / input_samples) reproduces
+the paper's three Haddoc2 rows; the comparison rows are published constants
+(fpgaConvNet / Qiu / FINN / GPU / ASIC) used for the speedup ratios."""
+from __future__ import annotations
+
+import time
+
+from repro.core.dhm import dhm_throughput_gops
+from repro.models.cnn import CIFAR10, LENET5
+
+ROWS = (
+    # (topo, f_clk MHz, paper Gop/s, platform)
+    (LENET5, 65.71, 318.48, "cyclone_v"),
+    (CIFAR10, 63.89, 515.78, "cyclone_v"),
+    (CIFAR10, 54.17, 437.30, "zynq_xc706"),
+)
+FPGACONVNET_CIFAR10 = 166.16  # Gop/s on the 24.8 Mop workload (Zynq)
+FPGACONVNET_LENET5 = 185.81
+
+
+def run() -> list:
+    rows = []
+    for topo, f, paper_gops, platform in ROWS:
+        t0 = time.time()
+        rep = dhm_throughput_gops(topo, f)
+        us = (time.time() - t0) * 1e6
+        rows.append(
+            {
+                "name": f"table4/{topo.name}@{platform}",
+                "us_per_call": us,
+                "derived": (
+                    f"{rep.gops:.2f} Gop/s @ {f} MHz "
+                    f"({rep.frames_per_s:.0f} fps) "
+                    f"[paper: {paper_gops}, model/paper="
+                    f"{rep.gops/paper_gops:.3f}]"
+                ),
+            }
+        )
+    speedup = dhm_throughput_gops(CIFAR10, 54.17).gops / FPGACONVNET_CIFAR10
+    rows.append(
+        {
+            "name": "table4/speedup_vs_fpgaconvnet",
+            "us_per_call": 0.0,
+            "derived": f"x{speedup:.2f} on cifar10/Zynq [paper: x2.63]",
+        }
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r["name"], "|", r["derived"])

@@ -1,0 +1,44 @@
+"""Inject the artifact-generated roofline tables into EXPERIMENTS.md at the
+<!-- ROOFLINE_BASELINE --> / <!-- ROOFLINE_OPTIMIZED --> markers.
+
+    PYTHONPATH=src:. python -m benchmarks.update_experiments
+"""
+from __future__ import annotations
+
+import re
+
+from benchmarks.roofline import render_markdown
+
+MARKERS = {
+    "ROOFLINE_BASELINE": ("16x16", "baseline"),
+    "ROOFLINE_OPTIMIZED": (
+        "16x16",
+        "tpserve+seqcache+bf16attn+ceremat+mb8+bf16ssm+attnpin",
+    ),
+}
+
+
+def main() -> None:
+    with open("EXPERIMENTS.md") as f:
+        text = f.read()
+    for marker, (mesh, opt) in MARKERS.items():
+        table = render_markdown(mesh, opt)
+        block = f"<!-- {marker} -->\n\n{table}\n\n<!-- /{marker} -->"
+        pat = re.compile(
+            rf"<!-- {marker} -->.*?(<!-- /{marker} -->|$(?=\n###|\nReading))",
+            re.S,
+        )
+        if f"<!-- /{marker} -->" in text:
+            text = re.sub(
+                rf"<!-- {marker} -->.*?<!-- /{marker} -->", block, text,
+                flags=re.S,
+            )
+        else:
+            text = text.replace(f"<!-- {marker} -->", block)
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md roofline tables updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+"""The paper, end to end: train LeNet5, pick the bit-width, classify the
+constants, estimate FPGA resources under all three multiplier strategies,
+report DHM throughput — then run the TPU analogue: map the layer graph onto
+a 4-stage spatial pipeline (shard_map + ppermute) and stream µbatches
+through it.
+
+    PYTHONPATH=src python examples/dhm_cnn.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dhm import (
+    CYCLONE_V_5CGXFC9E7,
+    KINTEX7_XC7Z045,
+    MultiplierStrategy,
+    balance_report,
+    cnn_to_dpn,
+    dhm_throughput_gops,
+    estimate_resources,
+    partition_stages,
+)
+from repro.core.dhm.pipeline import (
+    PipelineConfig,
+    pipeline_forward,
+    stack_stage_params,
+)
+from repro.core.dhm.resources import ParamClassFractions
+from repro.models.cnn import LENET5
+from repro.paper.analysis import classify_model
+from repro.paper.train_cnn import evaluate, get_trained_cnn
+
+
+def main():
+    print("== 1. Train + quantize (paper §4.1) ==")
+    trained = get_trained_cnn("lenet5")
+    print(f"LeNet5 float accuracy (synthetic task): "
+          f"{trained.float_accuracy:.3f}")
+    bits = 3
+    stats = classify_model(trained.params, bits)
+    print(f"param classes @ {bits}b: zero={100*stats.zero:.1f}% "
+          f"one={100*stats.one:.1f}% pow2={100*stats.pow2:.1f}% "
+          f"other={100*stats.other:.1f}% -> "
+          f"{100*stats.multiplierless:.1f}% multiplierless")
+
+    print("\n== 2. DHM resource mapping (paper §4.2, Tables 2-3) ==")
+    g = cnn_to_dpn(LENET5, bits=bits)
+    print(f"DPN: {len(g.actors)} actors, {g.total_multipliers()} multipliers,"
+          f" {g.total_line_buffer_bits()} line-buffer bits")
+    fr = ParamClassFractions(stats.zero, stats.one, stats.pow2, stats.other)
+    for strat in MultiplierStrategy:
+        rep = estimate_resources(
+            g, CYCLONE_V_5CGXFC9E7, bits=bits, strategy=strat,
+            fractions=fr,
+        )
+        print("  " + rep.summary())
+
+    print("\n== 3. DHM throughput (paper Table 4) ==")
+    print("  " + dhm_throughput_gops(LENET5, 65.71).summary())
+
+    print("\n== 4. TPU analogue: spatial pipeline mapping ==")
+    costs = [sum(a.flops for a in layer) for layer in g.layers()]
+    costs = [c for c in costs if c > 0]
+    pa = partition_stages(costs, 2)
+    br = balance_report(costs, 2, n_microbatches=8)
+    print(f"  layer costs {[f'{c/1e3:.0f}k' for c in costs]} -> stages "
+          f"{pa.boundaries}, bottleneck {pa.bottleneck/1e3:.0f}k flops, "
+          f"pipeline efficiency {br.pipeline_efficiency:.2f}")
+
+    # Stream µbatches through a 4-stage MLP pipeline on 4 virtual devices —
+    # each stage has private devices (DHM: private resources per actor).
+    mesh = jax.make_mesh((4,), ("stage",))
+    d = 64
+    keys = jax.random.split(jax.random.PRNGKey(0), 4)
+    stage_params = stack_stage_params(
+        [{"w": jax.random.normal(k, (d, d)) * 0.2} for k in keys]
+    )
+    mbs = jax.random.normal(jax.random.PRNGKey(1), (8, 4, d))
+
+    def stage_fn(p, x):
+        return jnp.tanh(x @ p["w"])
+
+    t0 = time.time()
+    out = pipeline_forward(
+        stage_fn, stage_params, mbs, mesh=mesh, cfg=PipelineConfig(4, 8)
+    )
+    ref = mbs
+    for i in range(4):
+        ref = jnp.tanh(ref @ stage_params["w"][i])
+    ok = np.allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+    print(f"  4-stage shard_map pipeline: correct={ok} "
+          f"({time.time()-t0:.2f}s, bubble={PipelineConfig(4,8).n_stages-1}"
+          f"/{8+3} ticks)")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Checkpointing: atomic, step-indexed, resumable save/restore of the full
+training state (params + optimizer + data cursor)."""
+from repro.checkpoint.store import (
+    CheckpointManager,
+    save_pytree,
+    load_pytree,
+)
+
+__all__ = ["CheckpointManager", "save_pytree", "load_pytree"]

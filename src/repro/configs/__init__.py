@@ -1,0 +1,5 @@
+"""Architecture configs: the paper's CNNs + the 10 assigned LM-family
+architectures, each with its input-shape set."""
+from repro.configs.base import ArchConfig, ShapeConfig, SHAPES, get_arch, list_archs
+
+__all__ = ["ArchConfig", "ShapeConfig", "SHAPES", "get_arch", "list_archs"]

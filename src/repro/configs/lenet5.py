@@ -1,0 +1,4 @@
+"""Paper CNN: LeNet5 (Table 1). Selected bit-width: 3."""
+from repro.models.cnn import LENET5 as CONFIG  # noqa: F401
+
+SELECTED_BITS = 3

@@ -1,0 +1,47 @@
+"""Direct Hardware Mapping (DHM) core — the paper's contribution.
+
+- ``graph``: dataflow-process-network (DPN) IR; CNN/LM graph builders at the
+  paper's actor granularity (conv engines, adder trees, activations).
+- ``resources``: the FPGA resource model for the three multiplier strategies
+  (paper Tables 2 & 3).
+- ``throughput``: the streaming-throughput model (paper Table 4).
+- ``mapping``: spatial mapping of a DPN onto a TPU mesh (stage partitioning)
+  — the TPU-native act of "direct mapping".
+- ``pipeline``: the streaming pipelined executor (shard_map + ppermute).
+"""
+from repro.core.dhm.graph import (
+    Actor,
+    ActorKind,
+    DataflowGraph,
+    cnn_to_dpn,
+    layer_costs_to_dpn,
+)
+from repro.core.dhm.resources import (
+    DeviceModel,
+    CYCLONE_V_5CGXFC9E7,
+    KINTEX7_XC7Z045,
+    MultiplierStrategy,
+    ResourceReport,
+    estimate_resources,
+)
+from repro.core.dhm.throughput import dhm_throughput_gops, ThroughputReport
+from repro.core.dhm.mapping import StageAssignment, partition_stages, balance_report
+
+__all__ = [
+    "Actor",
+    "ActorKind",
+    "DataflowGraph",
+    "cnn_to_dpn",
+    "layer_costs_to_dpn",
+    "DeviceModel",
+    "CYCLONE_V_5CGXFC9E7",
+    "KINTEX7_XC7Z045",
+    "MultiplierStrategy",
+    "ResourceReport",
+    "estimate_resources",
+    "dhm_throughput_gops",
+    "ThroughputReport",
+    "StageAssignment",
+    "partition_stages",
+    "balance_report",
+]

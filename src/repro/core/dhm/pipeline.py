@@ -1,0 +1,137 @@
+"""Streaming pipelined executor: the TPU incarnation of DHM's "all actors
+always firing" model.
+
+Stages are assigned to disjoint device groups along a mesh axis
+(``stage``). Each device group keeps its stage's parameters resident
+(private resources, as in DHM) and processes a stream of µbatches; the
+activation stream flows stage -> stage+1 over ICI via
+``jax.lax.ppermute`` — the edge of the dataflow graph become a physical
+link, never touching host or "external" memory.
+
+Schedule: GPipe fill/steady/drain. For M µbatches and S stages the loop runs
+T = M + S - 1 ticks; at tick t stage s processes µbatch (t - s) when
+0 <= t - s < M. All stages fire every tick (fill/drain ticks process
+garbage that is masked out) — matching the paper's fully-pipelined,
+always-firing actors.
+
+The stage body must be shape-homogeneous (same activation shape in/out),
+which holds for transformer stacks and for the CNN topologies once grouped
+into stages by the mapper.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    n_stages: int
+    n_microbatches: int
+    stage_axis: str = "stage"
+
+    def __post_init__(self):
+        if self.n_microbatches < 1 or self.n_stages < 1:
+            raise ValueError("n_stages and n_microbatches must be >= 1")
+
+
+def pipeline_forward(
+    stage_fn: Callable,
+    stage_params,
+    microbatches: jax.Array,
+    *,
+    mesh: jax.sharding.Mesh,
+    cfg: PipelineConfig,
+):
+    """Run the µbatch stream through the spatial pipeline.
+
+    Args:
+      stage_fn: (params_for_one_stage, x) -> y with y.shape == x.shape.
+      stage_params: pytree whose leaves are stacked on a leading axis of
+        size ``n_stages``; sharded so stage s's slice lives on stage-s
+        devices.
+      microbatches: (M, mb, ...) stacked µbatch inputs.
+      mesh: mesh containing ``cfg.stage_axis``.
+
+    Returns:
+      (M, mb, ...) outputs of the final stage.
+    """
+    S, M = cfg.n_stages, cfg.n_microbatches
+    ax = cfg.stage_axis
+    if microbatches.shape[0] != M:
+        raise ValueError(
+            f"expected {M} microbatches, got {microbatches.shape[0]}"
+        )
+    if mesh.shape[ax] != S:
+        raise ValueError(
+            f"mesh axis {ax!r} has {mesh.shape[ax]} devices, need {S}"
+        )
+
+    def _per_stage(params, mb_stream):
+        # Inside shard_map: params leaves have leading dim 1 (this stage's
+        # slice); mb_stream is the full (M, mb, ...) stream, replicated.
+        params = jax.tree_util.tree_map(lambda p: p[0], params)
+        stage_id = jax.lax.axis_index(ax)
+        zero = jnp.zeros_like(mb_stream[0])
+        out_buf = jnp.zeros_like(mb_stream)
+
+        def tick(carry, t):
+            buf, out_buf = carry
+            # Stage 0 injects µbatch t (zeros once the stream is drained).
+            inject = jnp.where(t < M, t, 0)
+            x0 = jax.lax.dynamic_index_in_dim(
+                mb_stream, inject, axis=0, keepdims=False
+            )
+            x = jnp.where(stage_id == 0, x0, buf)
+            y = stage_fn(params, x)
+            # µbatch index this stage just processed; valid window check.
+            mb_idx = t - stage_id
+            valid_out = jnp.logical_and(
+                stage_id == S - 1,
+                jnp.logical_and(mb_idx >= 0, mb_idx < M),
+            )
+            out_buf = jax.lax.dynamic_update_index_in_dim(
+                out_buf,
+                jnp.where(valid_out, y, jax.lax.dynamic_index_in_dim(
+                    out_buf, jnp.clip(mb_idx, 0, M - 1), axis=0, keepdims=False
+                )),
+                jnp.clip(mb_idx, 0, M - 1),
+                axis=0,
+            )
+            # Stream the activation to the next stage (edge = physical link).
+            nxt = jax.lax.ppermute(
+                y, ax, [(i, i + 1) for i in range(S - 1)]
+            )
+            return (nxt, out_buf), None
+
+        (_, out_buf), _ = jax.lax.scan(
+            tick, (zero, out_buf), jnp.arange(M + S - 1)
+        )
+        # Leading singleton stage axis so out_specs can shard it.
+        return out_buf[None]
+
+    in_specs = (
+        jax.tree_util.tree_map(lambda _: P(ax), stage_params),
+        P(),  # µbatch stream replicated (only stage 0 reads it)
+    )
+    shmap = jax.shard_map(
+        _per_stage,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=P(ax),
+        check_vma=False,
+    )
+    stacked = shmap(stage_params, microbatches)  # (S, M, mb, ...)
+    return stacked[-1]
+
+
+def stack_stage_params(per_stage_params: list):
+    """Stack a list of per-stage param pytrees along a new leading axis."""
+    return jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs, axis=0), *per_stage_params
+    )

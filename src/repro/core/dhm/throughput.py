@@ -1,0 +1,51 @@
+"""DHM throughput model (paper Table 4).
+
+With full pipelining the accelerator ingests one input *sample* (one pixel
+of one channel of the streamed frame) per clock cycle, and every mapped
+operation fires once per ingested frame. Hence
+
+    throughput [op/s] = f_clk * ops_per_frame / (H * W * C_in)
+
+This formula reproduces the paper's Table 4 rows exactly:
+  LeNet5  @65.71 MHz: 3.8e6 ops / 784  * 65.71e6 = 318.5 Gop/s  (paper 318.48)
+  Cifar10 @63.89 MHz: 24.8e6 / 3072    * 63.89e6 = 515.8 Gop/s  (paper 515.78)
+  SVHN(Zynq) @54.17 MHz: 24.8e6 / 3072 * 54.17e6 = 437.3 Gop/s  (paper 437.30)
+
+The TPU translation of the same law: the spatial pipeline's steady-state
+throughput equals (slowest stage time)^-1 * work per µbatch — used by
+``mapping.balance_report``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ThroughputReport:
+    name: str
+    workload_mop: float  # ops per frame (feature extractor)
+    f_clk_mhz: float
+    gops: float
+    frames_per_s: float
+
+    def summary(self) -> str:
+        return (
+            f"{self.name:>10s}: {self.workload_mop:6.1f} Mop @ "
+            f"{self.f_clk_mhz:6.2f} MHz -> {self.gops:7.2f} Gop/s "
+            f"({self.frames_per_s:9.1f} frames/s)"
+        )
+
+
+def dhm_throughput_gops(topo, f_clk_mhz: float) -> ThroughputReport:
+    """Throughput of a DHM-mapped feature extractor at a clock frequency."""
+    ops = topo.feature_extractor_ops()
+    samples = topo.input_hw * topo.input_hw * topo.input_channels
+    f = f_clk_mhz * 1e6
+    gops = f * ops / samples / 1e9
+    return ThroughputReport(
+        name=topo.name,
+        workload_mop=ops / 1e6,
+        f_clk_mhz=f_clk_mhz,
+        gops=gops,
+        frames_per_s=f / samples,
+    )

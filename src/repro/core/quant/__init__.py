@@ -1,0 +1,46 @@
+"""Quantization substrate implementing the paper's arithmetic tactics.
+
+- ``fixed_point``: Q-format fixed-point representation (paper §4.1) with
+  straight-through-estimator fake-quant for quantization-aware fine-tuning.
+- ``pow2``: classification/projection of parameters onto {0, ±1, ±2^k}
+  (paper §4.2, the constant-specialized-multiplier tactic) and the Table 1
+  parameter-class histogram.
+- ``packing``: 4-bit (sign | log2-magnitude | zero) code packing used by the
+  Pallas pow2 matmul kernel.
+- ``bitwidth_search``: the Fig. 3 accuracy-vs-bit-width exploration harness.
+"""
+from repro.core.quant.fixed_point import (
+    FixedPointSpec,
+    quantize_fixed,
+    dequantize_fixed,
+    fake_quant,
+    fake_quant_ste,
+)
+from repro.core.quant.pow2 import (
+    ParamClassStats,
+    classify_params,
+    project_pow2,
+    pow2_codes,
+    decode_pow2,
+    POW2_ZERO_CODE,
+)
+from repro.core.quant.packing import pack_codes_u4, unpack_codes_u4
+from repro.core.quant.bitwidth_search import BitwidthSearchResult, search_bitwidth
+
+__all__ = [
+    "FixedPointSpec",
+    "quantize_fixed",
+    "dequantize_fixed",
+    "fake_quant",
+    "fake_quant_ste",
+    "ParamClassStats",
+    "classify_params",
+    "project_pow2",
+    "pow2_codes",
+    "decode_pow2",
+    "POW2_ZERO_CODE",
+    "pack_codes_u4",
+    "unpack_codes_u4",
+    "BitwidthSearchResult",
+    "search_bitwidth",
+]

@@ -1,0 +1,56 @@
+"""Bit-width exploration (paper Fig. 3).
+
+The paper selects each network's fixed-point width by sweeping bit-widths and
+keeping the smallest one whose (optionally fine-tuned) accuracy stays within
+an acceptable drop of the float baseline (3 bits for LeNet5, 6 for
+SVHN/CIFAR10). This harness is model-agnostic: callers supply
+
+  eval_quantized(bits)  -> accuracy of the model quantized at ``bits``
+                           (the callable decides whether to fine-tune, mirror
+                           the paper's footnote-2 retraining, etc.)
+
+and the float baseline accuracy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class BitwidthSearchResult:
+    float_accuracy: float
+    accuracy_by_bits: Mapping[int, float]
+    selected_bits: int
+    max_drop: float
+
+    def curve(self) -> list:
+        """(bits, accuracy) pairs, ascending bits — the Fig. 3 curve."""
+        return sorted(self.accuracy_by_bits.items())
+
+
+def search_bitwidth(
+    eval_quantized: Callable[[int], float],
+    *,
+    float_accuracy: float,
+    bit_range: Sequence[int] = (2, 3, 4, 5, 6, 7, 8),
+    max_drop: float = 0.04,
+) -> BitwidthSearchResult:
+    """Sweep bit-widths ascending; select the smallest within ``max_drop``
+    (absolute accuracy drop) of the float baseline.
+
+    The full curve is evaluated (not early-stopped) because the paper reports
+    the whole exploration, and the curve is itself a deliverable (Fig. 3).
+    """
+    accs = {int(b): float(eval_quantized(int(b))) for b in bit_range}
+    selected = max(bit_range)
+    for b in sorted(accs):
+        if float_accuracy - accs[b] <= max_drop:
+            selected = b
+            break
+    return BitwidthSearchResult(
+        float_accuracy=float(float_accuracy),
+        accuracy_by_bits=accs,
+        selected_bits=int(selected),
+        max_drop=float(max_drop),
+    )

@@ -1,0 +1,136 @@
+"""Fixed-point Q-format quantization (paper §4.1).
+
+The paper represents data and parameters in short fixed-point formats
+(3 bits for LeNet5, 6 bits for SVHN/CIFAR10). A ``b``-bit signed two's
+complement Q(m, f) number has one sign bit, ``m`` integer bits and ``f``
+fractional bits with b = 1 + m + f, representable range
+[-2^m, 2^m - 2^-f] with step 2^-f.
+
+``fake_quant_ste`` implements quantization-aware training with the
+straight-through estimator (identity gradient), used for the paper's
+post-bit-width-selection fine-tuning step (footnote 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedPointSpec:
+    """A signed two's-complement fixed-point format.
+
+    Attributes:
+      bits: total bit-width, including the sign bit. Must be >= 2.
+      frac_bits: number of fractional bits ``f``. The scale is ``2**-f``.
+    """
+
+    bits: int
+    frac_bits: int
+
+    def __post_init__(self) -> None:
+        if self.bits < 2:
+            raise ValueError(f"fixed-point needs >=2 bits, got {self.bits}")
+
+    @property
+    def int_bits(self) -> int:
+        return self.bits - 1 - self.frac_bits
+
+    @property
+    def scale(self) -> float:
+        return 2.0 ** (-self.frac_bits)
+
+    @property
+    def qmin(self) -> int:
+        return -(2 ** (self.bits - 1))
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.bits - 1) - 1
+
+    @property
+    def min_value(self) -> float:
+        return self.qmin * self.scale
+
+    @property
+    def max_value(self) -> float:
+        return self.qmax * self.scale
+
+    @staticmethod
+    def for_tensor(x: jax.Array, bits: int) -> "FixedPointSpec":
+        """Choose frac_bits so the tensor's max-abs value fits (paper's
+        'inferring the minimal required precision')."""
+        max_abs = float(jnp.max(jnp.abs(x)))
+        if max_abs == 0.0 or not jnp.isfinite(max_abs):
+            return FixedPointSpec(bits=bits, frac_bits=bits - 1)
+        # Smallest m with 2^m >= max_abs, then f = bits - 1 - m. m may be
+        # negative (small-magnitude tensors get extra fractional bits) and
+        # f may be negative (scale > 1 for large-magnitude tensors).
+        import math
+
+        m = math.ceil(math.log2(max_abs + 1e-12))
+        return FixedPointSpec(bits=bits, frac_bits=bits - 1 - m)
+
+
+def quantize_fixed(x: jax.Array, spec: FixedPointSpec) -> jax.Array:
+    """Quantize to integer codes (int32) with round-to-nearest-even."""
+    q = jnp.round(x / spec.scale)
+    return jnp.clip(q, spec.qmin, spec.qmax).astype(jnp.int32)
+
+
+def dequantize_fixed(q: jax.Array, spec: FixedPointSpec) -> jax.Array:
+    return q.astype(jnp.float32) * spec.scale
+
+
+def fake_quant(x: jax.Array, spec: FixedPointSpec) -> jax.Array:
+    """Quantize-dequantize round trip (no gradient defined)."""
+    return dequantize_fixed(quantize_fixed(x, spec), spec)
+
+
+@jax.custom_vjp
+def _ste(x: jax.Array, scale: jax.Array, qmin: jax.Array, qmax: jax.Array):
+    q = jnp.clip(jnp.round(x / scale), qmin, qmax)
+    return q * scale
+
+
+def _ste_fwd(x, scale, qmin, qmax):
+    return _ste(x, scale, qmin, qmax), (x, scale, qmin, qmax)
+
+
+def _ste_bwd(res, g):
+    x, scale, qmin, qmax = res
+    # Straight-through inside the representable range; zero outside
+    # (clipped values carry no gradient).
+    inside = jnp.logical_and(x >= qmin * scale, x <= qmax * scale)
+    return (jnp.where(inside, g, 0.0), None, None, None)
+
+
+_ste.defvjp(_ste_fwd, _ste_bwd)
+
+
+def fake_quant_ste(x: jax.Array, spec: FixedPointSpec) -> jax.Array:
+    """Fake-quant with straight-through-estimator gradients (QAT)."""
+    return _ste(
+        x,
+        jnp.asarray(spec.scale, x.dtype),
+        jnp.asarray(spec.qmin, x.dtype),
+        jnp.asarray(spec.qmax, x.dtype),
+    )
+
+
+def fake_quant_dynamic(x: jax.Array, bits: int) -> jax.Array:
+    """Trace-compatible fake-quant: the power-of-two scale is derived from the
+    live tensor max (``for_tensor`` done in-graph), with STE gradients.
+
+    Used for QAT where parameters move during training so the Q-format must
+    track them; at export time the final static ``FixedPointSpec`` is taken
+    from the trained tensor.
+    """
+    max_abs = jnp.max(jnp.abs(jax.lax.stop_gradient(x)))
+    m = jnp.ceil(jnp.log2(jnp.maximum(max_abs, 1e-12)))
+    scale = jnp.exp2(m - (bits - 1)).astype(x.dtype)
+    qmax = jnp.asarray(2 ** (bits - 1) - 1, x.dtype)
+    qmin = jnp.asarray(-(2 ** (bits - 1)), x.dtype)
+    return _ste(x, scale, qmin, qmax)

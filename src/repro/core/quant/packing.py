@@ -1,0 +1,31 @@
+"""Packing of 4-bit pow2 codes, two per byte.
+
+The Pallas pow2 matmul kernel streams weights as uint8 with two 4-bit codes
+per byte (even index in the low nibble), a 4x footprint/bandwidth reduction
+vs bf16 — the TPU translation of the paper's multiplier-area reduction.
+
+Packing is along the *last* axis, which must be even.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pack_codes_u4(codes: jax.Array) -> jax.Array:
+    """Pack uint8 codes in [0,16) two-per-byte along the last axis."""
+    codes = jnp.asarray(codes, dtype=jnp.uint8)
+    if codes.shape[-1] % 2 != 0:
+        raise ValueError(f"last axis must be even, got {codes.shape}")
+    lo = codes[..., 0::2]
+    hi = codes[..., 1::2]
+    return jnp.bitwise_or(lo, jnp.left_shift(hi, 4)).astype(jnp.uint8)
+
+
+def unpack_codes_u4(packed: jax.Array) -> jax.Array:
+    """Inverse of :func:`pack_codes_u4`."""
+    packed = jnp.asarray(packed, dtype=jnp.uint8)
+    lo = jnp.bitwise_and(packed, 0x0F)
+    hi = jnp.right_shift(packed, 4)
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)

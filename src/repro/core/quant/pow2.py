@@ -1,0 +1,169 @@
+"""Power-of-two ("constant-specialized multiplier") quantization (paper §4.2).
+
+The paper exploits that, after short fixed-point quantization, >90% of CNN
+parameters fall into {0, ±1, ±2^k}: multiplications by those constants need
+no multiplier at all (removed / wire / shift). Two pieces live here:
+
+1. ``classify_params`` — the Table 1 histogram: the fraction of quantized
+   parameters that are exactly zero / ±1 / ±2^k / other.
+
+2. A logarithmic (pow2-codebook) weight representation used by the TPU
+   adaptation: each weight is a 4-bit code ``(sign, magnitude-index)`` with a
+   per-output-channel float scale:
+
+       code 0          -> 0.0
+       code m, sign s  -> (-1)^s * scale * 2^(m-1),   m in [1..7]
+
+   i.e. 7 octaves of magnitude per sign plus exact zero. Decoding a code is
+   an *exponent add* (a shift), never a multiply — the TPU-native analogue of
+   the paper's shift-register multipliers. Codes pack two-per-byte (see
+   ``packing.py``) giving 4-bit weight storage.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+# Number of non-zero magnitude levels per sign (3 magnitude bits, m=1..7).
+POW2_LEVELS = 7
+POW2_ZERO_CODE = 0
+# Largest representable multiple of the scale: 2^(POW2_LEVELS-1).
+POW2_MAX_MAG = 2 ** (POW2_LEVELS - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamClassStats:
+    """Fractions of quantized parameters per multiplier-specialization class
+    (paper Table 1)."""
+
+    zero: float
+    one: float
+    pow2: float
+    other: float
+    total: int
+
+    @property
+    def multiplierless(self) -> float:
+        """Fraction of parameters needing no hardware multiplier."""
+        return self.zero + self.one + self.pow2
+
+    def as_percent(self) -> dict:
+        return {
+            "zero %": 100.0 * self.zero,
+            "one %": 100.0 * self.one,
+            "pow2 %": 100.0 * self.pow2,
+            "other %": 100.0 * self.other,
+        }
+
+
+def _is_pow2_int(q: jnp.ndarray) -> jnp.ndarray:
+    """True where |q| is a (positive) power of two, elementwise, int32 input."""
+    a = jnp.abs(q)
+    return jnp.logical_and(a > 0, jnp.bitwise_and(a, a - 1) == 0)
+
+
+def classify_params(q_codes: jax.Array, frac_bits: int) -> ParamClassStats:
+    """Classify integer fixed-point codes into zero/one/pow2/other.
+
+    A code ``q`` represents the value ``q * 2**-frac_bits``; the value is
+    ±1 iff |q| == 2**frac_bits, and a power of two iff |q| is a power of two
+    (positive or negative exponents both count: x0.5 is a shift as well).
+    """
+    q = jnp.asarray(q_codes).astype(jnp.int32).ravel()
+    total = q.size
+    one_mag = 2**frac_bits if frac_bits >= 0 else 0
+    is_zero = q == 0
+    is_one = jnp.abs(q) == one_mag if one_mag > 0 else jnp.zeros_like(is_zero)
+    is_p2 = jnp.logical_and(_is_pow2_int(q), jnp.logical_not(is_one))
+    n_zero = int(jnp.sum(is_zero))
+    n_one = int(jnp.sum(is_one))
+    n_p2 = int(jnp.sum(is_p2))
+    n_other = total - n_zero - n_one - n_p2
+    return ParamClassStats(
+        zero=n_zero / total,
+        one=n_one / total,
+        pow2=n_p2 / total,
+        other=n_other / total,
+        total=total,
+    )
+
+
+def _per_channel_scale(w: jax.Array, axis: int) -> jax.Array:
+    """Scale so the largest magnitude maps to the top code (2^6 * scale)."""
+    reduce_axes = tuple(i for i in range(w.ndim) if i != axis)
+    max_abs = jnp.max(jnp.abs(w), axis=reduce_axes, keepdims=True)
+    # Guard all-zero channels.
+    max_abs = jnp.where(max_abs == 0, 1.0, max_abs)
+    return max_abs / POW2_MAX_MAG
+
+
+def pow2_codes(w: jax.Array, *, channel_axis: int = -1):
+    """Quantize ``w`` to the pow2 codebook.
+
+    Returns:
+      codes: uint8 array, same shape as w, values in [0, 15]:
+             bit 3 = sign, bits 2:0 = magnitude index m (0 => zero).
+      scale: float32 per-channel scale, broadcastable against w.
+    """
+    w = jnp.asarray(w)
+    axis = channel_axis % w.ndim
+    scale = _per_channel_scale(w, axis).astype(jnp.float32)
+    normalized = w.astype(jnp.float32) / scale  # in [-64, 64]
+    mag = jnp.abs(normalized)
+    # Round in the log domain to the nearest power of two:
+    # exponent e = round(log2(mag)), clipped to [0, 6]; m = e + 1.
+    safe = jnp.maximum(mag, 1e-30)
+    e = jnp.round(jnp.log2(safe))
+    e = jnp.clip(e, 0, POW2_LEVELS - 1)
+    # Underflow to zero: values closer to 0 than to scale*2^0 in log space.
+    # The geometric midpoint between 0 and 1 in this codebook is 2^-0.5.
+    is_zero = mag < 2.0**-0.5
+    m = jnp.where(is_zero, 0, e.astype(jnp.int32) + 1)
+    sign_bit = (normalized < 0).astype(jnp.int32) << 3
+    codes = jnp.where(m == 0, 0, sign_bit | m).astype(jnp.uint8)
+    return codes, scale
+
+
+def decode_pow2(codes: jax.Array, scale: jax.Array) -> jax.Array:
+    """Decode 4-bit pow2 codes back to float32 values.
+
+    The decode path is multiplication-free in spirit: 2^(m-1) is produced by
+    exponent construction (ldexp), and the per-channel scale is folded into
+    the activation/output path at one multiply per *channel*, not per weight.
+    Here (the reference) we fold it directly for clarity.
+    """
+    codes = jnp.asarray(codes)
+    m = jnp.bitwise_and(codes, 0x7).astype(jnp.int32)
+    sign = jnp.where(jnp.bitwise_and(codes, 0x8) != 0, -1.0, 1.0)
+    mag = jnp.where(m == 0, 0.0, jnp.exp2((m - 1).astype(jnp.float32)))
+    return sign * mag * scale
+
+
+def project_pow2(w: jax.Array, *, channel_axis: int = -1) -> jax.Array:
+    """Project weights onto the nearest pow2-codebook value (round trip)."""
+    codes, scale = pow2_codes(w, channel_axis=channel_axis)
+    return decode_pow2(codes, scale).astype(w.dtype)
+
+
+@jax.custom_vjp
+def _pow2_ste(w: jax.Array):
+    return project_pow2(w)
+
+
+def _pow2_ste_fwd(w):
+    return _pow2_ste(w), None
+
+
+def _pow2_ste_bwd(_, g):
+    return (g,)
+
+
+_pow2_ste.defvjp(_pow2_ste_fwd, _pow2_ste_bwd)
+
+
+def project_pow2_ste(w: jax.Array) -> jax.Array:
+    """Pow2 projection with straight-through gradients (for pow2-aware
+    fine-tuning, the TPU analogue of the paper's post-quantization retrain)."""
+    return _pow2_ste(w)

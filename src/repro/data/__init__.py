@@ -1,0 +1,17 @@
+"""Data pipeline: deterministic synthetic datasets (offline container) with
+sharded host loading and prefetch for the distributed training loop."""
+from repro.data.synthetic import (
+    SyntheticImageDataset,
+    make_image_dataset,
+    synthetic_token_batches,
+    TokenStreamConfig,
+)
+from repro.data.loader import ShardedLoader
+
+__all__ = [
+    "SyntheticImageDataset",
+    "make_image_dataset",
+    "synthetic_token_batches",
+    "TokenStreamConfig",
+    "ShardedLoader",
+]

@@ -1,0 +1,112 @@
+"""Deterministic synthetic datasets.
+
+This container ships no MNIST/CIFAR/SVHN, so the paper-faithful CNN
+experiments train on a *structured* synthetic classification task: each class
+is a smooth random template; samples are template + per-sample deformation +
+noise. The task is (a) learnable by the paper's topologies, (b) hard enough
+that accuracy degrades as bit-width shrinks — which is the property Fig. 3
+measures.
+
+For LM training, ``synthetic_token_batches`` yields an affine-recurrence
+token stream with injected noise: next = (a * prev + b) mod V with
+probability (1-eps), uniform otherwise. The induced conditional entropy gives
+a known loss floor, so training curves have a meaningful target.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticImageDataset:
+    x_train: jax.Array  # (N, H, W, C) float32 in [-1, 1]
+    y_train: jax.Array  # (N,) int32
+    x_test: jax.Array
+    y_test: jax.Array
+    n_classes: int
+
+
+def _smooth_field(key: jax.Array, hw: int, channels: int, cutoff: int = 6):
+    """Low-frequency random field: random spectrum, zeroed high frequencies."""
+    spec = jax.random.normal(key, (hw, hw, channels, 2))
+    spec = spec[..., 0] + 1j * spec[..., 1]
+    fx = jnp.fft.fftfreq(hw) * hw
+    mask = (jnp.abs(fx)[:, None] <= cutoff) & (jnp.abs(fx)[None, :] <= cutoff)
+    spec = spec * mask[..., None]
+    field = jnp.fft.ifft2(spec, axes=(0, 1)).real
+    field = field / (jnp.max(jnp.abs(field), axis=(0, 1), keepdims=True) + 1e-9)
+    return field.astype(jnp.float32)
+
+
+def make_image_dataset(
+    *,
+    hw: int,
+    channels: int,
+    n_classes: int = 10,
+    n_train_per_class: int = 256,
+    n_test_per_class: int = 64,
+    noise: float = 1.3,
+    seed: int = 0,
+) -> SyntheticImageDataset:
+    key = jax.random.PRNGKey(seed)
+    tkey, trkey, tekey = jax.random.split(key, 3)
+    templates = jnp.stack(
+        [_smooth_field(k, hw, channels) for k in jax.random.split(tkey, n_classes)]
+    )  # (n_classes, H, W, C)
+
+    def _make_split(key, n_per_class):
+        n = n_classes * n_per_class
+        y = jnp.tile(jnp.arange(n_classes), n_per_class).astype(jnp.int32)
+        nkey, skey = jax.random.split(key)
+        eps = jax.random.normal(nkey, (n, hw, hw, channels)) * noise
+        # Per-sample random gain in [0.7, 1.3] to prevent trivial matching.
+        gain = jax.random.uniform(skey, (n, 1, 1, 1), minval=0.7, maxval=1.3)
+        x = templates[y] * gain + eps
+        return jnp.clip(x, -2.0, 2.0).astype(jnp.float32), y
+
+    x_train, y_train = _make_split(trkey, n_train_per_class)
+    x_test, y_test = _make_split(tekey, n_test_per_class)
+    return SyntheticImageDataset(x_train, y_train, x_test, y_test, n_classes)
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenStreamConfig:
+    vocab_size: int
+    seq_len: int
+    batch_size: int
+    noise_eps: float = 0.15
+    mult: int = 31  # recurrence multiplier (coprime with typical vocabs)
+    add: int = 7
+
+    @property
+    def loss_floor(self) -> float:
+        """Conditional entropy of the stream in nats (optimal model loss)."""
+        e, v = self.noise_eps, self.vocab_size
+        p_correct = (1 - e) + e / v
+        p_other = e / v
+        return float(
+            -(p_correct * np.log(p_correct) + (v - 1) * p_other * np.log(p_other))
+        )
+
+
+def synthetic_token_batches(
+    cfg: TokenStreamConfig, *, seed: int = 0
+) -> Iterator[dict]:
+    """Infinite iterator of {'tokens': (B, T+1) int32} batches (host-side
+    numpy, to mimic a real host-input pipeline feeding device puts)."""
+    rng = np.random.default_rng(seed)
+    v = cfg.vocab_size
+    while True:
+        start = rng.integers(0, v, size=(cfg.batch_size, 1))
+        toks = [start]
+        for _ in range(cfg.seq_len):
+            nxt = (toks[-1] * cfg.mult + cfg.add) % v
+            flip = rng.random((cfg.batch_size, 1)) < cfg.noise_eps
+            rand = rng.integers(0, v, size=(cfg.batch_size, 1))
+            toks.append(np.where(flip, rand, nxt))
+        yield {"tokens": np.concatenate(toks, axis=1).astype(np.int32)}

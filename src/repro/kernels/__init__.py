@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+- ``pow2_matmul``: weight-only pow2-codebook quantized matmul — the TPU
+  translation of the paper's constant-specialized multipliers (§4.2).
+- ``stream_conv``: line-buffer streaming convolution — the paper's dataflow
+  conv engine [10] with VMEM-resident sliding windows.
+
+Each kernel ships as ``<name>.py`` (pl.pallas_call + BlockSpec),
+``ops.py`` (jit'd public wrapper) and ``ref.py`` (pure-jnp oracle).
+On this CPU container kernels run in interpret mode; on TPU the same
+pallas_call lowers to Mosaic.
+"""

@@ -1,0 +1,4 @@
+from repro.kernels.pow2_matmul.ops import pow2_matmul, quantize_weights
+from repro.kernels.pow2_matmul.ref import pow2_matmul_ref
+
+__all__ = ["pow2_matmul", "quantize_weights", "pow2_matmul_ref"]

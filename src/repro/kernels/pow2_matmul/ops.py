@@ -1,0 +1,80 @@
+"""Public jit'd wrapper for the pow2 matmul: quantization, padding to block
+multiples, and dispatch to the Pallas kernel (or the jnp reference on
+platforms without Pallas support — XLA:CPU compile of the 512-device dry-run
+uses the reference path; the kernel is validated in interpret mode)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant.packing import pack_codes_u4
+from repro.core.quant.pow2 import pow2_codes
+from repro.kernels.pow2_matmul.pow2 import pow2_matmul_pallas
+from repro.kernels.pow2_matmul.ref import pow2_matmul_ref
+
+
+def quantize_weights(w: jax.Array):
+    """(K, N) float weights -> (packed (K, N//2) uint8, scale (N,) f32).
+
+    N must be even (pad the layer width otherwise).
+    """
+    if w.ndim != 2:
+        raise ValueError(f"expected (K, N) weights, got {w.shape}")
+    if w.shape[1] % 2:
+        raise ValueError("N must be even to pack 2 codes/byte")
+    codes, scale = pow2_codes(w, channel_axis=1)  # scale (1, N)
+    return pack_codes_u4(codes), scale.reshape(-1)
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "out_dtype", "backend"),
+)
+def pow2_matmul(
+    x: jax.Array,
+    packed: jax.Array,
+    scale: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    out_dtype=jnp.float32,
+    backend: str = "pallas_interpret",  # pallas | pallas_interpret | ref
+) -> jax.Array:
+    """out[m, n] = sum_k x[m, k] * decode(codes[k, n]) * scale[n].
+
+    Shapes need not be block-aligned; inputs are zero-padded (zero codes
+    decode to 0.0, so padding is exact).
+    """
+    if backend == "ref":
+        return pow2_matmul_ref(x, packed, scale, out_dtype=out_dtype)
+    m, k = x.shape
+    n = packed.shape[1] * 2
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    bn = max(2, bn - (bn % 2))
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(packed, 0, bk), 1, bn // 2)
+    sp = _pad_to(scale, 0, bn)
+    out = pow2_matmul_pallas(
+        xp,
+        wp,
+        sp,
+        block_m=bm,
+        block_n=bn,
+        block_k=bk,
+        out_dtype=out_dtype,
+        interpret=(backend == "pallas_interpret"),
+    )
+    return out[:m, :n]

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the pow2-quantized matmul.
+
+Semantics: ``out = x @ decode(codes) * scale`` where codes are 4-bit
+(sign | magnitude) pow2 codes packed two-per-byte along N, and ``scale`` is
+the per-output-channel float scale. The oracle decodes through the same
+float construction the kernel uses, so kernel-vs-ref comparison is exact
+(up to accumulation order).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant.packing import unpack_codes_u4
+from repro.core.quant.pow2 import decode_pow2
+
+
+def pow2_matmul_ref(
+    x: jax.Array,  # (M, K) float
+    packed: jax.Array,  # (K, N // 2) uint8
+    scale: jax.Array,  # (N,) float32
+    *,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    codes = unpack_codes_u4(packed)  # (K, N)
+    w = decode_pow2(codes, jnp.ones((), jnp.float32))  # unit-scale decode
+    acc = jnp.dot(
+        x.astype(jnp.float32), w, preferred_element_type=jnp.float32
+    )
+    return (acc * scale[None, :]).astype(out_dtype)

@@ -1,0 +1,30 @@
+"""Public wrapper for the fused SSM scan."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+from repro.kernels.ssm_scan.scan import ssm_scan_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "backend"))
+def ssm_scan(
+    x, dt, b, c, a, d_skip, *, block_d: int = 256,
+    backend: str = "pallas_interpret",
+):
+    """Fused Mamba-1 selective scan: y_t = (h_t . C_t) + D*x_t with
+    h_t = exp(dt_t A) h_{t-1} + (dt_t x_t) B_t. States stay in VMEM."""
+    if backend == "ref":
+        return ssm_scan_ref(x, dt, b, c, a, d_skip)
+    di = x.shape[-1]
+    bd = block_d
+    while di % bd:
+        bd //= 2
+    return ssm_scan_pallas(
+        x, dt, b, c, a, d_skip,
+        block_d=max(1, bd),
+        interpret=(backend == "pallas_interpret"),
+    )

@@ -1,0 +1,4 @@
+from repro.kernels.stream_conv.ops import stream_conv2d
+from repro.kernels.stream_conv.ref import stream_conv2d_ref
+
+__all__ = ["stream_conv2d", "stream_conv2d_ref"]

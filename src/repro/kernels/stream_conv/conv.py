@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: streaming line-buffer convolution (paper [10], §5).
+
+The FPGA conv engine keeps (K-1) image lines in registers and slides a KxK
+window one pixel per clock. The TPU adaptation keeps a (K-1)-row **line
+buffer in VMEM scratch** and streams the image row-by-row through the grid:
+
+  grid = (B, H_out): one output row per step. Each step
+    1. loads ONE new input row (the BlockSpec pipeline streams rows
+       HBM -> VMEM, the analogue of the pixel stream),
+    2. assembles the KxK window rows from [line buffer ++ new row],
+    3. computes the output row with K*K shifted row-segment matmuls
+       against the (C, N) tap matrices — the fully-unrolled multiplier
+       array of Fig. 1-c, with the MXU playing the adder tree,
+    4. rotates the line buffer by one row.
+
+The weight tensor is expected as (K*K, C, N) — taps flattened — so each tap
+is one MXU matmul; channels C and features N are the hardware-aligned dims.
+VALID padding, stride 1. The line buffer makes the kernel's HBM traffic
+exactly one read of x and one write of y (no im2col inflation): bytes =
+B*H*W*C + B*H_out*W_out*N elements, matching the FPGA engine's
+zero-intermediate-storage property.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _stream_conv_kernel(x_row_ref, w_ref, o_ref, lbuf_ref, *, k: int, w_out: int):
+    """One grid step: consume input row (r + K - 1), emit output row r."""
+    new_row = x_row_ref[0, 0]  # (W, C) — the row streamed in this step
+
+    # Window rows: lbuf holds rows r .. r+K-2, new_row is row r+K-1.
+    acc = jnp.zeros((w_out, o_ref.shape[-1]), jnp.float32)
+    for ki in range(k):
+        row = lbuf_ref[ki] if ki < k - 1 else new_row
+        for kj in range(k):
+            seg = jax.lax.dynamic_slice_in_dim(row, kj, w_out, axis=0)
+            tap = w_ref[ki * k + kj]  # (C, N)
+            acc += jnp.dot(
+                seg.astype(jnp.float32),
+                tap.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+    o_ref[0, 0] = acc.astype(o_ref.dtype)
+
+    # Rotate the line buffer: drop row r, append row r+K-1.
+    for ki in range(k - 2):
+        lbuf_ref[ki] = lbuf_ref[ki + 1]
+    if k >= 2:
+        lbuf_ref[k - 2] = new_row
+
+
+def _fill_kernel(x_rows_ref, lbuf_ref):
+    """Pre-load the first K-1 rows of image b into the line buffer."""
+    lbuf_ref[...] = x_rows_ref[0]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "block_n", "out_dtype", "interpret")
+)
+def stream_conv2d_pallas(
+    x: jax.Array,  # (B, H, W, C)
+    w_taps: jax.Array,  # (K*K, C, N)
+    *,
+    k: int,
+    out_dtype=jnp.float32,
+    block_n: int = 0,  # unused placeholder for tuning API symmetry
+    interpret: bool = True,
+) -> jax.Array:
+    b, h, wd, c = x.shape
+    kk, c2, n = w_taps.shape
+    if kk != k * k or c2 != c:
+        raise ValueError(f"w_taps {w_taps.shape} inconsistent with k={k}, C={c}")
+    h_out, w_out = h - k + 1, wd - k + 1
+    if h_out <= 0 or w_out <= 0:
+        raise ValueError(f"image {h}x{wd} too small for k={k}")
+
+    kernel = functools.partial(_stream_conv_kernel, k=k, w_out=w_out)
+
+    # Two-phase schedule per image: a fill pass primes the line buffer with
+    # rows [0, K-1), then the stream pass consumes one row per output row.
+    # Phases are fused into one grid by handing the stream pass row
+    # (r + K - 1) and priming the buffer when r == 0 via input_output_aliasing
+    # of a scratch; Pallas TPU scratch persists across grid steps of the same
+    # pallas_call, so the fill runs as the first grid column (r == 0 loads
+    # rows 0..K-2 through a second input spec).
+    def _kernel_with_fill(x_row_ref, x_fill_ref, w_ref, o_ref, lbuf_ref):
+        r = pl.program_id(1)
+
+        @pl.when(r == 0)
+        def _fill():
+            lbuf_ref[...] = x_fill_ref[0]
+
+        kernel(x_row_ref, w_ref, o_ref, lbuf_ref)
+
+    grid = (b, h_out)
+    return pl.pallas_call(
+        _kernel_with_fill,
+        grid=grid,
+        in_specs=[
+            # One input row per step: row (r + K - 1) of image b.
+            pl.BlockSpec(
+                (1, 1, wd, c), lambda bb, r: (bb, r + k - 1, 0, 0)
+            ),
+            # Fill rows [0, K-1) of image b (same block every r; only read
+            # at r == 0).
+            pl.BlockSpec(
+                (1, max(1, k - 1), wd, c), lambda bb, r: (bb, 0, 0, 0)
+            ),
+            pl.BlockSpec((k * k, c, n), lambda bb, r: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, w_out, n), lambda bb, r: (bb, r, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h_out, w_out, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((max(1, k - 1), wd, c), x.dtype)],
+        interpret=interpret,
+    )(
+        x.reshape(b, h, wd, c),
+        x,
+        w_taps,
+    )

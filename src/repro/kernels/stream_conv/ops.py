@@ -1,0 +1,41 @@
+"""Public wrapper for the streaming line-buffer conv2d."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.stream_conv.conv import stream_conv2d_pallas
+from repro.kernels.stream_conv.ref import stream_conv2d_ref
+
+
+@functools.partial(jax.jit, static_argnames=("padding", "backend", "out_dtype"))
+def stream_conv2d(
+    x: jax.Array,  # (B, H, W, C)
+    w: jax.Array,  # (K, K, C, N) HWIO
+    *,
+    padding: str = "VALID",
+    out_dtype=jnp.float32,
+    backend: str = "pallas_interpret",
+) -> jax.Array:
+    """Streaming conv2d, stride 1. SAME pads on the host side (the FPGA
+    engine pads the pixel stream at frame edges)."""
+    k = w.shape[0]
+    if w.shape[1] != k:
+        raise ValueError(f"only square kernels, got {w.shape}")
+    if padding == "SAME":
+        pad = k // 2
+        x = jnp.pad(x, ((0, 0), (pad, k - 1 - pad), (pad, k - 1 - pad), (0, 0)))
+    elif padding != "VALID":
+        raise ValueError(padding)
+    if backend == "ref":
+        return stream_conv2d_ref(x, w).astype(out_dtype)
+    w_taps = w.reshape(k * k, w.shape[2], w.shape[3])
+    return stream_conv2d_pallas(
+        x,
+        w_taps,
+        k=k,
+        out_dtype=out_dtype,
+        interpret=(backend == "pallas_interpret"),
+    )

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the streaming line-buffer convolution: a plain VALID
+conv2d (NHWC x HWIO -> NHWC), stride 1 — the semantics of the paper's
+dataflow conv engine once the stream is re-assembled into a frame."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def stream_conv2d_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (B, H, W, C); w: (K, K, C, N). VALID, stride 1 -> (B, H-K+1, W-K+1, N)."""
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )

@@ -1,0 +1,2 @@
+"""Launch layer: production meshes, sharding rules, jitted train/serve
+steps, and the multi-pod dry-run driver."""

@@ -1,0 +1,358 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (architecture x input-shape x
+# mesh) cell against ShapeDtypeStruct stand-ins, and record memory analysis,
+# cost analysis and the collective schedule for the roofline.
+#
+# MUST be invoked as its own process (the 512 fake host devices are locked in
+# at first jax init — never import this module from tests/benches):
+#
+#     PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b \
+#         --shape train_4k [--multi-pod]
+#     PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+#
+# Results land in results/dryrun/<arch>__<shape>__<mesh>.json and are
+# consumed by benchmarks/roofline.py and EXPERIMENTS.md.
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_arch, list_archs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import cache_shapes, input_specs, params_shapes
+from repro.launch.steps import jit_train_step, make_decode_step, make_prefill_step
+from repro.launch.sharding import (
+    batch_specs,
+    cache_specs,
+    constrain_spec,
+    param_specs,
+)
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS_DIR", "results")
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(?:\((?P<tuple>[^()]*)\)|(?P<single>[a-z0-9]+\[[0-9,]*\]))")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*(?P<shape>\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s]*)\s*(?P<op>[\w\-]+)\((?P<args>.*)\)",
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "tuple": 0,
+}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[128,512]{1,0}' -> bytes. Tuples sum their elements."""
+    total = 0
+    for m in re.finditer(r"([a-z0-9]+)\[([0-9,]*)\]", shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum per-device operand bytes of every collective op in the HLO.
+
+    Builds an instruction-name -> shape map first, then charges each
+    collective its operands' bytes (the data each device contributes).
+    """
+    shapes: dict = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if m:
+            shapes[m.group("name")] = m.group("shape")
+    stats = {op: {"count": 0, "operand_bytes": 0, "result_bytes": 0}
+             for op in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        op = m.group("op")
+        base = None
+        for c in COLLECTIVE_OPS:
+            if op == c or op.startswith(c + "-start") or op == c + "-done":
+                base = c
+                break
+        if base is None:
+            continue
+        if op.endswith("-done"):
+            continue  # avoid double counting async pairs
+        args = m.group("args")
+        operand_names = re.findall(r"%?([\w.\-]+)", args)
+        ob = 0
+        for name in operand_names:
+            if name in shapes:
+                ob += _shape_bytes(shapes[name])
+        stats[base]["count"] += 1
+        stats[base]["operand_bytes"] += ob
+        stats[base]["result_bytes"] += _shape_bytes(m.group("shape"))
+    return stats
+
+
+def _mem_dict(ma) -> dict:
+    keys = (
+        "generated_code_size_in_bytes",
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "alias_size_in_bytes",
+        "temp_size_in_bytes",
+    )
+    return {k: int(getattr(ma, k, 0)) for k in keys}
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             opt=None) -> dict:
+    import dataclasses as _dc
+
+    from repro.launch.optflags import BASELINE
+
+    opt = opt or BASELINE
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    if not cfg.supports_shape(shape):
+        return {
+            "arch": arch, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "opt": opt.name,
+            "status": "skipped",
+            "reason": "full-attention arch; long_500k needs sub-quadratic "
+                      "attention (DESIGN.md §Arch-applicability)",
+        }
+    cfg = _dc.replace(
+        cfg,
+        opt_no_f32_cast_attn=opt.no_f32_cast_attn,
+        opt_ce_remat=opt.ce_remat,
+        opt_bf16_ssm=opt.bf16_ssm,
+        opt_shard_attn_batch=opt.shard_attn_batch,
+        **(
+            {"capacity_factor": opt.capacity_factor}
+            if opt.capacity_factor
+            else {}
+        ),
+    )
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    # Ambient mesh so in-model with_sharding_constraint (attention batch
+    # pinning) can resolve axis names.
+    jax.set_mesh(mesh)
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "opt": opt.name,
+        "status": "ok",
+        "n_devices": mesh.devices.size,
+    }
+    t0 = time.time()
+    serving_fsdp = not opt.tp_serving_params
+    params_sds, params_shardings, _ = params_shapes(
+        cfg, mesh, fsdp=True if shape.kind == "train" else serving_fsdp
+    )
+    inputs = input_specs(cfg, shape, mesh)
+
+    if shape.kind == "train":
+        jitted, opt_sds = jit_train_step(
+            cfg, mesh, params_sds, inputs, microbatches=opt.microbatches
+        )
+        lowered = jitted.lower(params_sds, opt_sds, inputs)
+    elif shape.kind == "prefill":
+        step = make_prefill_step(cfg, shape)
+        _, cache_shardings, c_specs = cache_shapes(
+            cfg, shape, mesh, seq_sharded=opt.seq_sharded_cache
+        )
+        da = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        logit_spec = constrain_spec(
+            P(da, "model"), (shape.global_batch, cfg.vocab_size), mesh
+        )
+        lowered = jax.jit(
+            step,
+            out_shardings=(
+                NamedSharding(mesh, logit_spec),
+                cache_shardings,
+            ),
+        ).lower(params_sds, inputs)
+    else:  # decode / long_decode
+        step = make_decode_step(cfg)
+        cache_sds, cache_shardings, _ = cache_shapes(
+            cfg, shape, mesh, seq_sharded=opt.seq_sharded_cache
+        )
+        da = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        logit_spec = constrain_spec(
+            P(da, "model"), (shape.global_batch, cfg.vocab_size), mesh
+        )
+        lowered = jax.jit(
+            step,
+            out_shardings=(
+                NamedSharding(mesh, logit_spec),
+                cache_shardings,
+            ),
+            donate_argnums=(1,),
+        ).lower(params_sds, cache_sds, inputs["token"], inputs["index"])
+    result["lower_s"] = round(time.time() - t0, 2)
+
+    t1 = time.time()
+    compiled = lowered.compile()
+    result["compile_s"] = round(time.time() - t1, 2)
+
+    ma = compiled.memory_analysis()
+    result["memory"] = _mem_dict(ma)
+    ca = compiled.cost_analysis()
+    # XLA's cost model counts while bodies once (known limitation); kept for
+    # reference only. The roofline uses the trip-count-aware analysis below.
+    result["cost"] = {
+        "flops_per_device": float(ca.get("flops", 0.0)),
+        "bytes_accessed_per_device": float(ca.get("bytes accessed", 0.0)),
+    }
+    hlo = compiled.as_text()
+    from repro.launch.hlo_analysis import analyze_hlo
+
+    analysis = analyze_hlo(hlo)
+    result["analysis"] = {
+        "flops_per_device": analysis.flops,
+        "hbm_bytes_per_device": analysis.hbm_bytes,
+        "collective_bytes_per_device": analysis.collective_bytes,
+        "collective_counts": analysis.collective_counts,
+        "unknown_trip_whiles": analysis.unknown_trip_whiles,
+    }
+    result["collectives"] = parse_collectives(hlo)
+    result["hlo_bytes"] = len(hlo)
+    _save_hlo(arch, shape_name, multi_pod, hlo, opt.name)
+
+    from repro.models.accounting import (
+        active_param_count,
+        model_flops,
+        param_count,
+    )
+
+    result["params"] = param_count(cfg)
+    result["active_params"] = active_param_count(cfg)
+    result["model_flops"] = model_flops(cfg, shape)
+    return result
+
+
+def _named(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P) or x is None,
+    )
+
+
+def cell_path(arch: str, shape_name: str, multi_pod: bool,
+              opt_name: str = "baseline") -> str:
+    mesh = "2x16x16" if multi_pod else "16x16"
+    suffix = "" if opt_name == "baseline" else f"__{opt_name}"
+    return os.path.join(
+        RESULTS_DIR, "dryrun", f"{arch}__{shape_name}__{mesh}{suffix}.json"
+    )
+
+
+def _save_hlo(arch: str, shape_name: str, multi_pod: bool, hlo: str,
+              opt_name: str = "baseline") -> None:
+    """Compressed post-optimization HLO kept next to the JSON so the
+    roofline can be re-derived without recompiling."""
+    import zstandard as zstd
+
+    path = cell_path(arch, shape_name, multi_pod, opt_name).replace(
+        ".json", ".hlo.zst"
+    )
+    with open(path, "wb") as f:
+        f.write(zstd.ZstdCompressor(level=9).compress(hlo.encode()))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs())
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument(
+        "--opt", nargs="*", default=[],
+        help="optimization flags: tp_serving_params seq_sharded_cache "
+             "no_f32_cast_attn ce_remat bf16_ssm mb=<n> cf=<x> | ALL",
+    )
+    args = ap.parse_args()
+
+    from repro.launch.optflags import BASELINE, OPTIMIZED, OptFlags
+
+    if args.opt == ["ALL"]:
+        opt = OPTIMIZED
+    else:
+        kw = {}
+        for o in args.opt:
+            if o.startswith("mb="):
+                kw["microbatches"] = int(o[3:])
+            elif o.startswith("cf="):
+                kw["capacity_factor"] = float(o[3:])
+            else:
+                kw[o] = True
+        opt = OptFlags(**kw) if kw else BASELINE
+
+    cells = []
+    if args.all:
+        for a in list_archs():
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells.append((args.arch, args.shape))
+
+    os.makedirs(os.path.join(RESULTS_DIR, "dryrun"), exist_ok=True)
+    failures = 0
+    for arch, shape_name in cells:
+        path = cell_path(arch, shape_name, args.multi_pod, opt.name)
+        if os.path.exists(path) and not args.force:
+            print(f"[skip cached] {path}")
+            continue
+        print(f"[dryrun] {arch} x {shape_name} "
+              f"({'2x16x16' if args.multi_pod else '16x16'}, {opt.name}) ...",
+              flush=True)
+        try:
+            res = run_cell(arch, shape_name, multi_pod=args.multi_pod,
+                           opt=opt)
+        except Exception as e:  # noqa: BLE001 — record and continue
+            res = {
+                "arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if args.multi_pod else "16x16",
+                "opt": opt.name,
+                "status": "error",
+                "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-4000:],
+            }
+            failures += 1
+        with open(path, "w") as f:
+            json.dump(res, f, indent=2)
+        print(f"  -> {res['status']}"
+              + (f" (lower {res.get('lower_s')}s, compile "
+                 f"{res.get('compile_s')}s)" if res["status"] == "ok" else ""),
+              flush=True)
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

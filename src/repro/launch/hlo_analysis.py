@@ -1,0 +1,513 @@
+"""Trip-count-aware HLO analysis.
+
+XLA's ``cost_analysis()`` counts while-loop bodies ONCE (a known
+limitation), which under-reports scan-over-layers models by ~n_layers x.
+The post-optimization HLO carries ``known_trip_count`` on every counted
+loop, so this module re-derives the three roofline inputs exactly:
+
+  flops            dot/convolution FLOPs, x trip counts, recursing into
+                   fusions and called computations
+  hbm_bytes        fusion-aware: per *top-level* instruction, operand +
+                   result bytes (fusion internals live in registers/VMEM),
+                   x trip counts
+  collective_bytes per collective op, operand shard bytes, x trip counts
+
+All byte counts are per-device (SPMD HLO is the per-partition program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_COMP_START = re.compile(
+    r"^(ENTRY\s+)?%?(?P<name>[\w.\-]+)\s*\(.*->.*\{\s*$"
+)
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*(?P<shape>\([^)]*\)|[\w\[\],]+(?:\{[^}]*\})?)\s*(?P<op>[\w\-]+)\((?P<rest>.*)$"
+)
+
+
+def _shape_elems_bytes(shape_str: str):
+    """Sum elements/bytes over all array shapes in a (possibly tuple) type."""
+    total_b = 0
+    for m in re.finditer(r"([a-z]\d*|pred|bf16|f16|f32|f64|c64|c128)\[([0-9,]*)\]", shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total_b += n * _DTYPE_BYTES[dt]
+    return total_b
+
+
+def _result_elems(shape_str: str) -> int:
+    m = re.search(r"[a-z0-9]+\[([0-9,]*)\]", shape_str)
+    if not m:
+        return 0
+    n = 1
+    if m.group(1):
+        for d in m.group(1).split(","):
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    rest: str  # everything after the opening paren of the operand list
+
+
+def parse_computations(hlo: str) -> dict:
+    comps: dict = {}
+    current: Optional[str] = None
+    entry: Optional[str] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if current is None:
+            m = _COMP_START.match(line.strip())
+            if m and ("->" in line) and line.strip().endswith("{"):
+                current = m.group("name")
+                comps[current] = []
+                if line.strip().startswith("ENTRY"):
+                    entry = current
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        m = _INSTR.match(line)
+        if m:
+            comps[current].append(
+                Instr(m.group("name"), m.group("shape"), m.group("op"),
+                      m.group("rest"))
+            )
+    return {"computations": comps, "entry": entry}
+
+
+def _operand_names(rest: str) -> list:
+    # operands are up to the first "), " or end; names like %foo.1
+    args = rest.split(")")[0]
+    return re.findall(r"%([\w.\-]+)", args)
+
+
+def _attr(rest: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=%?([\w.\-]+)", rest)
+    return m.group(1) if m else None
+
+
+def _trip_count(rest: str) -> int:
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', rest)
+    return int(m.group(1)) if m else 1
+
+
+def _dot_flops(instr: Instr, shapes: dict) -> float:
+    out_elems = _result_elems(instr.shape)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.rest)
+    ops = _operand_names(instr.rest)
+    if not m or not ops:
+        return 2.0 * out_elems
+    lhs_shape = shapes.get(ops[0], "")
+    dims_m = re.search(r"\[([0-9,]*)\]", lhs_shape)
+    if not dims_m:
+        return 2.0 * out_elems
+    dims = [int(d) for d in dims_m.group(1).split(",") if d]
+    contract = 1
+    for idx in (int(i) for i in m.group(1).split(",") if i):
+        if idx < len(dims):
+            contract *= dims[idx]
+    return 2.0 * out_elems * contract
+
+
+def _conv_flops(instr: Instr, shapes: dict) -> float:
+    out_elems = _result_elems(instr.shape)
+    ops = _operand_names(instr.rest)
+    if len(ops) < 2:
+        return 2.0 * out_elems
+    rhs_shape = shapes.get(ops[1], "")
+    dims_m = re.search(r"\[([0-9,]*)\]", rhs_shape)
+    if not dims_m:
+        return 2.0 * out_elems
+    kernel_elems = 1
+    for d in dims_m.group(1).split(","):
+        if d:
+            kernel_elems *= int(d)
+    # kernel contains (spatial x in_features x out_features); per output
+    # element we do spatial*in_features MACs = kernel_elems / out_features.
+    out_feat_m = re.search(r"f=(\d+)", instr.rest) or re.search(
+        r"o=(\d+)", instr.rest
+    )
+    per_out = kernel_elems
+    m2 = re.search(r"dim_labels=\S*->\S*", instr.rest)
+    # Fall back: charge kernel_elems MACs per output element / assume last
+    # kernel dim is out-features.
+    dims = [int(d) for d in dims_m.group(1).split(",") if d]
+    if dims:
+        per_out = kernel_elems // dims[-1]
+    return 2.0 * out_elems * max(1, per_out)
+
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+# Reads of these ops touch only their *result*-sized region of the base
+# operand (slice semantics) — charging the base would overcount stacked
+# scan weights by n_layers and embedding tables by vocab/batch.
+_SLICE_READ_OPS = {"dynamic-slice", "slice", "gather"}
+
+
+def _fusion_bytes(fname, fusion_instr, comps, shapes_per_comp, caller_shapes):
+    """Fusion traffic: per input, the region actually read (slice-size when
+    every use is a slice-like op); internals are registers/VMEM; the root
+    write is the result (or the update region for DUS roots)."""
+    callee_instrs = comps.get(fname, [])
+    cal_sh = shapes_per_comp.get(fname, {})
+    # Map positional parameters -> caller operand full sizes.
+    operand_names = _operand_names(fusion_instr.rest)
+    param_order = [ci.name for ci in callee_instrs if ci.op == "parameter"]
+    # Dtype/layout-transparent aliasing: convert/bitcast/copy/reshape of a
+    # parameter is still "the parameter" for traffic purposes (the CPU
+    # backend wraps bf16 data in f32 round-trips that a bf16-native TPU
+    # doesn't emit).
+    _TRANSPARENT = {"convert", "bitcast", "copy", "reshape"}
+    alias = {p: p for p in param_order}
+    for ci in callee_instrs:
+        if ci.op in _TRANSPARENT:
+            ops = _operand_names(ci.rest)
+            if len(ops) == 1 and ops[0] in alias:
+                alias[ci.name] = alias[ops[0]]
+    # Uses of each param (through aliases) inside the callee.
+    uses: dict = {p: [] for p in param_order}
+    for ci in callee_instrs:
+        if ci.name in alias and ci.op in _TRANSPARENT:
+            continue  # transparent hop, not a real use
+        for o in _operand_names(ci.rest):
+            root = alias.get(o)
+            if root is not None:
+                uses[root].append(ci)
+    total = 0
+    for idx, p in enumerate(param_order):
+        full = _shape_elems_bytes(cal_sh.get(p, ""))
+        if idx < len(operand_names):
+            full = max(
+                full, _shape_elems_bytes(caller_shapes.get(operand_names[idx], ""))
+            ) if full == 0 else full
+        us = uses.get(p, [])
+        # Per-use charging: slice-like reads cost their result; being the
+        # *base* of a dynamic-update-slice costs nothing (in-place); any
+        # other use reads the whole region once.
+        charged_full = False
+        part = 0
+        for u in us:
+            if u.op in _SLICE_READ_OPS:
+                part += _shape_elems_bytes(u.shape)
+            elif u.op == "dynamic-update-slice" and (
+                alias.get(_operand_names(u.rest)[0]) == p
+                if _operand_names(u.rest)
+                else False
+            ):
+                continue
+            else:
+                charged_full = True
+        total += full if charged_full else part
+    # Root write.
+    dus_upd = 0
+    for ci in callee_instrs:
+        if ci.op == "dynamic-update-slice":
+            o = _operand_names(ci.rest)
+            if len(o) > 1:
+                dus_upd += _shape_elems_bytes(cal_sh.get(o[1], ""))
+    if dus_upd:
+        total += dus_upd  # written region
+    else:
+        total += _shape_elems_bytes(fusion_instr.shape)
+    return total
+
+
+@dataclasses.dataclass
+class Analysis:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_counts: dict = dataclasses.field(default_factory=dict)
+    unknown_trip_whiles: int = 0
+
+
+_LAYOUT_ONLY_OPS = {
+    "parameter", "convert", "bitcast", "copy", "transpose", "reshape",
+    "tuple", "get-tuple-element", "constant",
+}
+
+
+def _upcast_and_dus_sets(comps, shapes_per_comp):
+    """Identify (a) bf16->f32 upcast instructions/fusions — XLA:CPU inserts
+    these around every dot because it lacks native bf16 matmul; on the TPU
+    target they don't exist, so they are charged at bf16 size and their
+    consumers read bf16 — and (b) fusions whose root is a dynamic-update-
+    slice of one of their operands — in-place on TPU (buffer aliasing), so
+    they are charged the update slice, not the full buffer."""
+    upcast: dict = {}  # (comp, name) -> bf16 bytes
+    dus_fusions: dict = {}  # (comp, name) -> charged bytes
+
+    def _callee_is_layout_only(callee):
+        return all(i.op in _LAYOUT_ONLY_OPS for i in comps.get(callee, []))
+
+    for cname, instrs in comps.items():
+        sh = shapes_per_comp[cname]
+        for i in instrs:
+            out_b = _shape_elems_bytes(i.shape)
+            if i.op == "convert" and "f32[" in i.shape:
+                ops = _operand_names(i.rest)
+                if ops:
+                    in_b = _shape_elems_bytes(sh.get(ops[0], ""))
+                    if 0 < in_b == out_b // 2:
+                        upcast[(cname, i.name)] = in_b
+            elif i.op == "fusion":
+                callee = _attr(i.rest, "calls")
+                if not callee:
+                    continue
+                callee_instrs = comps.get(callee, [])
+                has_dus = any(
+                    ci.op == "dynamic-update-slice" for ci in callee_instrs
+                )
+                if has_dus:
+                    cal_sh = shapes_per_comp.get(callee, {})
+                    upd = 0
+                    for ci in callee_instrs:
+                        if ci.op == "dynamic-update-slice":
+                            o = _operand_names(ci.rest)
+                            if len(o) > 1:
+                                upd += _shape_elems_bytes(cal_sh.get(o[1], ""))
+                    # read update + write update (+ small index/operand reads)
+                    dus_fusions[(cname, i.name)] = 2 * upd
+                elif (
+                    "f32[" in i.shape
+                    and _callee_is_layout_only(callee)
+                ):
+                    ops = _operand_names(i.rest)
+                    in_b = sum(
+                        _shape_elems_bytes(shapes_per_comp[cname].get(n, ""))
+                        for n in ops
+                    )
+                    if 0 < in_b <= out_b // 2 + 8:
+                        upcast[(cname, i.name)] = in_b
+    return upcast, dus_fusions
+
+
+def analyze_hlo(hlo: str) -> Analysis:
+    parsed = parse_computations(hlo)
+    comps = parsed["computations"]
+    entry = parsed["entry"]
+    shapes_per_comp = {
+        cname: {i.name: i.shape for i in instrs}
+        for cname, instrs in comps.items()
+    }
+    upcast, dus_fusions = _upcast_and_dus_sets(comps, shapes_per_comp)
+    res = Analysis()
+    memo_flops: dict = {}
+
+    def _operand_bytes(cname, sh, name):
+        if (cname, name) in upcast:
+            return upcast[(cname, name)]  # consumer reads bf16 on TPU
+        return _shape_elems_bytes(sh.get(name, ""))
+
+    def comp_flops(cname: str) -> float:
+        """FLOPs of one execution of a computation (recursing into calls,
+        fusions, and whiles x their trip counts)."""
+        if cname in memo_flops:
+            return memo_flops[cname]
+        total = 0.0
+        shapes = shapes_per_comp.get(cname, {})
+        for i in comps.get(cname, []):
+            if i.op == "dot":
+                total += _dot_flops(i, shapes)
+            elif i.op == "convolution":
+                total += _conv_flops(i, shapes)
+            elif i.op == "while":
+                body = _attr(i.rest, "body")
+                if body:
+                    total += _trip_count(i.rest) * comp_flops(body)
+            elif i.op == "fusion":
+                callee = _attr(i.rest, "calls")
+                if callee:
+                    total += comp_flops(callee)
+            elif i.op in ("call", "async-start"):
+                callee = _attr(i.rest, "to_apply") or _attr(i.rest, "calls")
+                if callee and callee in comps:
+                    total += comp_flops(callee)
+            elif i.op == "conditional":
+                branches = re.findall(
+                    r"(?:branch_computations=\{([^}]*)\}|true_computation=%?([\w.\-]+)|false_computation=%?([\w.\-]+))",
+                    i.rest,
+                )
+                names = []
+                for tup in branches:
+                    for t in tup:
+                        if t:
+                            names.extend(re.findall(r"%?([\w.\-]+)", t))
+                if names:
+                    total += max(comp_flops(n) for n in names if n in comps)
+        memo_flops[cname] = total
+        return total
+
+    def walk_bytes(cname: str, mult: float) -> None:
+        """Fusion-aware bytes + collectives, multiplied by loop trips."""
+        shapes = shapes_per_comp.get(cname, {})
+        for i in comps.get(cname, []):
+            if i.op == "while":
+                body = _attr(i.rest, "body")
+                if body:
+                    walk_bytes(body, mult * _trip_count(i.rest))
+                    if _trip_count(i.rest) == 1 and '"known_trip_count"' not in i.rest:
+                        res.unknown_trip_whiles += 1
+                continue
+            if i.op in ("call",):
+                callee = _attr(i.rest, "to_apply") or _attr(i.rest, "calls")
+                if callee and callee in comps:
+                    walk_bytes(callee, mult)
+                continue
+            if i.op == "conditional":
+                continue  # negligible here
+            if i.op in _SKIP_BYTES_OPS:
+                continue
+            operands = _operand_names(i.rest)
+            if (cname, i.name) in upcast:
+                # CPU-only bf16->f32 upcast: on TPU the consumer reads the
+                # bf16 buffer directly; charge one bf16 read, no write.
+                res.hbm_bytes += mult * upcast[(cname, i.name)]
+                continue
+            if i.op == "fusion":
+                callee = _attr(i.rest, "calls")
+                if callee:
+                    res.hbm_bytes += mult * _fusion_bytes(
+                        callee, i, comps, shapes_per_comp, shapes
+                    )
+                continue
+            if i.op in _SLICE_READ_OPS:
+                # Slice reads touch only the result-sized region.
+                res.hbm_bytes += mult * 2 * _shape_elems_bytes(i.shape)
+                continue
+            if i.op == "dynamic-update-slice":
+                # XLA updates in place (buffer aliasing): traffic is the
+                # update slice (read) + the written region, not the base.
+                upd = (
+                    _operand_bytes(cname, shapes, operands[1])
+                    if len(operands) > 1
+                    else 0
+                )
+                res.hbm_bytes += mult * 2 * upd
+                continue
+            if i.op == "scatter":
+                # In-place base; traffic ~ updates read + written + indices.
+                upd = (
+                    _operand_bytes(cname, shapes, operands[2])
+                    if len(operands) > 2
+                    else 0
+                )
+                idxb = (
+                    _operand_bytes(cname, shapes, operands[1])
+                    if len(operands) > 1
+                    else 0
+                )
+                res.hbm_bytes += mult * (2 * upd + idxb)
+                continue
+            ob = sum(_operand_bytes(cname, shapes, n) for n in operands)
+            rb = _shape_elems_bytes(i.shape)
+            res.hbm_bytes += mult * (ob + rb)
+            for c in COLLECTIVE_OPS:
+                if i.op == c or i.op.startswith(c + "-start"):
+                    res.collective_bytes += mult * ob
+                    entry_stats = res.collective_counts.setdefault(
+                        c, {"count": 0.0, "operand_bytes": 0.0}
+                    )
+                    entry_stats["count"] += mult
+                    entry_stats["operand_bytes"] += mult * ob
+                    break
+
+    if entry:
+        res.flops = comp_flops(entry)
+        walk_bytes(entry, 1.0)
+    return res
+
+
+def top_contributors(hlo: str, n: int = 12) -> list:
+    """Ranked (bytes, op, site-name, shape) HBM-traffic contributors, using
+    the same charging rules as :func:`analyze_hlo` — the dry-run 'profile'
+    the §Perf loop iterates on."""
+    parsed = parse_computations(hlo)
+    comps = parsed["computations"]
+    entry = parsed["entry"]
+    shapes_per_comp = {
+        cname: {i.name: i.shape for i in instrs}
+        for cname, instrs in comps.items()
+    }
+    upcast, _ = _upcast_and_dus_sets(comps, shapes_per_comp)
+    contrib: dict = {}
+
+    def walk(cname, mult):
+        sh = shapes_per_comp.get(cname, {})
+        for i in comps.get(cname, []):
+            if i.op == "while":
+                body = _attr(i.rest, "body")
+                if body:
+                    walk(body, mult * _trip_count(i.rest))
+                continue
+            if i.op in ("call",):
+                callee = _attr(i.rest, "to_apply") or _attr(i.rest, "calls")
+                if callee and callee in comps:
+                    walk(callee, mult)
+                continue
+            if i.op in _SKIP_BYTES_OPS or i.op == "conditional":
+                continue
+            operands = _operand_names(i.rest)
+            if (cname, i.name) in upcast:
+                b = upcast[(cname, i.name)]
+            elif i.op == "fusion":
+                callee = _attr(i.rest, "calls")
+                b = (
+                    _fusion_bytes(callee, i, comps, shapes_per_comp, sh)
+                    if callee
+                    else 0
+                )
+            elif i.op in _SLICE_READ_OPS:
+                b = 2 * _shape_elems_bytes(i.shape)
+            elif i.op == "dynamic-update-slice":
+                b = (
+                    2 * _shape_elems_bytes(sh.get(operands[1], ""))
+                    if len(operands) > 1
+                    else 0
+                )
+            else:
+                b = sum(
+                    _shape_elems_bytes(sh.get(nm, "")) for nm in operands
+                ) + _shape_elems_bytes(i.shape)
+            key = (i.op, i.name.rsplit(".", 1)[0], i.shape.split("{")[0])
+            contrib[key] = contrib.get(key, 0) + mult * b
+
+    if entry:
+        walk(entry, 1.0)
+    ranked = sorted(contrib.items(), key=lambda kv: -kv[1])[:n]
+    return [
+        {"bytes": v, "op": k[0], "site": k[1], "shape": k[2]}
+        for k, v in ranked
+    ]

@@ -1,0 +1,46 @@
+"""Re-derive the analysis fields of dry-run JSONs from the saved
+(compressed) HLO — no recompilation. Run after analyzer improvements:
+
+    PYTHONPATH=src python -m repro.launch.reanalyze
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import zstandard as zstd
+
+from repro.launch.hlo_analysis import analyze_hlo
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS_DIR", "results")
+
+
+def reanalyze_all() -> int:
+    n = 0
+    for jpath in sorted(glob.glob(os.path.join(RESULTS_DIR, "dryrun", "*.json"))):
+        hpath = jpath.replace(".json", ".hlo.zst")
+        if not os.path.exists(hpath):
+            continue
+        with open(jpath) as f:
+            cell = json.load(f)
+        if cell.get("status") != "ok":
+            continue
+        with open(hpath, "rb") as f:
+            hlo = zstd.ZstdDecompressor().decompress(f.read()).decode()
+        a = analyze_hlo(hlo)
+        cell["analysis"] = {
+            "flops_per_device": a.flops,
+            "hbm_bytes_per_device": a.hbm_bytes,
+            "collective_bytes_per_device": a.collective_bytes,
+            "collective_counts": a.collective_counts,
+            "unknown_trip_whiles": a.unknown_trip_whiles,
+        }
+        with open(jpath, "w") as f:
+            json.dump(cell, f, indent=2)
+        n += 1
+    return n
+
+
+if __name__ == "__main__":
+    print(f"re-analyzed {reanalyze_all()} cells")

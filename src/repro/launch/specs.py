@@ -1,0 +1,102 @@
+"""ShapeDtypeStruct stand-ins for every model input: the dry-run lowers
+against these (weak-type-correct, shardable, no device allocation)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.launch.sharding import (
+    batch_specs,
+    cache_specs,
+    constrain_spec,
+    param_specs,
+)
+
+
+def _sds(shape, dtype, mesh=None, spec=None):
+    if mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    spec = constrain_spec(spec, shape, mesh)
+    return jax.ShapeDtypeStruct(
+        shape, dtype, sharding=NamedSharding(mesh, spec)
+    )
+
+
+def _daxes(mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, mesh) -> dict:
+    """Model inputs for one step of the given shape, as sharded
+    ShapeDtypeStructs.
+
+    train/prefill: {'tokens': (B, S[+1])} (+ modality-stub embeddings).
+    decode: {'token': (B, 1), 'index': scalar} — the cache is produced by
+    ``cache_shapes`` separately.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    da = _daxes(mesh)
+    dt = jnp.dtype(cfg.dtype)
+    out: dict = {}
+    if shape.kind == "train":
+        out["tokens"] = _sds((b, s + 1), jnp.int32, mesh, P(da, None))
+    elif shape.kind == "prefill":
+        out["tokens"] = _sds((b, s), jnp.int32, mesh, P(da, None))
+    else:  # decode / long_decode
+        out["token"] = _sds((b, 1), jnp.int32, mesh, P(da, None))
+        out["index"] = _sds((), jnp.int32, mesh, P())
+    if cfg.family == "vlm" and shape.kind in ("train", "prefill"):
+        out["prefix_embeds"] = _sds(
+            (b, cfg.n_prefix_tokens, cfg.d_model), dt, mesh, P(da, None, None)
+        )
+    if cfg.family == "encdec" and shape.kind in ("train", "prefill"):
+        out["encoder_frames"] = _sds(
+            (b, cfg.encoder_seq, cfg.d_model), dt, mesh, P(da, None, None)
+        )
+    return out
+
+
+def params_shapes(cfg: ArchConfig, mesh, *, fsdp: bool = True):
+    """(ShapeDtypeStruct param tree, matching NamedSharding tree)."""
+    from repro.models.transformer import init_params
+
+    shapes = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+    specs = param_specs(shapes, mesh, fsdp=fsdp)
+    shardings = jax.tree_util.tree_map(
+        lambda sp: NamedSharding(mesh, sp), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    sds = jax.tree_util.tree_map(
+        lambda sh, sharding: jax.ShapeDtypeStruct(
+            sh.shape, sh.dtype, sharding=sharding
+        ),
+        shapes,
+        shardings,
+    )
+    return sds, shardings, specs
+
+
+def cache_shapes(cfg: ArchConfig, shape: ShapeConfig, mesh, *,
+                 seq_sharded: bool = False):
+    """(ShapeDtypeStruct cache tree, NamedSharding tree) for decode."""
+    from repro.models.transformer import init_stack_cache
+
+    b, s = shape.global_batch, shape.seq_len
+    shapes = jax.eval_shape(
+        lambda: init_stack_cache(cfg, cfg.n_layers, b, s)
+    )
+    specs = cache_specs(shapes, mesh, cfg, seq_sharded=seq_sharded)
+    shardings = jax.tree_util.tree_map(
+        lambda sp: NamedSharding(mesh, sp), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    sds = jax.tree_util.tree_map(
+        lambda sh, sharding: jax.ShapeDtypeStruct(
+            sh.shape, sh.dtype, sharding=sharding
+        ),
+        shapes,
+        shardings,
+    )
+    return sds, shardings, specs

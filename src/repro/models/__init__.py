@@ -1,0 +1,2 @@
+"""Model definitions: the paper's CNN substrate and the assigned LM-family
+architectures (dense/GQA transformers, MoE, SSM, hybrid, enc-dec, VLM)."""

@@ -1,0 +1,115 @@
+"""Parameter / FLOP accounting for the roofline analysis.
+
+MODEL_FLOPS conventions (EXPERIMENTS.md §Roofline):
+  train    : 6 * N_active * D   (fwd 2ND + bwd 4ND)
+  prefill  : 2 * N_active * D
+  decode   : 2 * N_active * B   (one token per sequence) + attention reads
+The ratio MODEL_FLOPS / HLO_FLOPs then measures how much compiled compute
+is "useful" (catches remat recompute, capacity over-provisioning, masked
+attention waste).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+
+def param_count(cfg: ArchConfig) -> int:
+    """Exact total parameter count (eval_shape over the real initializer)."""
+    import math
+
+    from repro.models.transformer import init_params
+
+    shapes = jax.eval_shape(
+        lambda key: init_params(key, cfg), jax.random.PRNGKey(0)
+    )
+    return sum(
+        math.prod(l.shape) for l in jax.tree_util.tree_leaves(shapes)
+    )
+
+
+def _expert_params_per_moe_layer(cfg: ArchConfig) -> int:
+    # Per-expert SwiGLU: 3 * d * moe_d_ff.
+    return 3 * cfg.d_model * cfg.moe_d_ff
+
+
+def _n_moe_layers(cfg: ArchConfig) -> int:
+    if not cfg.n_experts:
+        return 0
+    return sum(1 for i in range(cfg.n_layers)
+               if cfg.block_pattern[i % len(cfg.block_pattern)] == "attn")
+
+
+def active_param_count(cfg: ArchConfig) -> int:
+    """Parameters touched per token: total minus the (E - top_k) unused
+    experts per MoE layer."""
+    total = param_count(cfg)
+    if not cfg.n_experts:
+        return total
+    unused = (cfg.n_experts - cfg.top_k) * _expert_params_per_moe_layer(cfg)
+    return total - unused * _n_moe_layers(cfg)
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """The 'useful work' FLOP count for one step of the given shape."""
+    n_active = active_param_count(cfg)
+    # Embedding + unembedding are gathers/matmuls already inside N; the
+    # dominant correction is attention score/value FLOPs, added explicitly.
+    if shape.kind == "train":
+        d_tokens = shape.seq_len * shape.global_batch
+        base = 6.0 * n_active * d_tokens
+        attn = 3.0 * _attention_flops(cfg, shape.seq_len, shape.global_batch)
+        return base + attn
+    if shape.kind == "prefill":
+        d_tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n_active * d_tokens + _attention_flops(
+            cfg, shape.seq_len, shape.global_batch
+        )
+    # decode: one token per sequence, reading a seq_len-deep cache.
+    base = 2.0 * n_active * shape.global_batch
+    attn = _decode_attention_flops(cfg, shape.seq_len, shape.global_batch)
+    return base + attn
+
+
+def _visible_kv(cfg: ArchConfig, kind: str, s: int) -> float:
+    if kind == "local":
+        return min(cfg.window, s)
+    if kind == "chunked":
+        return min(cfg.chunk, s)
+    return s
+
+
+def _attention_flops(cfg: ArchConfig, s: int, b: int) -> float:
+    """Exact causal/windowed score+value FLOPs across layers (fwd)."""
+    total = 0.0
+    hd = cfg.hd
+    for i in range(cfg.n_layers):
+        kind_b = cfg.block_pattern[i % len(cfg.block_pattern)]
+        if kind_b != "attn":
+            continue
+        kind_a = cfg.attn_kind_for_layer(i % len(cfg.block_pattern))
+        w = _visible_kv(cfg, kind_a, s)
+        # Average visible kv per query ~ w/2 for causal-limited windows.
+        avg = (w + 1) / 2 if kind_a != "full" or True else w
+        total += 4.0 * b * s * avg * cfg.n_heads * hd  # QK^T + PV
+    return total
+
+
+def _decode_attention_flops(cfg: ArchConfig, s: int, b: int) -> float:
+    total = 0.0
+    hd = cfg.hd
+    for i in range(cfg.n_layers):
+        kind_b = cfg.block_pattern[i % len(cfg.block_pattern)]
+        if kind_b != "attn":
+            continue
+        kind_a = cfg.attn_kind_for_layer(i % len(cfg.block_pattern))
+        w = _visible_kv(cfg, kind_a, s)
+        total += 4.0 * b * w * cfg.n_heads * hd
+    return total
+
+
+def param_bytes(cfg: ArchConfig) -> int:
+    bytes_per = jnp.dtype(cfg.dtype).itemsize
+    return param_count(cfg) * bytes_per

@@ -1,0 +1,218 @@
+"""CNN substrate in pure JAX: the paper's three benchmark networks.
+
+Topologies (paper Table 1):
+
+  LeNet5   : 28x28x1  -> conv(20,5) mpool tanh -> conv(50,5) mpool tanh -> FC
+  Cifar10  : 32x32x3  -> conv(32,5) mpool tanh -> conv(32,5) mpool tanh
+                       -> conv(64,5) mpool tanh -> FC
+  SVHN     : same topology as Cifar10 (different learned kernel values).
+
+LeNet5 uses VALID convolutions (Caffe's original LeNet), the CIFAR10/SVHN
+topology uses SAME padding (Caffe's cifar10_quick), which reproduces the
+paper's workload numbers exactly: 3.8 Mop (LeNet5 feature extractor) and
+24.6 Mop (Cifar10/SVHN feature extractor).
+
+Everything is functional: ``init_cnn`` builds a param pytree, ``cnn_apply``
+runs the forward pass. Convolutions here are the *reference* path
+(lax.conv_general_dilated); the Pallas streaming line-buffer kernel in
+``repro.kernels.stream_conv`` implements the same op the DHM way.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant.fixed_point import (
+    FixedPointSpec,
+    fake_quant_dynamic,
+    fake_quant_ste,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvLayerSpec:
+    """One conv+mpool+act stage (a row of paper Table 1)."""
+
+    n_out: int  # N: output feature maps
+    kernel: int  # K
+    padding: str = "VALID"  # VALID (LeNet5) or SAME (Cifar10/SVHN)
+    pool: int = 2  # mpool window/stride (0 = no pool)
+    act: str = "tanh"
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNTopology:
+    name: str
+    input_hw: int
+    input_channels: int
+    conv_layers: tuple
+    fc_dims: tuple  # hidden FC dims of the classifier head
+    n_classes: int
+
+    def conv_shapes(self):
+        """Per-layer (C_in, N_out, K, H_out, W_out) after conv (pre-pool)."""
+        h = self.input_hw
+        c = self.input_channels
+        out = []
+        for spec in self.conv_layers:
+            h_conv = h if spec.padding == "SAME" else h - spec.kernel + 1
+            out.append((c, spec.n_out, spec.kernel, h_conv, h_conv))
+            h = h_conv // spec.pool if spec.pool else h_conv
+            c = spec.n_out
+        return out
+
+    def feature_extractor_macs(self) -> int:
+        """MACs of the conv stack for one input frame."""
+        return sum(c * n * k * k * h * w for (c, n, k, h, w) in self.conv_shapes())
+
+    def feature_extractor_ops(self) -> int:
+        """Ops (1 MAC = 2 ops) — the paper's 'Workload' column in Table 4."""
+        return 2 * self.feature_extractor_macs()
+
+    def n_multipliers(self) -> int:
+        """Multipliers a full DHM instantiation needs: N*C*K*K per layer."""
+        return sum(c * n * k * k for (c, n, k, _, _) in self.conv_shapes())
+
+
+LENET5 = CNNTopology(
+    name="lenet5",
+    input_hw=28,
+    input_channels=1,
+    conv_layers=(
+        ConvLayerSpec(n_out=20, kernel=5, padding="VALID"),
+        ConvLayerSpec(n_out=50, kernel=5, padding="VALID"),
+    ),
+    fc_dims=(500,),
+    n_classes=10,
+)
+
+CIFAR10 = CNNTopology(
+    name="cifar10",
+    input_hw=32,
+    input_channels=3,
+    conv_layers=(
+        ConvLayerSpec(n_out=32, kernel=5, padding="SAME"),
+        ConvLayerSpec(n_out=32, kernel=5, padding="SAME"),
+        ConvLayerSpec(n_out=64, kernel=5, padding="SAME"),
+    ),
+    fc_dims=(64,),
+    n_classes=10,
+)
+
+SVHN = dataclasses.replace(CIFAR10, name="svhn")
+
+PAPER_TOPOLOGIES = {"lenet5": LENET5, "cifar10": CIFAR10, "svhn": SVHN}
+
+
+def _act(name: str) -> Callable:
+    return {"tanh": jnp.tanh, "relu": jax.nn.relu, "none": lambda x: x}[name]
+
+
+def init_cnn(key: jax.Array, topo: CNNTopology, dtype=jnp.float32) -> dict:
+    """Glorot-init parameters for a topology. Layout:
+    conv kernels HWIO (K, K, C, N); FC weights (in, out)."""
+    params: dict = {"conv": [], "fc": []}
+    h = topo.input_hw
+    c = topo.input_channels
+    for spec in topo.conv_layers:
+        key, wk, bk = jax.random.split(key, 3)
+        fan_in = spec.kernel * spec.kernel * c
+        w = jax.random.normal(wk, (spec.kernel, spec.kernel, c, spec.n_out), dtype)
+        w = w * jnp.sqrt(2.0 / fan_in)
+        b = jnp.zeros((spec.n_out,), dtype)
+        params["conv"].append({"w": w, "b": b})
+        h_conv = h if spec.padding == "SAME" else h - spec.kernel + 1
+        h = h_conv // spec.pool if spec.pool else h_conv
+        c = spec.n_out
+    flat = h * h * c
+    dims = (flat,) + tuple(topo.fc_dims) + (topo.n_classes,)
+    for d_in, d_out in zip(dims[:-1], dims[1:]):
+        key, wk = jax.random.split(key)
+        w = jax.random.normal(wk, (d_in, d_out), dtype) * jnp.sqrt(2.0 / d_in)
+        params["fc"].append({"w": w, "b": jnp.zeros((d_out,), dtype)})
+    return params
+
+
+def _maxpool(x: jax.Array, window: int) -> jax.Array:
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, window, window, 1),
+        window_strides=(1, window, window, 1),
+        padding="VALID",
+    )
+
+
+def quantize_cnn_params(params: dict, bits: int) -> dict:
+    """Fake-quantize all parameters with per-tensor dynamic power-of-two
+    scales (trace-compatible, STE gradients)."""
+    return jax.tree_util.tree_map(lambda p: fake_quant_dynamic(p, bits), params)
+
+
+def export_cnn_specs(params: dict, bits: int) -> dict:
+    """Static per-tensor FixedPointSpec tree for a *trained* model (the
+    offline Q-format the paper's synthesis flow consumes)."""
+    return jax.tree_util.tree_map(
+        lambda p: FixedPointSpec.for_tensor(p, bits),
+        params,
+        is_leaf=lambda x: isinstance(x, jnp.ndarray),
+    )
+
+
+def cnn_apply(
+    params: dict,
+    topo: CNNTopology,
+    x: jax.Array,
+    *,
+    weight_bits: int | None = None,
+    act_bits: int | None = None,
+    pow2_weights: bool = False,
+) -> jax.Array:
+    """Forward pass. x: (B, H, W, C) NHWC. Returns logits (B, n_classes).
+
+    ``weight_bits`` enables fixed-point fake-quant of all parameters (QAT via
+    STE); ``act_bits`` additionally quantizes the inter-layer feature streams
+    — the paper quantizes both the parameters and the pixel/feature flow.
+    ``pow2_weights`` projects every weight onto the {0, ±2^k} codebook with
+    STE (beyond-paper: 100%-multiplierless QAT).
+    """
+    if pow2_weights:
+        from repro.core.quant.pow2 import project_pow2_ste
+
+        params = jax.tree_util.tree_map(
+            lambda p: project_pow2_ste(p) if p.ndim > 1 else p, params
+        )
+    if weight_bits is not None:
+        params = quantize_cnn_params(params, weight_bits)
+
+    def maybe_qact(h):
+        if act_bits is None:
+            return h
+        spec = FixedPointSpec(bits=act_bits, frac_bits=act_bits - 2)
+        return fake_quant_ste(h, spec)
+
+    h = x
+    for spec, p in zip(topo.conv_layers, params["conv"]):
+        h = jax.lax.conv_general_dilated(
+            h,
+            p["w"],
+            window_strides=(1, 1),
+            padding=spec.padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        h = h + p["b"]
+        if spec.pool:
+            h = _maxpool(h, spec.pool)
+        h = _act(spec.act)(h)
+        h = maybe_qact(h)
+    h = h.reshape(h.shape[0], -1)
+    for i, p in enumerate(params["fc"]):
+        h = h @ p["w"] + p["b"]
+        if i < len(params["fc"]) - 1:
+            h = jnp.tanh(h)
+            h = maybe_qact(h)
+    return h

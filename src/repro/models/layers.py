@@ -1,0 +1,169 @@
+"""Core NN layers (functional, pytree params): norms, linear (with optional
+pow2 weight-only quantization — the paper's tactic applied to LM serving),
+rotary embeddings, gated MLPs, embeddings with chunked-vocab logits."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant.pow2 import decode_pow2, project_pow2_ste
+
+# ---------------------------------------------------------------------------
+# Initialization
+
+
+def he_init(key, shape, dtype, fan_in=None):
+    fan_in = fan_in or shape[0]
+    return (jax.random.normal(key, shape) * jnp.sqrt(2.0 / fan_in)).astype(dtype)
+
+
+def xavier_init(key, shape, dtype):
+    fan_in, fan_out = shape[0], shape[-1]
+    s = jnp.sqrt(2.0 / (fan_in + fan_out))
+    return (jax.random.normal(key, shape) * s).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+
+
+def rms_norm(x, weight, *, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x, weight, bias, *, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(
+        dtype
+    )
+
+
+def apply_norm(x, p: dict, kind: str):
+    if kind == "rmsnorm":
+        return rms_norm(x, p["scale"])
+    if kind == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"])
+    raise ValueError(kind)
+
+
+def init_norm(d: int, kind: str, dtype=jnp.float32) -> dict:
+    if kind == "rmsnorm":
+        return {"scale": jnp.zeros((d,), dtype)}
+    if kind == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Linear — supports three weight modes:
+#   dense        : w (d_in, d_out)
+#   pow2_qat     : dense weights, pow2-projected with STE on the fly
+#                  (training toward the constant-specialized deployment)
+#   pow2_packed  : w stored as 4-bit codes + per-channel scale (serving);
+#                  decoded in-graph (multiplication-free decode; on TPU the
+#                  Pallas kernel repro.kernels.pow2_matmul fuses this)
+
+
+def linear(x, p: dict, *, quant: Optional[str] = None):
+    if "codes" in p:  # pow2_packed
+        from repro.core.quant.packing import unpack_codes_u4
+
+        w = decode_pow2(unpack_codes_u4(p["codes"]), p["scale"]).astype(x.dtype)
+    elif quant == "pow2_qat":
+        w = project_pow2_ste(p["w"])
+    else:
+        w = p["w"]
+    out = jnp.einsum("...k,kn->...n", x, w)
+    if "b" in p:
+        out = out + p["b"]
+    return out
+
+
+def init_linear(key, d_in: int, d_out: int, *, bias: bool = False, dtype=jnp.float32):
+    p = {"w": xavier_init(key, (d_in, d_out), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def pack_linear_pow2(p: dict) -> dict:
+    """Convert a dense linear param dict to packed pow2 serving format."""
+    from repro.core.quant.packing import pack_codes_u4
+    from repro.core.quant.pow2 import pow2_codes
+
+    codes, scale = pow2_codes(p["w"], channel_axis=1)
+    out = {"codes": pack_codes_u4(codes), "scale": scale.reshape(-1)}
+    if "b" in p:
+        out["b"] = p["b"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+
+
+def rope_frequencies(head_dim: int, theta: float = 10_000.0):
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x, positions, *, theta: float = 10_000.0):
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_frequencies(dh, theta)  # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, Dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLPs
+
+
+def mlp(x, p: dict, *, act: str = "silu", quant=None):
+    """SwiGLU/GeGLU/plain-GELU feed-forward."""
+    if act in ("silu", "gelu_glu"):
+        gate = linear(x, p["gate"], quant=quant)
+        up = linear(x, p["up"], quant=quant)
+        g = jax.nn.silu(gate) if act == "silu" else jax.nn.gelu(gate)
+        return linear(g * up, p["down"], quant=quant)
+    if act == "gelu":  # plain 2-layer (whisper)
+        h = jax.nn.gelu(linear(x, p["up"], quant=quant))
+        return linear(h, p["down"], quant=quant)
+    raise ValueError(act)
+
+
+def init_mlp(key, d: int, d_ff: int, *, act: str = "silu", bias: bool = False,
+             dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if act in ("silu", "gelu_glu"):
+        return {
+            "gate": init_linear(k1, d, d_ff, bias=bias, dtype=dtype),
+            "up": init_linear(k2, d, d_ff, bias=bias, dtype=dtype),
+            "down": init_linear(k3, d_ff, d, bias=bias, dtype=dtype),
+        }
+    if act == "gelu":
+        return {
+            "up": init_linear(k1, d, d_ff, bias=bias, dtype=dtype),
+            "down": init_linear(k2, d_ff, d, bias=bias, dtype=dtype),
+        }
+    raise ValueError(act)

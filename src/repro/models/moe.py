@@ -1,0 +1,127 @@
+"""Mixture-of-Experts FFN: token-choice top-k routing with per-group
+capacity (GShard/Switch semantics), gather-based dispatch.
+
+Dispatch avoids the classic (tokens, experts, capacity) one-hot einsum —
+whose memory blows up at production token counts — and instead builds an
+(E, C) token-index table per routing group with a cumsum + scatter, then
+gathers. Groups are the batch rows (each sequence routes independently),
+so no cross-shard cumsum is needed: the same group-local trick GShard uses.
+
+Experts are sharded over the ``model`` ("expert-parallel") mesh axis by the
+launch layer; the (B, E, C, d) dispatch tensors shard over both batch and
+expert axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import xavier_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    d_model: int
+    n_experts: int
+    top_k: int
+    d_ff: int  # per-expert hidden dim
+    capacity_factor: float = 1.25
+    shared_d_ff: int = 0  # optional always-on shared expert (llama4)
+    norm_topk: bool = True  # renormalize top-k gate weights (qwen3)
+
+    def capacity(self, tokens_per_group: int) -> int:
+        c = int(tokens_per_group * self.top_k * self.capacity_factor
+                / self.n_experts)
+        return max(self.top_k, min(c, tokens_per_group))
+
+
+def init_moe(key, spec: MoESpec, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 7)
+    e, d, f = spec.n_experts, spec.d_model, spec.d_ff
+    p = {
+        "router": xavier_init(ks[0], (d, e), jnp.float32),
+        "w_gate": xavier_init(ks[1], (e, d, f), dtype),
+        "w_up": xavier_init(ks[2], (e, d, f), dtype),
+        "w_down": xavier_init(ks[3], (e, f, d), dtype),
+    }
+    if spec.shared_d_ff:
+        p["shared"] = {
+            "gate": {"w": xavier_init(ks[4], (d, spec.shared_d_ff), dtype)},
+            "up": {"w": xavier_init(ks[5], (d, spec.shared_d_ff), dtype)},
+            "down": {"w": xavier_init(ks[6], (spec.shared_d_ff, d), dtype)},
+        }
+    return p
+
+
+def _route_group(x, p, spec: MoESpec):
+    """Route one group. x: (T, d). Returns (y (T, d), aux_loss scalar)."""
+    t, d = x.shape
+    e, k = spec.n_experts, spec.top_k
+    c = spec.capacity(t)
+
+    logits = (x.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)  # (T, k)
+    if spec.norm_topk:
+        gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # Position of each (token, slot) within its expert, in token order.
+    onehot = jax.nn.one_hot(expert_ids, e, dtype=jnp.int32)  # (T, k, E)
+    flat = onehot.reshape(t * k, e)
+    pos = jnp.cumsum(flat, axis=0) - 1  # (T*k, E)
+    pos_in_e = jnp.sum(pos * flat, axis=-1)  # (T*k,)
+    flat_e = expert_ids.reshape(t * k)
+    keep = pos_in_e < c
+
+    # (E, C) token-index table; -1 = empty slot.
+    dest = flat_e * c + jnp.where(keep, pos_in_e, 0)
+    token_idx = jnp.repeat(jnp.arange(t), k)
+    table = jnp.full((e * c,), -1, jnp.int32)
+    table = table.at[dest].set(jnp.where(keep, token_idx, -1), mode="drop")
+    table = table.reshape(e, c)
+    slot_ok = table >= 0
+
+    gathered = jnp.where(
+        slot_ok[..., None], x[jnp.maximum(table, 0)], 0.0
+    )  # (E, C, d)
+
+    # Expert FFN (SwiGLU), batched over experts.
+    h_g = jnp.einsum("ecd,edf->ecf", gathered, p["w_gate"])
+    h_u = jnp.einsum("ecd,edf->ecf", gathered, p["w_up"])
+    h = jax.nn.silu(h_g) * h_u
+    y_e = jnp.einsum("ecf,efd->ecd", h, p["w_down"])  # (E, C, d)
+
+    # Combine: scatter each slot's output back, weighted by its gate value.
+    slot_gate = jnp.zeros((e * c,), jnp.float32)
+    slot_gate = slot_gate.at[dest].set(
+        jnp.where(keep, gate_vals.reshape(t * k), 0.0), mode="drop"
+    )
+    y_flat = (y_e.reshape(e * c, d).astype(jnp.float32)
+              * slot_gate[:, None])
+    out = jnp.zeros((t, d), jnp.float32)
+    out = out.at[jnp.maximum(table.reshape(-1), 0)].add(
+        jnp.where(slot_ok.reshape(-1)[:, None], y_flat, 0.0), mode="drop"
+    )
+
+    # Switch load-balancing aux loss: E * sum_e f_e * P_e.
+    f_e = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_ids, e, dtype=jnp.float32), axis=1),
+        axis=0,
+    )  # fraction routed per expert (x k)
+    p_e = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum((f_e / k) * p_e)
+    return out.astype(x.dtype), aux
+
+
+def moe_apply(p: dict, spec: MoESpec, x: jax.Array):
+    """x: (B, S, d) -> (y (B, S, d), aux_loss scalar). Routing groups are
+    the batch rows."""
+    y, aux = jax.vmap(lambda xs: _route_group(xs, p, spec))(x)
+    if spec.shared_d_ff:
+        from repro.models.layers import mlp
+
+        y = y + mlp(x, p["shared"], act="silu")
+    return y, jnp.mean(aux)

@@ -1,0 +1,219 @@
+"""State-space / linear-recurrence mixers: Mamba-1 (falcon-mamba) and
+RG-LRU (recurrentgemma / Griffin).
+
+Both are diagonal linear recurrences  h_t = a_t * h_{t-1} + b_t  computed
+with a **chunked associative scan**: ``associative_scan`` inside fixed-size
+chunks (parallel, TPU-friendly) and a ``lax.scan`` carrying the boundary
+state across chunks — so the full (B, S, d_inner, N) state tensor never
+materializes, only (B, chunk, d_inner, N) per step. Decode is the O(1)
+single-step recurrence with carried state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_linear, linear
+
+
+# ---------------------------------------------------------------------------
+# Chunked diagonal linear recurrence
+
+
+def _combine(left, right):
+    a1, b1 = left
+    a2, b2 = right
+    return a1 * a2, a2 * b1 + b2
+
+
+def chunked_linear_recurrence(a, b, h0, *, chunk: int = 256):
+    """h_t = a_t * h_{t-1} + b_t along axis 1.
+
+    a, b: (B, S, ...); h0: (B, ...). Returns (all h (B, S, ...), final h).
+    """
+    bsz, s = a.shape[0], a.shape[1]
+    c = min(chunk, s)
+    pad = (-s) % c
+    if pad:
+        a = jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2),
+                    constant_values=1.0)
+        b = jnp.pad(b, [(0, 0), (0, pad)] + [(0, 0)] * (b.ndim - 2))
+    n_chunks = a.shape[1] // c
+    a_c = a.reshape((bsz, n_chunks, c) + a.shape[2:]).swapaxes(0, 1)
+    b_c = b.reshape((bsz, n_chunks, c) + b.shape[2:]).swapaxes(0, 1)
+
+    def step(h, inp):
+        a_blk, b_blk = inp  # (B, c, ...)
+        # Fold carry into the first element: b'_0 = a_0 * h + b_0.
+        b_blk = b_blk.at[:, 0].add(a_blk[:, 0] * h)
+        cum_a, cum_b = jax.lax.associative_scan(_combine, (a_blk, b_blk), axis=1)
+        return cum_b[:, -1], cum_b
+
+    h_final, h_all = jax.lax.scan(step, h0, (a_c, b_c))
+    h_all = h_all.swapaxes(0, 1).reshape((bsz, n_chunks * c) + a.shape[2:])
+    return h_all[:, :s], h_final
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv1d (both mixers use a short 'smear' conv)
+
+
+def causal_conv1d(x, w, *, state: Optional[jax.Array] = None):
+    """x: (B, S, D); w: (K, D) depthwise causal. Optional carried state
+    (B, K-1, D) for decode. Returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        x_pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        x_pad = jnp.concatenate([state, x], axis=1)
+    y = sum(
+        x_pad[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(k)
+    )
+    new_state = x_pad[:, -(k - 1):] if k > 1 else jnp.zeros_like(x[:, :0])
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 (selective SSM)
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaSpec:
+    d_model: int
+    d_inner: int
+    d_state: int = 16
+    d_conv: int = 4
+    dt_rank: int = 0  # 0 -> ceil(d_model / 16)
+
+    @property
+    def dtr(self) -> int:
+        return self.dt_rank or -(-self.d_model // 16)
+
+
+def init_mamba(key, spec: MambaSpec, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 6)
+    di, n, dtr = spec.d_inner, spec.d_state, spec.dtr
+    # S4D-real init for A.
+    a_log = jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32), (di, 1)))
+    return {
+        "in_proj": init_linear(ks[0], spec.d_model, 2 * di, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (spec.d_conv, di)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": init_linear(ks[2], di, dtr + 2 * n, dtype=dtype),
+        "dt_proj": init_linear(ks[3], dtr, di, bias=True, dtype=dtype),
+        "a_log": a_log.astype(jnp.float32),  # kept f32 (exp-sensitive)
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": init_linear(ks[4], di, spec.d_model, dtype=dtype),
+    }
+
+
+def mamba_apply(
+    p: dict,
+    spec: MambaSpec,
+    x: jax.Array,  # (B, S, d_model)
+    *,
+    ssm_state: Optional[jax.Array] = None,  # (B, d_inner, N) decode carry
+    conv_state: Optional[jax.Array] = None,  # (B, d_conv-1, d_inner)
+    chunk: int = 256,
+    state_dtype=jnp.float32,
+):
+    """Returns (y (B, S, d_model), new_ssm_state, new_conv_state).
+
+    ``state_dtype=bfloat16`` halves the recurrence HBM traffic (the
+    (B,S,d_inner,N) discretized tensors dominate the layer's bytes); the
+    clean TPU solution is the fused Pallas scan (kernels/ssm_scan) which
+    keeps f32 states VMEM-resident with bf16 HBM I/O — the XLA-level bf16
+    mode mirrors that kernel's memory behaviour for the dry-run."""
+    di, n, dtr = spec.d_inner, spec.d_state, spec.dtr
+    xz = linear(x, p["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)  # (B, S, di) each
+    xin, new_conv = causal_conv1d(xin, p["conv_w"], state=conv_state)
+    xin = jax.nn.silu(xin + p["conv_b"])
+
+    proj = linear(xin, p["x_proj"])  # (B, S, dtr + 2N)
+    dt_in, b_in, c_in = jnp.split(proj, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(linear(dt_in, p["dt_proj"]).astype(jnp.float32))
+    a = -jnp.exp(p["a_log"])  # (di, N)
+
+    # Discretize: a_t = exp(dt * A) (B,S,di,N); b_t = dt * x * B_t.
+    dta = jnp.exp(dt[..., None] * a[None, None]).astype(state_dtype)
+    bx = (
+        (dt * xin.astype(jnp.float32))[..., None]
+        * b_in.astype(jnp.float32)[:, :, None, :]
+    ).astype(state_dtype)  # (B,S,di,N)
+    h0 = (
+        ssm_state.astype(state_dtype)
+        if ssm_state is not None
+        else jnp.zeros((x.shape[0], di, n), state_dtype)
+    )
+    h_all, h_last = chunked_linear_recurrence(dta, bx, h0, chunk=chunk)
+    h_last = h_last.astype(jnp.float32)
+    y = jnp.einsum(
+        "bsdn,bsn->bsd", h_all, c_in.astype(state_dtype),
+        preferred_element_type=jnp.float32,
+    )
+    y = y + xin.astype(jnp.float32) * p["d_skip"]
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return linear(y.astype(x.dtype), p["out_proj"]), h_last, new_conv
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin / recurrentgemma recurrent block)
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUSpec:
+    d_model: int
+    lru_width: int
+    d_conv: int = 4
+    c: float = 8.0  # recurrence sharpness constant
+
+
+def init_rglru(key, spec: RGLRUSpec, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 6)
+    w = spec.lru_width
+    # Lambda init so a^c in [0.9, 0.999] (Griffin appendix).
+    u = jax.random.uniform(ks[0], (w,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / spec.c))  # softplus^-1
+    return {
+        "in_x": init_linear(ks[1], spec.d_model, w, dtype=dtype),
+        "in_gate": init_linear(ks[2], spec.d_model, w, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[3], (spec.d_conv, w)) * 0.2).astype(dtype),
+        "w_r": init_linear(ks[4], w, w, dtype=dtype),
+        "w_i": init_linear(ks[5], w, w, dtype=dtype),
+        "lam": lam.astype(jnp.float32),
+        "out": init_linear(jax.random.fold_in(key, 7), w, spec.d_model, dtype=dtype),
+    }
+
+
+def rglru_apply(
+    p: dict,
+    spec: RGLRUSpec,
+    x: jax.Array,  # (B, S, d_model)
+    *,
+    h_state: Optional[jax.Array] = None,  # (B, lru_width)
+    conv_state: Optional[jax.Array] = None,
+    chunk: int = 256,
+):
+    """Griffin recurrent block: gate branch (GeLU) ⊙ (conv → RG-LRU).
+    Returns (y, new_h_state, new_conv_state)."""
+    gate = jax.nn.gelu(linear(x, p["in_gate"]))
+    u, new_conv = causal_conv1d(linear(x, p["in_x"]), p["conv_w"], state=conv_state)
+
+    r = jax.nn.sigmoid(linear(u, p["w_r"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(linear(u, p["w_i"]).astype(jnp.float32))
+    log_a = -spec.c * jax.nn.softplus(p["lam"]) * r  # (B,S,W)
+    a = jnp.exp(log_a)
+    gated_x = i * u.astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated_x
+    h0 = (
+        h_state
+        if h_state is not None
+        else jnp.zeros((x.shape[0], spec.lru_width), jnp.float32)
+    )
+    h_all, h_last = chunked_linear_recurrence(a, b, h0, chunk=chunk)
+    y = (h_all.astype(x.dtype)) * gate
+    return linear(y, p["out"]), h_last, new_conv

@@ -1,0 +1,709 @@
+"""Transformer assembly: heterogeneous block stacks (attention / Mamba /
+RG-LRU / MoE), scan-over-layers, remat, chunked-vocab cross-entropy,
+prefill and single-token decode.
+
+Layer stacking
+--------------
+``block_pattern`` (e.g. ``("rglru", "rglru", "attn")``) repeats down the
+stack. Layers are scanned over *pattern units*: parameters for pattern
+position i are stacked across units into one leaf with a leading
+``n_units`` dim, so the compiled HLO contains ONE copy of the unit body
+regardless of depth (command-r's 40 layers and granite's 88 compile the
+same size). ``n_layers mod len(pattern)`` tail layers run unscanned.
+
+Decode caches mirror the parameter tree (stacked per pattern position):
+attention layers hold ring-buffer KV caches sized to their visibility
+window (full causal -> max_len; local -> window; chunked -> chunk), SSM
+layers hold O(1) recurrent + conv states — this is what makes the
+long_500k decode shape representable for ssm/hybrid/chunked families.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.attention import (
+    AttnSpec,
+    blockwise_attention,
+    decode_attention,
+)
+from repro.models.moe import MoESpec, init_moe, moe_apply
+from repro.models.ssm import (
+    MambaSpec,
+    RGLRUSpec,
+    causal_conv1d,
+    init_mamba,
+    init_rglru,
+    mamba_apply,
+    rglru_apply,
+)
+
+# ---------------------------------------------------------------------------
+# Config-derived specs
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _attn_spec(cfg: ArchConfig, kind: str) -> AttnSpec:
+    if kind == "local":
+        return AttnSpec("local", window=cfg.window)
+    if kind == "chunked":
+        return AttnSpec("chunked", chunk=cfg.chunk)
+    return AttnSpec(kind)
+
+
+def _mamba_spec(cfg: ArchConfig) -> MambaSpec:
+    return MambaSpec(
+        d_model=cfg.d_model,
+        d_inner=cfg.ssm_expand * cfg.d_model,
+        d_state=cfg.ssm_state,
+        d_conv=cfg.ssm_conv,
+    )
+
+
+def _rglru_spec(cfg: ArchConfig) -> RGLRUSpec:
+    return RGLRUSpec(d_model=cfg.d_model, lru_width=cfg.lru_width,
+                     d_conv=cfg.ssm_conv)
+
+
+def _moe_spec(cfg: ArchConfig) -> MoESpec:
+    return MoESpec(
+        d_model=cfg.d_model,
+        n_experts=cfg.n_experts,
+        top_k=cfg.top_k,
+        d_ff=cfg.moe_d_ff,
+        capacity_factor=cfg.capacity_factor,
+        shared_d_ff=cfg.shared_expert_d_ff,
+    )
+
+
+def _use_rope(cfg: ArchConfig, attn_kind: str) -> bool:
+    if cfg.pos_embedding != "rope":
+        return False
+    # llama4 iRoPE: the periodic full-attention layers carry no positional
+    # encoding (NoPE); only chunked layers are rotary.
+    if cfg.chunk > 0 and attn_kind == "causal":
+        return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Block init
+
+
+def _init_attn(key, cfg: ArchConfig, *, cross: bool = False) -> dict:
+    ks = jax.random.split(key, 4)
+    d, hd = cfg.d_model, cfg.hd
+    nq, nkv = cfg.n_heads, (cfg.n_heads if cross else cfg.n_kv_heads)
+    if cross:
+        nkv = cfg.n_kv_heads
+    dt = _dtype(cfg)
+    p = {
+        "wq": L.init_linear(ks[0], d, nq * hd, bias=cfg.qkv_bias, dtype=dt),
+        "wk": L.init_linear(ks[1], d, nkv * hd, bias=cfg.qkv_bias, dtype=dt),
+        "wv": L.init_linear(ks[2], d, nkv * hd, bias=cfg.qkv_bias, dtype=dt),
+        "wo": L.init_linear(ks[3], nq * hd, d, dtype=dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": jnp.zeros((hd,), dt)}
+        p["k_norm"] = {"scale": jnp.zeros((hd,), dt)}
+    return p
+
+
+def _init_ffn(key, cfg: ArchConfig) -> dict:
+    if cfg.n_experts:
+        return init_moe(key, _moe_spec(cfg), dtype=_dtype(cfg))
+    return L.init_mlp(key, cfg.d_model, cfg.d_ff, act=cfg.mlp_act,
+                      dtype=_dtype(cfg))
+
+
+def init_block(key, cfg: ArchConfig, kind: str, *, cross_attn: bool = False) -> dict:
+    ks = jax.random.split(key, 6)
+    dt = _dtype(cfg)
+    d = cfg.d_model
+    if kind == "attn":
+        if cfg.parallel_block:
+            p = {
+                "ln": L.init_norm(d, cfg.norm, dt),
+                "attn": _init_attn(ks[0], cfg),
+                "ffn": _init_ffn(ks[1], cfg),
+            }
+        else:
+            p = {
+                "ln1": L.init_norm(d, cfg.norm, dt),
+                "attn": _init_attn(ks[0], cfg),
+                "ln2": L.init_norm(d, cfg.norm, dt),
+                "ffn": _init_ffn(ks[1], cfg),
+            }
+        if cross_attn:
+            p["ln_x"] = L.init_norm(d, cfg.norm, dt)
+            p["xattn"] = _init_attn(ks[2], cfg, cross=True)
+        return p
+    if kind == "mamba":
+        return {
+            "ln1": L.init_norm(d, cfg.norm, dt),
+            "mamba": init_mamba(ks[0], _mamba_spec(cfg), dtype=dt),
+        }
+    if kind == "rglru":
+        return {
+            "ln1": L.init_norm(d, cfg.norm, dt),
+            "rglru": init_rglru(ks[0], _rglru_spec(cfg), dtype=dt),
+            "ln2": L.init_norm(d, cfg.norm, dt),
+            "ffn": _init_ffn(ks[1], cfg),
+        }
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Block caches (decode)
+
+
+def init_block_cache(cfg: ArchConfig, kind: str, attn_kind: str, batch: int,
+                     max_len: int):
+    dt = _dtype(cfg)
+    if kind == "attn":
+        if attn_kind == "local":
+            s = min(max_len, cfg.window)
+        elif attn_kind == "chunked":
+            s = min(max_len, cfg.chunk)
+        else:
+            s = max_len
+        cache = {
+            "k": jnp.zeros((batch, s, cfg.n_kv_heads, cfg.hd), dt),
+            "v": jnp.zeros((batch, s, cfg.n_kv_heads, cfg.hd), dt),
+        }
+        if cfg.n_encoder_layers:  # cross-attention KV (filled at prefill)
+            cache["xk"] = jnp.zeros(
+                (batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.hd), dt
+            )
+            cache["xv"] = jnp.zeros(
+                (batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.hd), dt
+            )
+        return cache
+    if kind == "mamba":
+        spec = _mamba_spec(cfg)
+        return {
+            "ssm": jnp.zeros((batch, spec.d_inner, spec.d_state), jnp.float32),
+            "conv": jnp.zeros((batch, spec.d_conv - 1, spec.d_inner), dt),
+        }
+    if kind == "rglru":
+        spec = _rglru_spec(cfg)
+        return {
+            "h": jnp.zeros((batch, spec.lru_width), jnp.float32),
+            "conv": jnp.zeros((batch, spec.d_conv - 1, spec.lru_width), dt),
+        }
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Block apply
+
+
+def _split_heads(x, n_heads, hd):
+    return x.reshape(x.shape[:-1] + (n_heads, hd))
+
+
+def _attn_apply(
+    p: dict,
+    cfg: ArchConfig,
+    x: jax.Array,  # (B, S, d)
+    attn_kind: str,
+    positions,  # (S,) or (B, S)
+    *,
+    cache: Optional[dict] = None,
+    decode_index=None,
+    is_cross: bool = False,
+    kv_source: Optional[jax.Array] = None,  # cross-attention source
+    cache_keys=("k", "v"),
+):
+    b, s, _ = x.shape
+    hkv, g, hd = cfg.n_kv_heads, cfg.q_groups, cfg.hd
+    spec = _attn_spec(cfg, attn_kind)
+    q = _split_heads(L.linear(x, p["wq"]), cfg.n_heads, hd)
+    if cfg.qk_norm:
+        q = L.rms_norm(q, p["q_norm"]["scale"])
+    use_rope = _use_rope(cfg, attn_kind) and not is_cross
+
+    if is_cross:
+        # Cross attention: KV from encoder states. At prefill they are
+        # computed from ``kv_source`` and written into the cache; at decode
+        # they are read back (encoder states are static across steps).
+        new_cache = cache
+        if decode_index is not None:
+            k, v = cache[cache_keys[0]], cache[cache_keys[1]]
+        else:
+            k = _split_heads(L.linear(kv_source, p["wk"]), hkv, hd)
+            v = _split_heads(L.linear(kv_source, p["wv"]), hkv, hd)
+            if cache is not None:
+                new_cache = dict(cache)
+                new_cache[cache_keys[0]] = k
+                new_cache[cache_keys[1]] = v
+        q5 = q.reshape(b, s, hkv, g, hd)
+        out = blockwise_attention(q5, k, v, AttnSpec("full"))
+    else:
+        k = _split_heads(L.linear(x, p["wk"]), hkv, hd)
+        v = _split_heads(L.linear(x, p["wv"]), hkv, hd)
+        if cfg.qk_norm:
+            k = L.rms_norm(k, p["k_norm"]["scale"])
+        if use_rope:
+            q = L.apply_rope(q, positions, theta=cfg.rope_theta)
+            k = L.apply_rope(k, positions, theta=cfg.rope_theta)
+        q5 = q.reshape(b, s, hkv, g, hd)
+        exact_f32 = not cfg.opt_no_f32_cast_attn
+        if decode_index is not None:
+            # Single-token decode against the ring-buffer cache.
+            s_cache = cache["k"].shape[1]
+            slot = jnp.mod(decode_index, s_cache)
+            new_cache = dict(cache)
+            new_cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k, slot, axis=1
+            )
+            new_cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v, slot, axis=1
+            )
+            out = decode_attention(
+                q5, new_cache["k"], new_cache["v"], decode_index, spec,
+                exact_f32=exact_f32,
+            )
+        else:
+            out = blockwise_attention(
+                q5, k, v, spec, exact_f32=exact_f32,
+                pin_batch=cfg.opt_shard_attn_batch,
+            )
+            new_cache = cache
+            if cache is not None:
+                # Prefill: write the (windowed) KV tail into the cache.
+                s_cache = cache["k"].shape[1]
+                take = min(s, s_cache)
+                new_cache = dict(cache)
+                new_cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+                    cache["k"], k[:, -take:], 0, axis=1
+                )
+                new_cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+                    cache["v"], v[:, -take:], 0, axis=1
+                )
+    out = out.reshape(b, s, cfg.n_heads * hd)
+    return L.linear(out, p["wo"]), new_cache
+
+
+def _ffn_apply(p: dict, cfg: ArchConfig, x: jax.Array):
+    if cfg.n_experts:
+        return moe_apply(p, _moe_spec(cfg), x)
+    return L.mlp(x, p, act=cfg.mlp_act), jnp.zeros((), jnp.float32)
+
+
+def apply_block(
+    p: dict,
+    cfg: ArchConfig,
+    kind: str,
+    attn_kind: str,
+    x: jax.Array,
+    positions,
+    *,
+    cache: Optional[dict] = None,
+    decode_index=None,
+    encoder_out: Optional[jax.Array] = None,
+):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "attn":
+        if cfg.parallel_block:
+            h = L.apply_norm(x, p["ln"], cfg.norm)
+            a, new_cache = _attn_apply(
+                p["attn"], cfg, h, attn_kind, positions,
+                cache=cache, decode_index=decode_index,
+            )
+            f, aux = _ffn_apply(p["ffn"], cfg, h)
+            return x + a + f, new_cache, aux
+        h = L.apply_norm(x, p["ln1"], cfg.norm)
+        a, new_cache = _attn_apply(
+            p["attn"], cfg, h, attn_kind, positions,
+            cache=cache, decode_index=decode_index,
+        )
+        x = x + a
+        if "xattn" in p:
+            hx = L.apply_norm(x, p["ln_x"], cfg.norm)
+            ax, new_cache2 = _attn_apply(
+                p["xattn"], cfg, hx, "full", positions,
+                cache=new_cache, decode_index=decode_index,
+                is_cross=True, kv_source=encoder_out, cache_keys=("xk", "xv"),
+            )
+            new_cache = new_cache2 if new_cache2 is not None else new_cache
+            x = x + ax
+        h2 = L.apply_norm(x, p["ln2"], cfg.norm)
+        f, aux = _ffn_apply(p["ffn"], cfg, h2)
+        return x + f, new_cache, aux
+    if kind == "mamba":
+        h = L.apply_norm(x, p["ln1"], cfg.norm)
+        sdt = jnp.bfloat16 if cfg.opt_bf16_ssm else jnp.float32
+        if decode_index is not None or cache is not None:
+            y, ssm_new, conv_new = mamba_apply(
+                p["mamba"], _mamba_spec(cfg), h,
+                ssm_state=cache["ssm"], conv_state=cache["conv"],
+                state_dtype=sdt,
+            )
+            new_cache = {"ssm": ssm_new, "conv": conv_new}
+        else:
+            y, _, _ = mamba_apply(p["mamba"], _mamba_spec(cfg), h,
+                                  state_dtype=sdt)
+            new_cache = None
+        return x + y, new_cache, aux
+    if kind == "rglru":
+        h = L.apply_norm(x, p["ln1"], cfg.norm)
+        if decode_index is not None or cache is not None:
+            y, h_new, conv_new = rglru_apply(
+                p["rglru"], _rglru_spec(cfg), h,
+                h_state=cache["h"], conv_state=cache["conv"],
+            )
+            new_cache = {"h": h_new, "conv": conv_new}
+        else:
+            y, _, _ = rglru_apply(p["rglru"], _rglru_spec(cfg), h)
+            new_cache = None
+        x = x + y
+        h2 = L.apply_norm(x, p["ln2"], cfg.norm)
+        f, aux = _ffn_apply(p["ffn"], cfg, h2)
+        return x + f, new_cache, aux
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Stack = scanned pattern units + tail
+
+
+def _pattern_layout(cfg: ArchConfig, n_layers: int):
+    pat = cfg.block_pattern
+    n_units = n_layers // len(pat) if cfg.scan_layers else 0
+    tail = n_layers - n_units * len(pat)
+    return pat, n_units, tail
+
+
+def init_stack(key, cfg: ArchConfig, n_layers: int, *, cross_attn=False) -> dict:
+    pat, n_units, tail = _pattern_layout(cfg, n_layers)
+    params: dict = {"units": None, "tail": []}
+    if n_units:
+        per_pos = []
+        for i, kind in enumerate(pat):
+            stacked = [
+                init_block(jax.random.fold_in(key, u * len(pat) + i), cfg, kind,
+                           cross_attn=cross_attn)
+                for u in range(n_units)
+            ]
+            per_pos.append(
+                jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *stacked)
+                if n_units > 1
+                else jax.tree_util.tree_map(lambda x: x[None], stacked[0])
+            )
+        params["units"] = per_pos
+    for t in range(tail):
+        kind = pat[t % len(pat)]
+        params["tail"].append(
+            init_block(jax.random.fold_in(key, 10_000 + t), cfg, kind,
+                       cross_attn=cross_attn)
+        )
+    return params
+
+
+def init_stack_cache(cfg: ArchConfig, n_layers: int, batch: int, max_len: int):
+    pat, n_units, tail = _pattern_layout(cfg, n_layers)
+    cache: dict = {"units": None, "tail": []}
+    if n_units:
+        per_pos = []
+        for i, kind in enumerate(pat):
+            one = init_block_cache(
+                cfg, kind, cfg.attn_kind_for_layer(i), batch, max_len
+            )
+            per_pos.append(
+                jax.tree_util.tree_map(
+                    lambda x: jnp.broadcast_to(x[None], (n_units,) + x.shape), one
+                )
+            )
+        cache["units"] = per_pos
+    for t in range(tail):
+        kind = pat[t % len(pat)]
+        cache["tail"].append(
+            init_block_cache(cfg, kind, cfg.attn_kind_for_layer(t), batch, max_len)
+        )
+    return cache
+
+
+def _remat_wrap(cfg: ArchConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    policy = (
+        jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        if cfg.remat == "dots"
+        else None  # None = save nothing (full remat)
+    )
+    return jax.checkpoint(fn, policy=policy)
+
+
+def apply_stack(
+    params: dict,
+    cfg: ArchConfig,
+    x: jax.Array,
+    positions,
+    *,
+    cache: Optional[dict] = None,
+    decode_index=None,
+    encoder_out: Optional[jax.Array] = None,
+):
+    """Run the full stack. Returns (x, new_cache, total_aux)."""
+    pat = cfg.block_pattern
+    total_aux = jnp.zeros((), jnp.float32)
+    new_cache: dict = {"units": None, "tail": []}
+
+    if params["units"] is not None:
+
+        def unit_body(carry, unit_in):
+            h, aux = carry
+            unit_params, unit_cache = unit_in
+            out_caches = []
+            for i, kind in enumerate(pat):
+                c_i = unit_cache[i] if unit_cache is not None else None
+                h, c_new, a = apply_block(
+                    unit_params[i], cfg, kind, cfg.attn_kind_for_layer(i), h,
+                    positions, cache=c_i, decode_index=decode_index,
+                    encoder_out=encoder_out,
+                )
+                out_caches.append(c_new)
+                aux = aux + a
+            return (h, aux), out_caches
+
+        body = _remat_wrap(cfg, unit_body)
+        unit_cache_xs = cache["units"] if cache is not None else None
+        (x, total_aux), caches_out = jax.lax.scan(
+            body,
+            (x, total_aux),
+            (params["units"], unit_cache_xs),
+        )
+        new_cache["units"] = caches_out
+
+    for t, p_t in enumerate(params["tail"]):
+        kind = pat[t % len(pat)]
+        c_t = cache["tail"][t] if cache is not None else None
+        x, c_new, a = apply_block(
+            p_t, cfg, kind, cfg.attn_kind_for_layer(t), x, positions,
+            cache=c_t, decode_index=decode_index, encoder_out=encoder_out,
+        )
+        new_cache["tail"].append(c_new)
+        total_aux = total_aux + a
+    return x, (new_cache if cache is not None else None), total_aux
+
+
+# ---------------------------------------------------------------------------
+# Full model
+
+
+def init_params(key, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(key, 6)
+    dt = _dtype(cfg)
+    params = {
+        "embed": L.embed_init(ks[0], (cfg.vocab_size, cfg.d_model), dt),
+        "stack": init_stack(ks[1], cfg, cfg.n_layers,
+                            cross_attn=cfg.n_encoder_layers > 0),
+        "final_norm": L.init_norm(cfg.d_model, cfg.norm, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.xavier_init(
+            ks[2], (cfg.d_model, cfg.vocab_size), dt
+        )
+    if cfg.pos_embedding == "learned":
+        params["pos_table"] = L.embed_init(
+            ks[3], (cfg.max_position, cfg.d_model), dt
+        )
+    if cfg.n_encoder_layers:
+        enc_cfg = dataclasses.replace(
+            cfg,
+            attn_pattern=("full",),
+            n_encoder_layers=0,  # plain self-attention stack
+        )
+        params["encoder"] = {
+            "pos_table": L.embed_init(ks[4], (cfg.encoder_seq, cfg.d_model), dt),
+            "stack": init_stack(ks[5], enc_cfg, cfg.n_encoder_layers),
+            "norm": L.init_norm(cfg.d_model, cfg.norm, dt),
+        }
+    return params
+
+
+def encode(params: dict, cfg: ArchConfig, frames: jax.Array) -> jax.Array:
+    """Audio/vision encoder over precomputed frame embeddings (the modality
+    frontend is a stub per the assignment; frames: (B, encoder_seq, d))."""
+    enc = params["encoder"]
+    x = frames + enc["pos_table"][None]
+    enc_cfg = dataclasses.replace(cfg, attn_pattern=("full",), n_encoder_layers=0)
+    pos = jnp.arange(frames.shape[1])
+    x, _, _ = apply_stack(enc["stack"], enc_cfg, x, pos)
+    return L.apply_norm(x, enc["norm"], cfg.norm)
+
+
+def embed_tokens(params, cfg: ArchConfig, tokens, prefix_embeds=None):
+    h = jnp.take(params["embed"], tokens, axis=0)
+    if prefix_embeds is not None:
+        h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+    return h
+
+
+def forward_hidden(
+    params: dict,
+    cfg: ArchConfig,
+    tokens: jax.Array,  # (B, S_tok)
+    *,
+    prefix_embeds=None,  # (B, P, d) VLM patch embeddings
+    encoder_frames=None,  # (B, encoder_seq, d) enc-dec source
+    cache=None,
+    decode_index=None,
+):
+    h = embed_tokens(params, cfg, tokens, prefix_embeds)
+    b, s = h.shape[0], h.shape[1]
+    if decode_index is not None:
+        positions = jnp.broadcast_to(decode_index, (b, 1))
+    else:
+        positions = jnp.arange(s)
+    if cfg.pos_embedding == "learned":
+        pos_idx = positions if positions.ndim > 0 else jnp.arange(s)
+        h = h + jnp.take(params["pos_table"], pos_idx, axis=0).reshape(
+            (b, s, -1) if decode_index is not None else (s, -1)
+        )
+    encoder_out = None
+    if encoder_frames is not None:
+        encoder_out = encode(params, cfg, encoder_frames)
+    h, new_cache, aux = apply_stack(
+        params["stack"], cfg, h, positions,
+        cache=cache, decode_index=decode_index, encoder_out=encoder_out,
+    )
+    h = L.apply_norm(h, params["final_norm"], cfg.norm)
+    return h, new_cache, aux
+
+
+def unembed(params: dict, cfg: ArchConfig, h: jax.Array) -> jax.Array:
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("...d,dv->...v", h, w)
+
+
+# ---------------------------------------------------------------------------
+# Chunked-vocab cross-entropy (256k-vocab logits never materialize)
+
+
+def chunked_softmax_ce(
+    h: jax.Array,  # (B, S, d)
+    w_vocab: jax.Array,  # (d, V)
+    targets: jax.Array,  # (B, S) int32
+    *,
+    vocab_chunk: int = 8192,
+    remat_chunks: bool = False,
+):
+    """Mean CE via online logsumexp over vocab chunks.
+
+    ``remat_chunks`` recomputes each logits chunk in the backward pass
+    instead of saving it (saves B*S*V*4 bytes of residuals for one extra
+    h @ w_c matmul per chunk)."""
+    b, s, d = h.shape
+    v = w_vocab.shape[1]
+    c = min(vocab_chunk, v)
+    pad = (-v) % c
+    n_chunks = (v + pad) // c
+    h32 = h.astype(jnp.float32)
+
+    def step(carry, ci):
+        m, lse_l, tgt = carry
+        start = ci * c
+        w_c = jax.lax.dynamic_slice(w_vocab, (0, start), (d, c)).astype(
+            jnp.float32
+        )
+        logits = jnp.einsum("bsd,dc->bsc", h32, w_c)
+        # Mask vocab padding in the final chunk.
+        col = start + jnp.arange(c)
+        logits = jnp.where((col < v)[None, None, :], logits, -1e30)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        lse_l = lse_l * jnp.exp(m - m_new) + jnp.sum(
+            jnp.exp(logits - m_new[..., None]), axis=-1
+        )
+        local = jnp.clip(targets - start, 0, c - 1)
+        t_log = jnp.take_along_axis(logits, local[..., None], axis=-1)[..., 0]
+        in_chunk = jnp.logical_and(targets >= start, targets < start + c)
+        tgt = jnp.where(in_chunk, t_log, tgt)
+        return (m_new, lse_l, tgt), None
+
+    m0 = jnp.full((b, s), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, s), jnp.float32)
+    t0 = jnp.zeros((b, s), jnp.float32)
+    body = jax.checkpoint(step) if remat_chunks else step
+    (m, lse_l, tgt), _ = jax.lax.scan(body, (m0, l0, t0), jnp.arange(n_chunks))
+    nll = (m + jnp.log(jnp.maximum(lse_l, 1e-30))) - tgt
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# Training loss / prefill / decode entry points
+
+
+def train_loss(
+    params: dict,
+    cfg: ArchConfig,
+    batch: dict,
+    *,
+    aux_weight: float = 0.01,
+    vocab_chunk: int = 8192,
+):
+    """batch: {'tokens': (B, S+1)} (+ 'prefix_embeds' / 'encoder_frames')."""
+    tokens = batch["tokens"]
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    h, _, aux = forward_hidden(
+        params, cfg, inputs,
+        prefix_embeds=batch.get("prefix_embeds"),
+        encoder_frames=batch.get("encoder_frames"),
+    )
+    if batch.get("prefix_embeds") is not None:
+        h = h[:, batch["prefix_embeds"].shape[1]:]
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    ce = chunked_softmax_ce(
+        h, w, targets, vocab_chunk=vocab_chunk,
+        remat_chunks=cfg.opt_ce_remat,
+    )
+    return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+def prefill(
+    params: dict,
+    cfg: ArchConfig,
+    tokens: jax.Array,
+    *,
+    max_len: int,
+    prefix_embeds=None,
+    encoder_frames=None,
+):
+    """Process a prompt, returning (last-token logits, primed cache)."""
+    b = tokens.shape[0]
+    cache = init_stack_cache(cfg, cfg.n_layers, b, max_len)
+    h, cache, _ = forward_hidden(
+        params, cfg, tokens,
+        prefix_embeds=prefix_embeds, encoder_frames=encoder_frames,
+        cache=cache,
+    )
+    logits = unembed(params, cfg, h[:, -1:])[:, 0]
+    return logits, cache
+
+
+def decode_step(
+    params: dict,
+    cfg: ArchConfig,
+    token: jax.Array,  # (B, 1) int32
+    cache,
+    index,  # scalar int32: absolute position of this token
+    *,
+    encoder_out=None,
+):
+    """One serving step: logits for the next token + updated cache."""
+    h, new_cache, _ = forward_hidden(
+        params, cfg, token, cache=cache, decode_index=index,
+    )
+    logits = unembed(params, cfg, h[:, 0])
+    return logits, new_cache

@@ -1,0 +1,29 @@
+"""Optimizer substrate (no external deps): AdamW, schedules, clipping,
+gradient accumulation and error-feedback gradient compression."""
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, OptState
+from repro.optim.schedules import (
+    cosine_schedule,
+    linear_warmup_cosine,
+    constant_schedule,
+)
+from repro.optim.clipping import global_norm, clip_by_global_norm
+from repro.optim.compression import (
+    compress_grads_int8,
+    decompress_grads_int8,
+    ErrorFeedbackState,
+)
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "OptState",
+    "cosine_schedule",
+    "linear_warmup_cosine",
+    "constant_schedule",
+    "global_norm",
+    "clip_by_global_norm",
+    "compress_grads_int8",
+    "decompress_grads_int8",
+    "ErrorFeedbackState",
+]

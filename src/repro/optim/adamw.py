@@ -1,0 +1,87 @@
+"""AdamW, functional, pytree-generic.
+
+State layout mirrors the params pytree (one m/v slot per leaf), kept in
+float32 regardless of param dtype (mixed-precision training: bf16 params,
+fp32 master copies live in the state when ``keep_master_copy``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    keep_master_copy: bool = False  # fp32 master params for bf16 training
+
+
+class OptState(NamedTuple):
+    step: jax.Array  # int32 scalar
+    m: Any  # first moment, fp32
+    v: Any  # second moment, fp32
+    master: Any  # fp32 master params or None
+
+
+def adamw_init(params: Any, cfg: AdamWConfig) -> OptState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+    master = (
+        jax.tree_util.tree_map(lambda p: p.astype(jnp.float32), params)
+        if cfg.keep_master_copy
+        else None
+    )
+    return OptState(step=jnp.zeros((), jnp.int32), m=zeros, v=jax.tree_util.tree_map(jnp.copy, zeros), master=master)
+
+
+def adamw_update(
+    grads: Any,
+    state: OptState,
+    params: Any,
+    cfg: AdamWConfig,
+    lr: jax.Array,
+):
+    """One AdamW step. Returns (new_params, new_state)."""
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - cfg.b1**t
+    c2 = 1.0 - cfg.b2**t
+
+    source = state.master if cfg.keep_master_copy else params
+
+    def _leaf(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g32
+        v_new = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+        update = (m_new / c1) / (jnp.sqrt(v_new / c2) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        p_new = p32 - lr * (update + cfg.weight_decay * p32)
+        return m_new, v_new, p_new
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    flat_p = treedef.flatten_up_to(source)
+    outs = [_leaf(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_m = treedef.unflatten([o[0] for o in outs])
+    new_v = treedef.unflatten([o[1] for o in outs])
+    new_p32 = treedef.unflatten([o[2] for o in outs])
+
+    if cfg.keep_master_copy:
+        new_params = jax.tree_util.tree_map(
+            lambda p32, p: p32.astype(p.dtype), new_p32, params
+        )
+        new_state = OptState(step=step, m=new_m, v=new_v, master=new_p32)
+    else:
+        new_params = jax.tree_util.tree_map(
+            lambda p32, p: p32.astype(p.dtype), new_p32, params
+        )
+        new_state = OptState(step=step, m=new_m, v=new_v, master=None)
+    return new_params, new_state

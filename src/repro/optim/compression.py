@@ -1,0 +1,63 @@
+"""Error-feedback int8 gradient compression for data-parallel all-reduce.
+
+At 1000+ node scale the DP all-reduce of fp32/bf16 gradients can dominate
+step time on oversubscribed DCN links between pods. The standard mitigation
+(1-bit Adam / EF-SGD family) is: quantize the gradient per-tensor to int8
+with a float scale, all-reduce the int8 payload (4x less traffic than fp32),
+and accumulate the quantization error locally into the next step's gradient
+(error feedback keeps the method convergent).
+
+These helpers are pure functions; the training step wires them around its
+``psum`` when ``grad_compression=int8`` is configured. The all-reduce itself
+still happens in whatever precision the collective is given — compression
+changes the *payload*, which is what the collective-roofline term charges.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ErrorFeedbackState(NamedTuple):
+    residual: Any  # pytree like grads, fp32
+
+
+def ef_init(grads_shape_tree) -> ErrorFeedbackState:
+    return ErrorFeedbackState(
+        residual=jax.tree_util.tree_map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads_shape_tree
+        )
+    )
+
+
+def compress_grads_int8(grads, ef: ErrorFeedbackState | None = None):
+    """Quantize each leaf to (int8 codes, fp32 scale); fold in EF residual.
+
+    Returns (codes_tree, scales_tree, new_ef_state).
+    """
+
+    def _leaf(g, r):
+        g32 = g.astype(jnp.float32) + (r if r is not None else 0.0)
+        scale = jnp.max(jnp.abs(g32)) / 127.0 + 1e-12
+        q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+        err = g32 - q.astype(jnp.float32) * scale
+        return q, scale, err
+
+    res = ef.residual if ef is not None else jax.tree_util.tree_map(
+        lambda _: None, grads, is_leaf=lambda x: x is None
+    )
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(res) if ef is not None else [None] * len(flat_g)
+    outs = [_leaf(g, r) for g, r in zip(flat_g, flat_r)]
+    codes = treedef.unflatten([o[0] for o in outs])
+    scales = treedef.unflatten([o[1] for o in outs])
+    new_ef = ErrorFeedbackState(residual=treedef.unflatten([o[2] for o in outs]))
+    return codes, scales, new_ef
+
+
+def decompress_grads_int8(codes, scales):
+    return jax.tree_util.tree_map(
+        lambda q, s: q.astype(jnp.float32) * s, codes, scales
+    )

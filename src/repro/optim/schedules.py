@@ -1,0 +1,33 @@
+"""Learning-rate schedules as step -> lr callables (jit-traceable)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    def f(step):
+        return jnp.asarray(lr, jnp.float32)
+
+    return f
+
+
+def cosine_schedule(peak_lr: float, total_steps: int, final_frac: float = 0.1):
+    def f(step):
+        t = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return peak_lr * (final_frac + (1 - final_frac) * cos)
+
+    return f
+
+
+def linear_warmup_cosine(
+    peak_lr: float, warmup_steps: int, total_steps: int, final_frac: float = 0.1
+):
+    cos = cosine_schedule(peak_lr, max(1, total_steps - warmup_steps), final_frac)
+
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(1, warmup_steps)
+        return jnp.where(s < warmup_steps, warm, cos(step - warmup_steps))
+
+    return f

@@ -1,0 +1,2 @@
+"""Paper-faithful experiment drivers: CNN training, Table 1 parameter-class
+histograms, Fig. 3 bit-width exploration, and cached artifacts."""

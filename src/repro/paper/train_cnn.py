@@ -1,0 +1,145 @@
+"""Training driver for the paper's three CNN topologies.
+
+Trains on the deterministic synthetic image task (see ``repro.data``),
+optionally with fixed-point quantization-aware fine-tuning (the paper's
+footnote-2 retraining step). Artifacts are cached under ``results/cnn/`` so
+benchmarks and tests share one trained model per topology.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pickle
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import make_image_dataset
+from repro.models.cnn import CNNTopology, PAPER_TOPOLOGIES, cnn_apply, init_cnn
+from repro.optim import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    linear_warmup_cosine,
+)
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS_DIR", "results")
+
+
+@dataclasses.dataclass
+class TrainedCNN:
+    topo: CNNTopology
+    params: dict
+    float_accuracy: float
+    history: list
+
+
+def _loss_fn(params, topo, batch_x, batch_y, weight_bits, act_bits,
+             pow2_weights=False):
+    logits = cnn_apply(
+        params, topo, batch_x, weight_bits=weight_bits, act_bits=act_bits,
+        pow2_weights=pow2_weights,
+    )
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, batch_y[:, None], axis=1).mean()
+    return nll
+
+
+def evaluate(params, topo, x, y, *, weight_bits=None, act_bits=None,
+             pow2_weights=False, batch=256):
+    """Classification accuracy over a split."""
+    correct = 0
+    for i in range(0, x.shape[0], batch):
+        logits = cnn_apply(
+            params, topo, x[i : i + batch], weight_bits=weight_bits,
+            act_bits=act_bits, pow2_weights=pow2_weights,
+        )
+        correct += int(jnp.sum(jnp.argmax(logits, -1) == y[i : i + batch]))
+    return correct / x.shape[0]
+
+
+def train_cnn(
+    topo: CNNTopology,
+    *,
+    steps: int = 400,
+    batch_size: int = 128,
+    peak_lr: float = 3e-3,
+    seed: int = 0,
+    weight_bits: Optional[int] = None,
+    act_bits: Optional[int] = None,
+    pow2_weights: bool = False,
+    init_params: Optional[dict] = None,
+    dataset=None,
+    log_every: int = 100,
+    verbose: bool = False,
+) -> TrainedCNN:
+    ds = dataset or make_image_dataset(
+        hw=topo.input_hw, channels=topo.input_channels, seed=seed
+    )
+    key = jax.random.PRNGKey(seed + 1)
+    params = init_params or init_cnn(key, topo)
+    cfg = AdamWConfig(weight_decay=0.01)
+    state = adamw_init(params, cfg)
+    sched = linear_warmup_cosine(peak_lr, warmup_steps=20, total_steps=steps)
+    n = ds.x_train.shape[0]
+
+    @jax.jit
+    def step_fn(params, state, x, y, step):
+        loss, grads = jax.value_and_grad(_loss_fn)(
+            params, topo, x, y, weight_bits, act_bits, pow2_weights
+        )
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        params, state = adamw_update(grads, state, params, cfg, sched(step))
+        return params, state, loss, gnorm
+
+    rng = np.random.default_rng(seed + 2)
+    history = []
+    for s in range(steps):
+        idx = rng.integers(0, n, size=batch_size)
+        params, state, loss, gnorm = step_fn(
+            params, state, ds.x_train[idx], ds.y_train[idx], jnp.asarray(s)
+        )
+        if s % log_every == 0 or s == steps - 1:
+            history.append({"step": s, "loss": float(loss)})
+            if verbose:
+                print(f"[{topo.name}] step {s:4d} loss {float(loss):.4f}")
+    acc = evaluate(
+        params, topo, ds.x_test, ds.y_test, weight_bits=weight_bits,
+        act_bits=act_bits, pow2_weights=pow2_weights,
+    )
+    return TrainedCNN(topo=topo, params=params, float_accuracy=acc, history=history)
+
+
+def _cache_path(name: str) -> str:
+    return os.path.join(RESULTS_DIR, "cnn", f"{name}.pkl")
+
+
+def get_trained_cnn(name: str, *, steps: int = 400, force: bool = False) -> TrainedCNN:
+    """Train-or-load the named paper topology (cached artifact)."""
+    topo = PAPER_TOPOLOGIES[name]
+    path = _cache_path(name)
+    if not force and os.path.exists(path):
+        with open(path, "rb") as f:
+            blob = pickle.load(f)
+        return TrainedCNN(
+            topo=topo,
+            params=jax.tree_util.tree_map(jnp.asarray, blob["params"]),
+            float_accuracy=blob["float_accuracy"],
+            history=blob["history"],
+        )
+    trained = train_cnn(topo, steps=steps)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "wb") as f:
+        pickle.dump(
+            {
+                "params": jax.tree_util.tree_map(np.asarray, trained.params),
+                "float_accuracy": trained.float_accuracy,
+                "history": trained.history,
+            },
+            f,
+        )
+    return trained

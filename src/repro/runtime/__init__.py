@@ -1,0 +1,17 @@
+"""Distributed runtime: fault-tolerant training driver (checkpoint/restart),
+straggler detection, elastic re-meshing."""
+from repro.runtime.driver import (
+    ElasticMesh,
+    FaultInjector,
+    NodeFailure,
+    ResilientTrainer,
+    StragglerMonitor,
+)
+
+__all__ = [
+    "ElasticMesh",
+    "FaultInjector",
+    "NodeFailure",
+    "ResilientTrainer",
+    "StragglerMonitor",
+]

@@ -1,0 +1,84 @@
+"""Tests for the CNN substrate + paper topologies (workload numbers,
+training, quantized inference)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import make_image_dataset
+from repro.models.cnn import (
+    CIFAR10,
+    LENET5,
+    PAPER_TOPOLOGIES,
+    SVHN,
+    cnn_apply,
+    init_cnn,
+)
+from repro.paper.train_cnn import evaluate, train_cnn
+
+
+class TestTopologies:
+    def test_paper_workloads(self):
+        """Table 4 'Workload' column: 3.8 Mop LeNet5, 24.8 Mop Cifar10."""
+        assert LENET5.feature_extractor_ops() == pytest.approx(3.8e6, rel=0.02)
+        assert CIFAR10.feature_extractor_ops() == pytest.approx(24.8e6, rel=0.02)
+        assert SVHN.feature_extractor_ops() == CIFAR10.feature_extractor_ops()
+
+    def test_conv_shapes_lenet(self):
+        # 28 -VALID5-> 24 -pool-> 12 -VALID5-> 8 -pool-> 4
+        assert LENET5.conv_shapes() == [(1, 20, 5, 24, 24), (20, 50, 5, 8, 8)]
+
+    def test_conv_shapes_cifar(self):
+        assert CIFAR10.conv_shapes() == [
+            (3, 32, 5, 32, 32),
+            (32, 32, 5, 16, 16),
+            (32, 64, 5, 8, 8),
+        ]
+
+    def test_multiplier_counts(self):
+        # Full DHM LeNet5 needs C*N*K^2 per layer = 500 + 25000.
+        assert LENET5.n_multipliers() == 25500
+
+
+class TestForward:
+    @pytest.mark.parametrize("name", sorted(PAPER_TOPOLOGIES))
+    def test_forward_shapes_and_finite(self, name):
+        topo = PAPER_TOPOLOGIES[name]
+        params = init_cnn(jax.random.PRNGKey(0), topo)
+        x = jnp.ones((2, topo.input_hw, topo.input_hw, topo.input_channels))
+        logits = cnn_apply(params, topo, x)
+        assert logits.shape == (2, topo.n_classes)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_quantized_forward_finite(self):
+        params = init_cnn(jax.random.PRNGKey(0), LENET5)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 28, 28, 1))
+        for bits in (3, 6, 8):
+            logits = cnn_apply(params, LENET5, x, weight_bits=bits, act_bits=bits)
+            assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_quantization_changes_output(self):
+        params = init_cnn(jax.random.PRNGKey(0), LENET5)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 28, 28, 1))
+        full = cnn_apply(params, LENET5, x)
+        q3 = cnn_apply(params, LENET5, x, weight_bits=3, act_bits=3)
+        assert not np.allclose(full, q3)
+
+
+class TestTraining:
+    def test_loss_decreases_and_accuracy(self):
+        ds = make_image_dataset(hw=28, channels=1, seed=0, n_train_per_class=64)
+        trained = train_cnn(LENET5, steps=60, dataset=ds, log_every=20)
+        first = trained.history[0]["loss"]
+        last = trained.history[-1]["loss"]
+        assert last < first * 0.5
+        assert trained.float_accuracy > 0.5  # 10-class chance = 0.1
+
+    def test_qat_trains(self):
+        """Quantization-aware fine-tuning (STE) makes progress at 4 bits."""
+        ds = make_image_dataset(hw=28, channels=1, seed=0, n_train_per_class=64)
+        trained = train_cnn(
+            LENET5, steps=60, dataset=ds, weight_bits=4, act_bits=4, log_every=20
+        )
+        assert trained.history[-1]["loss"] < trained.history[0]["loss"] * 0.7
+        assert np.isfinite(trained.history[-1]["loss"])

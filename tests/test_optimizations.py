@@ -1,0 +1,119 @@
+"""Correctness of the §Perf optimization paths: each flag must preserve
+semantics (µbatch accumulation == single batch; bf16-attn within tolerance;
+CE remat exact; pow2-QAT on-codebook)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.configs.base import ArchConfig
+from repro.launch.steps import make_train_step
+from repro.models import transformer as T
+from repro.optim import AdamWConfig, adamw_init
+
+
+def _tiny_cfg(**kw):
+    base = dict(
+        name="tiny", family="dense", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=128, dtype="float32", remat="none",
+    )
+    base.update(kw)
+    return ArchConfig(**base)
+
+
+class TestMicrobatching:
+    def test_mb_equals_single_batch(self):
+        """Gradient accumulation over µbatches == one full-batch step
+        (loss is mean-reduced, so grads average exactly)."""
+        cfg = _tiny_cfg()
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        opt = adamw_init(params, AdamWConfig())
+        batch = {
+            "tokens": jax.random.randint(
+                jax.random.PRNGKey(1), (8, 17), 0, cfg.vocab_size
+            )
+        }
+        step1 = make_train_step(cfg, mesh, microbatches=1)
+        step4 = make_train_step(cfg, mesh, microbatches=4)
+        p1, _, m1 = step1(params, opt, batch)
+        p4, _, m4 = step4(params, opt, batch)
+        assert np.isclose(float(m1["loss"]), float(m4["loss"]), rtol=1e-5)
+        for a, b in zip(
+            jax.tree_util.tree_leaves(p1), jax.tree_util.tree_leaves(p4)
+        ):
+            np.testing.assert_allclose(
+                np.asarray(a, np.float32), np.asarray(b, np.float32),
+                atol=1e-5,
+            )
+
+    def test_mb_indivisible_raises(self):
+        cfg = _tiny_cfg()
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        opt = adamw_init(params, AdamWConfig())
+        batch = {"tokens": jnp.zeros((6, 9), jnp.int32)}
+        step = make_train_step(cfg, mesh, microbatches=4)
+        with pytest.raises(ValueError, match="divisible"):
+            step(params, opt, batch)
+
+
+class TestOptFlagSemantics:
+    def _loss(self, cfg, seed=0):
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        batch = {
+            "tokens": jax.random.randint(
+                jax.random.PRNGKey(seed), (2, 33), 0, cfg.vocab_size
+            )
+        }
+        loss, _ = T.train_loss(params, cfg, batch, vocab_chunk=64)
+        return float(loss)
+
+    def test_ce_remat_exact(self):
+        cfg = _tiny_cfg()
+        cfg_r = dataclasses.replace(cfg, opt_ce_remat=True)
+        assert np.isclose(self._loss(cfg), self._loss(cfg_r), rtol=1e-6)
+
+    def test_bf16_attn_close(self):
+        cfg = _tiny_cfg()
+        cfg_b = dataclasses.replace(cfg, opt_no_f32_cast_attn=True)
+        assert np.isclose(self._loss(cfg), self._loss(cfg_b), rtol=5e-3)
+
+    def test_attnpin_noop_on_single_device(self):
+        """Without an ambient mesh the constraint is an exact no-op."""
+        cfg = _tiny_cfg()
+        cfg_p = dataclasses.replace(cfg, opt_shard_attn_batch=True)
+        assert np.isclose(self._loss(cfg), self._loss(cfg_p), rtol=1e-6)
+
+    def test_bf16_ssm_close(self):
+        cfg = get_arch("falcon-mamba-7b").scaled_down(n_layers=2)
+        cfg_b = dataclasses.replace(cfg, opt_bf16_ssm=True)
+        l1, l2 = self._loss(cfg), self._loss(cfg_b)
+        assert np.isfinite(l2)
+        assert abs(l1 - l2) / l1 < 0.02
+
+
+class TestPow2QAT:
+    def test_projected_weights_all_on_codebook(self):
+        from repro.core.quant.pow2 import project_pow2
+        from repro.data import make_image_dataset
+        from repro.models.cnn import LENET5
+        from repro.paper.train_cnn import train_cnn
+
+        ds = make_image_dataset(hw=28, channels=1, n_train_per_class=32,
+                                n_test_per_class=16, seed=0)
+        ft = train_cnn(LENET5, steps=20, dataset=ds, pow2_weights=True,
+                       log_every=10)
+        assert np.isfinite(ft.history[-1]["loss"])
+        for leaf in jax.tree_util.tree_leaves(ft.params):
+            if leaf.ndim > 1:
+                proj = project_pow2(leaf)
+                # Projection is idempotent -> deployed weights are 100%
+                # 4-bit shift codes.
+                np.testing.assert_allclose(
+                    np.asarray(project_pow2(proj)), np.asarray(proj),
+                    rtol=1e-6,
+                )

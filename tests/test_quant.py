@@ -1,0 +1,184 @@
+"""Unit + property tests for the quantization core (paper §4.1/§4.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quant import (
+    FixedPointSpec,
+    classify_params,
+    decode_pow2,
+    dequantize_fixed,
+    fake_quant,
+    fake_quant_ste,
+    pack_codes_u4,
+    pow2_codes,
+    project_pow2,
+    quantize_fixed,
+    search_bitwidth,
+    unpack_codes_u4,
+)
+from repro.core.quant.pow2 import POW2_MAX_MAG, project_pow2_ste
+
+
+class TestFixedPoint:
+    def test_roundtrip_exact_grid(self):
+        spec = FixedPointSpec(bits=6, frac_bits=3)
+        grid = jnp.arange(spec.qmin, spec.qmax + 1) * spec.scale
+        assert np.allclose(fake_quant(grid, spec), grid)
+
+    def test_clipping(self):
+        spec = FixedPointSpec(bits=4, frac_bits=2)
+        x = jnp.array([100.0, -100.0])
+        y = fake_quant(x, spec)
+        assert float(y[0]) == spec.max_value
+        assert float(y[1]) == spec.min_value
+
+    def test_for_tensor_covers_range(self):
+        x = jnp.array([-3.7, 0.1, 2.9])
+        spec = FixedPointSpec.for_tensor(x, bits=8)
+        assert spec.max_value >= 2.9
+        assert spec.min_value <= -3.7
+
+    def test_quantize_dequantize_error_bound(self):
+        spec = FixedPointSpec(bits=8, frac_bits=5)
+        x = jnp.linspace(spec.min_value, spec.max_value, 1001)
+        err = jnp.abs(fake_quant(x, spec) - x)
+        assert float(jnp.max(err)) <= spec.scale / 2 + 1e-6
+
+    def test_ste_gradient_identity_inside(self):
+        spec = FixedPointSpec(bits=6, frac_bits=3)
+        g = jax.grad(lambda x: jnp.sum(fake_quant_ste(x, spec)))(
+            jnp.array([0.3, -0.9, 1.2])
+        )
+        assert np.allclose(g, 1.0)
+
+    def test_ste_gradient_zero_outside(self):
+        spec = FixedPointSpec(bits=4, frac_bits=2)
+        g = jax.grad(lambda x: jnp.sum(fake_quant_ste(x, spec)))(
+            jnp.array([50.0, -50.0])
+        )
+        assert np.allclose(g, 0.0)
+
+    @given(
+        bits=st.integers(3, 10),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_property_quant_idempotent(self, bits, seed):
+        """fake_quant is a projection: applying twice == applying once."""
+        key = jax.random.PRNGKey(seed)
+        x = jax.random.normal(key, (64,))
+        spec = FixedPointSpec.for_tensor(x, bits=bits)
+        once = fake_quant(x, spec)
+        twice = fake_quant(once, spec)
+        assert np.allclose(once, twice)
+
+
+class TestPow2:
+    def test_classify_table1_style(self):
+        # frac_bits=2: scale 0.25. values: 0, 1, -1, 0.5 (pow2), 2 (pow2),
+        # 0.75 (other)
+        spec = FixedPointSpec(bits=6, frac_bits=2)
+        vals = jnp.array([0.0, 1.0, -1.0, 0.5, 2.0, 0.75])
+        stats = classify_params(quantize_fixed(vals, spec), spec.frac_bits)
+        assert stats.total == 6
+        assert np.isclose(stats.zero, 1 / 6)
+        assert np.isclose(stats.one, 2 / 6)
+        assert np.isclose(stats.pow2, 2 / 6)
+        assert np.isclose(stats.other, 1 / 6)
+        assert np.isclose(stats.multiplierless, 5 / 6)
+
+    def test_codes_roundtrip_on_codebook(self):
+        """Values already on the codebook decode exactly."""
+        scale_true = 0.37
+        mags = jnp.array([1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0])
+        w = jnp.concatenate([mags, -mags, jnp.zeros((2,))]) * scale_true
+        codes, scale = pow2_codes(w[None, :], channel_axis=0)
+        out = decode_pow2(codes, scale)[0]
+        assert np.allclose(out, w, rtol=1e-6)
+
+    def test_zero_channel_safe(self):
+        w = jnp.zeros((4, 8))
+        codes, scale = pow2_codes(w, channel_axis=0)
+        assert np.all(np.asarray(codes) == 0)
+        assert np.all(np.isfinite(np.asarray(scale)))
+        assert np.allclose(decode_pow2(codes, scale), 0.0)
+
+    def test_projection_log_relative_error(self):
+        """Every non-underflow weight lands within half an octave
+        (relative error <= 2^0.5 - 1 ~ 41% worst case, ~19% mid-bin)."""
+        key = jax.random.PRNGKey(0)
+        w = jax.random.normal(key, (16, 256))
+        p = project_pow2(w, channel_axis=0)
+        w_np, p_np = np.asarray(w), np.asarray(p)
+        scale = np.max(np.abs(w_np), axis=1, keepdims=True) / POW2_MAX_MAG
+        live = np.abs(w_np) >= scale * 2**-0.5
+        rel = np.abs(p_np[live] - w_np[live]) / np.abs(w_np[live])
+        assert rel.max() <= 2**0.5 - 1 + 1e-5
+
+    def test_projection_idempotent(self):
+        key = jax.random.PRNGKey(1)
+        w = jax.random.normal(key, (8, 64))
+        once = project_pow2(w, channel_axis=0)
+        twice = project_pow2(once, channel_axis=0)
+        assert np.allclose(once, twice, rtol=1e-6)
+
+    def test_ste_passes_gradient(self):
+        w = jnp.array([[0.3, -0.8, 0.02, 1.5]])
+        g = jax.grad(lambda w: jnp.sum(project_pow2_ste(w)))(w)
+        assert np.allclose(g, 1.0)
+
+    @given(seed=st.integers(0, 2**31 - 1), rows=st.integers(1, 8))
+    @settings(max_examples=20, deadline=None)
+    def test_property_codes_in_range(self, seed, rows):
+        w = jax.random.normal(jax.random.PRNGKey(seed), (rows, 32)) * 3.0
+        codes, scale = pow2_codes(w, channel_axis=0)
+        c = np.asarray(codes)
+        assert c.min() >= 0 and c.max() <= 15
+        # code 8 (sign bit set, zero magnitude) must never be produced
+        assert not np.any(c == 8)
+
+
+class TestPacking:
+    def test_roundtrip(self):
+        codes = jnp.arange(32, dtype=jnp.uint8).reshape(2, 16) % 16
+        assert np.array_equal(unpack_codes_u4(pack_codes_u4(codes)), codes)
+
+    def test_odd_axis_raises(self):
+        with pytest.raises(ValueError):
+            pack_codes_u4(jnp.zeros((3, 5), dtype=jnp.uint8))
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_property_roundtrip_random(self, seed):
+        rng = np.random.default_rng(seed)
+        codes = rng.integers(0, 16, size=(4, 64), dtype=np.uint8)
+        assert np.array_equal(unpack_codes_u4(pack_codes_u4(codes)), codes)
+
+    def test_packed_halves_bytes(self):
+        codes = jnp.zeros((8, 128), dtype=jnp.uint8)
+        assert pack_codes_u4(codes).size == codes.size // 2
+
+
+class TestBitwidthSearch:
+    def test_selects_knee(self):
+        curve = {2: 0.40, 3: 0.95, 4: 0.96, 5: 0.97, 6: 0.975}
+        res = search_bitwidth(
+            lambda b: curve[b],
+            float_accuracy=0.98,
+            bit_range=(2, 3, 4, 5, 6),
+            max_drop=0.04,
+        )
+        assert res.selected_bits == 3
+        assert res.curve()[0] == (2, 0.40)
+
+    def test_falls_back_to_max_bits(self):
+        res = search_bitwidth(
+            lambda b: 0.5,
+            float_accuracy=0.99,
+            bit_range=(2, 3, 4),
+            max_drop=0.01,
+        )
+        assert res.selected_bits == 4

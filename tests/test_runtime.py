@@ -1,0 +1,200 @@
+"""Fault-tolerance, checkpointing, and optimizer substrate tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
+from repro.optim import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    compress_grads_int8,
+    decompress_grads_int8,
+    global_norm,
+    linear_warmup_cosine,
+)
+from repro.optim.compression import ef_init
+from repro.runtime import (
+    ElasticMesh,
+    FaultInjector,
+    NodeFailure,
+    ResilientTrainer,
+    StragglerMonitor,
+)
+
+
+class TestCheckpointStore:
+    def test_roundtrip(self, tmp_path):
+        tree = {"a": jnp.arange(6).reshape(2, 3), "b": [jnp.ones(4), {"c": 2.5}]}
+        save_pytree(str(tmp_path / "ck"), tree)
+        out = load_pytree(str(tmp_path / "ck"), tree)
+        assert np.array_equal(out["a"], tree["a"])
+        assert np.array_equal(out["b"][0], tree["b"][0])
+
+    def test_shape_mismatch_raises(self, tmp_path):
+        save_pytree(str(tmp_path / "ck"), {"a": jnp.zeros(3)})
+        with pytest.raises(ValueError):
+            load_pytree(str(tmp_path / "ck"), {"a": jnp.zeros(4)})
+
+    def test_atomic_no_tmp_left(self, tmp_path):
+        save_pytree(str(tmp_path / "ck"), {"a": jnp.zeros(3)})
+        assert not os.path.exists(str(tmp_path / "ck.tmp"))
+
+    def test_manager_retention(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2, async_write=False)
+        for s in (10, 20, 30):
+            mgr.save(s, {"x": jnp.full(2, s)})
+        assert mgr.all_steps() == [20, 30]
+        state, step = mgr.restore({"x": jnp.zeros(2)})
+        assert step == 30
+        assert float(state["x"][0]) == 30
+
+    def test_manager_async(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=3, async_write=True)
+        mgr.save(1, {"x": jnp.ones(3)})
+        mgr.wait()
+        assert mgr.latest_step() == 1
+
+
+def _quadratic_problem():
+    """Tiny strongly-convex training problem for driver tests."""
+    target = jnp.array([1.0, -2.0, 3.0])
+    cfg = AdamWConfig(weight_decay=0.0)
+
+    def step_fn(state, batch, step):
+        params, opt = state
+
+        def loss(p):
+            return jnp.sum((p - target) ** 2) + 0.1 * jnp.sum(p * batch)
+
+        g = jax.grad(loss)(params)
+        params, opt = adamw_update(g, opt, params, cfg, jnp.asarray(0.05))
+        return (params, opt), {"loss": float(loss(params))}
+
+    def batch_fn(step):
+        return jnp.sin(jnp.arange(3) + step)  # deterministic by step
+
+    params0 = jnp.zeros(3)
+    state0 = (params0, adamw_init(params0, cfg))
+    return step_fn, batch_fn, state0
+
+
+class TestResilientTrainer:
+    def test_survives_failures_and_matches_clean_run(self, tmp_path):
+        step_fn, batch_fn, state0 = _quadratic_problem()
+
+        clean = ResilientTrainer(
+            step_fn, batch_fn,
+            CheckpointManager(str(tmp_path / "clean"), async_write=False),
+            ckpt_every=5,
+        )
+        clean_state, _ = clean.run(state0, num_steps=30)
+
+        faulty = ResilientTrainer(
+            step_fn, batch_fn,
+            CheckpointManager(str(tmp_path / "faulty"), async_write=False),
+            ckpt_every=5,
+            fault_injector=FaultInjector(fail_at_steps=(7, 19, 23)),
+        )
+        faulty_state, _ = faulty.run(state0, num_steps=30)
+        assert faulty.restarts == 3
+        # Deterministic replay: identical final parameters.
+        np.testing.assert_allclose(
+            np.asarray(faulty_state[0]), np.asarray(clean_state[0]), atol=1e-6
+        )
+
+    def test_cold_restart_without_checkpoint(self, tmp_path):
+        step_fn, batch_fn, state0 = _quadratic_problem()
+        tr = ResilientTrainer(
+            step_fn, batch_fn,
+            CheckpointManager(str(tmp_path), async_write=False),
+            ckpt_every=100,  # never checkpoints before failure
+            fault_injector=FaultInjector(fail_at_steps=(3,)),
+        )
+        state, _ = tr.run(state0, num_steps=10)
+        assert tr.restarts == 1  # restarted from step 0 and completed
+
+    def test_max_restarts_enforced(self, tmp_path):
+        step_fn, batch_fn, state0 = _quadratic_problem()
+
+        class AlwaysFail(FaultInjector):
+            def check(self, step):
+                if step == 2:
+                    raise NodeFailure("flaky node")
+
+        tr = ResilientTrainer(
+            step_fn, batch_fn,
+            CheckpointManager(str(tmp_path), async_write=False),
+            ckpt_every=100,
+            max_restarts=2,
+            fault_injector=AlwaysFail(),
+        )
+        with pytest.raises(RuntimeError, match="max_restarts"):
+            tr.run(state0, num_steps=10)
+
+
+class TestStraggler:
+    def test_flags_outlier(self):
+        mon = StragglerMonitor(threshold=3.0)
+        for s in range(10):
+            mon.record(s, 0.10 + 0.001 * (s % 3))
+        assert mon.record(10, 0.50)  # 5x median
+        assert not mon.record(11, 0.101)
+        assert len(mon.flagged) == 1
+
+
+class TestElasticMesh:
+    def test_best_shape(self):
+        em = ElasticMesh()
+        assert em.best_shape(8, model_parallel=4) == (2, 4)
+        assert em.best_shape(7, model_parallel=4) == (7, 1)  # degrade to DP
+
+    def test_remesh_devices(self):
+        em = ElasticMesh()
+        mesh = em.remesh(jax.devices(), model_parallel=1)
+        assert set(mesh.axis_names) == {"data", "model"}
+
+
+class TestOptim:
+    def test_adamw_converges(self):
+        cfg = AdamWConfig(weight_decay=0.0)
+        p = jnp.array([5.0, -5.0])
+        st = adamw_init(p, cfg)
+        for _ in range(200):
+            g = 2 * p
+            p, st = adamw_update(g, st, p, cfg, jnp.asarray(0.1))
+        assert float(jnp.max(jnp.abs(p))) < 0.1
+
+    def test_clip(self):
+        g = {"a": jnp.full(4, 10.0)}
+        clipped, norm = clip_by_global_norm(g, 1.0)
+        assert float(norm) == pytest.approx(20.0)
+        assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+    def test_schedule_warmup_peak(self):
+        f = linear_warmup_cosine(1.0, warmup_steps=10, total_steps=100)
+        assert float(f(jnp.asarray(0))) == pytest.approx(0.0)
+        assert float(f(jnp.asarray(10))) == pytest.approx(1.0, rel=1e-2)
+        assert float(f(jnp.asarray(100))) < 0.2
+
+    def test_int8_compression_error_feedback(self):
+        g = {"w": jnp.linspace(-1, 1, 64)}
+        ef = ef_init(g)
+        codes, scales, ef = compress_grads_int8(g, ef)
+        assert codes["w"].dtype == jnp.int8
+        out = decompress_grads_int8(codes, scales)
+        # <1% of max-magnitude error per element at int8
+        assert float(jnp.max(jnp.abs(out["w"] - g["w"]))) < 0.01
+        # error feedback captured the residual
+        assert float(global_norm(ef.residual)) > 0
+
+    def test_int8_payload_is_quarter(self):
+        g = {"w": jnp.zeros(1024, jnp.float32)}
+        codes, scales, _ = compress_grads_int8(g)
+        assert codes["w"].size * codes["w"].dtype.itemsize * 4 == (
+            g["w"].size * 4
+        )
