@@ -1,6 +1,10 @@
 """Benchmark entry point: one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV. Invoke as
+Prints ``name,us_per_call,derived`` CSV and writes the kernel rows to
+``BENCH_kernels.json`` (machine-readable, one file per run: schema
+``{"benchmark", "jax_backend", "rows": [{name, us_per_call, derived, and
+per-row extras such as path/speedup_vs_seed}]}``) so the perf trajectory
+of the Pallas kernels is recorded across PRs. Invoke as
 ``PYTHONPATH=src python -m benchmarks.run`` (add ``--full`` to run the
 slow full Fig. 3 sweep for all three CNNs and the full roofline dump).
 """
@@ -8,6 +12,7 @@ from __future__ import annotations
 
 import argparse
 import csv
+import json
 import sys
 
 
@@ -34,7 +39,23 @@ def main() -> None:
     rows += fig3_bitwidth.run(
         networks=("lenet5", "cifar10", "svhn") if args.full else ("lenet5",)
     )
-    rows += kernel_bench.run()
+    kernel_rows = kernel_bench.run()
+    rows += kernel_rows
+
+    # Machine-readable kernel perf record (seed path vs fused path).
+    import jax
+
+    with open("BENCH_kernels.json", "w") as f:
+        json.dump(
+            {
+                "benchmark": "kernels",
+                "jax_backend": jax.default_backend(),
+                "rows": kernel_rows,
+            },
+            f,
+            indent=2,
+        )
+    print("# wrote BENCH_kernels.json", file=sys.stderr)
 
     # Roofline summary rows (from the dry-run artifacts, if present).
     try:

@@ -27,10 +27,12 @@ from repro.core.dhm import (
 )
 from repro.core.dhm.pipeline import (
     PipelineConfig,
+    make_conv_stage,
     pipeline_forward,
     stack_stage_params,
 )
 from repro.core.dhm.resources import ParamClassFractions
+from repro.kernels.stream_conv import stream_conv_block, stream_conv_block_ref
 from repro.models.cnn import LENET5
 from repro.paper.analysis import classify_model
 from repro.paper.train_cnn import evaluate, get_trained_cnn
@@ -72,30 +74,66 @@ def main():
           f"{pa.boundaries}, bottleneck {pa.bottleneck/1e3:.0f}k flops, "
           f"pipeline efficiency {br.pipeline_efficiency:.2f}")
 
-    # Stream µbatches through a 4-stage MLP pipeline on 4 virtual devices —
-    # each stage has private devices (DHM: private resources per actor).
+    # Stream µbatches through a 4-stage pipeline on 4 virtual devices —
+    # each stage has private devices (DHM: private resources per actor) and
+    # each stage body is one fused streaming-conv actor chain
+    # (conv -> bias -> tanh as a single kernel call, SAME, C == N so the
+    # activation shape is homogeneous across stages).
     mesh = jax.make_mesh((4,), ("stage",))
-    d = 64
+    hw, ch, kk = 8, 4, 3
     keys = jax.random.split(jax.random.PRNGKey(0), 4)
     stage_params = stack_stage_params(
-        [{"w": jax.random.normal(k, (d, d)) * 0.2} for k in keys]
+        [
+            {
+                "w": jax.random.normal(k, (kk, kk, ch, ch)) * 0.2,
+                "b": jnp.zeros((ch,)),
+            }
+            for k in keys
+        ]
     )
-    mbs = jax.random.normal(jax.random.PRNGKey(1), (8, 4, d))
-
-    def stage_fn(p, x):
-        return jnp.tanh(x @ p["w"])
+    mbs = jax.random.normal(jax.random.PRNGKey(1), (8, 2, hw, hw, ch))
+    stage_fn = make_conv_stage(padding="SAME", act="tanh", pool=0)
 
     t0 = time.time()
     out = pipeline_forward(
         stage_fn, stage_params, mbs, mesh=mesh, cfg=PipelineConfig(4, 8)
     )
-    ref = mbs
+    ref = mbs.reshape(-1, hw, hw, ch)
     for i in range(4):
-        ref = jnp.tanh(ref @ stage_params["w"][i])
+        ref = stream_conv_block_ref(
+            ref, stage_params["w"][i], stage_params["b"][i],
+            padding="SAME", act="tanh", pool=0,
+        )
+    ref = ref.reshape(mbs.shape)
     ok = np.allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
-    print(f"  4-stage shard_map pipeline: correct={ok} "
+    print(f"  4-stage shard_map conv pipeline: correct={ok} "
           f"({time.time()-t0:.2f}s, bubble={PipelineConfig(4,8).n_stages-1}"
           f"/{8+3} ticks)")
+
+    print("\n== 5. Fused streaming-conv kernel (one matmul / row block) ==")
+    # LeNet5 conv1 as one fused actor chain: conv(20,5) -> bias -> 2x2
+    # max-pool -> tanh, straight from the trained parameters.
+    p0 = trained.params["conv"][0]
+    x = jnp.asarray(
+        np.random.default_rng(0).normal(size=(8, 28, 28, 1)), jnp.float32
+    )
+    fused = stream_conv_block(
+        x, p0["w"], p0["b"], padding="VALID", act="tanh", pool=2
+    )
+    unfused = stream_conv_block_ref(
+        x, p0["w"], p0["b"], padding="VALID", act="tanh", pool=2
+    )
+    ok = np.allclose(np.asarray(fused), np.asarray(unfused), atol=1e-4)
+    fused.block_until_ready()
+    t0 = time.time()
+    for _ in range(5):
+        out = stream_conv_block(
+            x, p0["w"], p0["b"], padding="VALID", act="tanh", pool=2
+        )
+    out.block_until_ready()
+    us = (time.time() - t0) / 5 * 1e6
+    print(f"  fused conv+bias+tanh+pool {tuple(x.shape)} -> "
+          f"{tuple(fused.shape)}: correct={ok}, {us:.0f} us/call")
     print("OK")
 
 

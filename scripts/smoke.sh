@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# One-command smoke: tier-1 test suite + the (non --full) benchmark run.
+# Usage: scripts/smoke.sh
+# Leaves BENCH_kernels.json and BENCH.csv in the repo root.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== benchmarks (non-full) =="
+python -m benchmarks.run | tee BENCH.csv
+
+echo "== kernel perf record =="
+python - <<'EOF'
+import json
+rec = json.load(open("BENCH_kernels.json"))
+paths = {r.get("path") for r in rec["rows"]}
+assert {"seed", "fused"} <= paths, f"missing kernel paths in record: {paths}"
+fused = next(r for r in rec["rows"] if r.get("path") == "fused")
+print(f"fused stream conv: {fused['us_per_call']:.0f} us/call, "
+      f"x{fused['speedup_vs_seed']:.1f} vs seed interpret path")
+EOF
+echo "SMOKE OK"

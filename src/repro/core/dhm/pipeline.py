@@ -16,7 +16,9 @@ always-firing actors.
 
 The stage body must be shape-homogeneous (same activation shape in/out),
 which holds for transformer stacks and for the CNN topologies once grouped
-into stages by the mapper.
+into stages by the mapper. ``make_conv_stage`` builds such a body from the
+fused streaming-conv kernel (conv+bias+act in one kernel call), so each
+pipeline stage is itself a fused DHM actor chain.
 """
 from __future__ import annotations
 
@@ -119,13 +121,26 @@ def pipeline_forward(
         jax.tree_util.tree_map(lambda _: P(ax), stage_params),
         P(),  # µbatch stream replicated (only stage 0 reads it)
     )
-    shmap = jax.shard_map(
-        _per_stage,
-        mesh=mesh,
-        in_specs=in_specs,
-        out_specs=P(ax),
-        check_vma=False,
-    )
+    # jax.shard_map only exists on newer jax; fall back to the experimental
+    # home (same API modulo the check_rep/check_vma rename).
+    if hasattr(jax, "shard_map"):
+        shmap = jax.shard_map(
+            _per_stage,
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=P(ax),
+            check_vma=False,
+        )
+    else:
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        shmap = _shard_map(
+            _per_stage,
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=P(ax),
+            check_rep=False,
+        )
     stacked = shmap(stage_params, microbatches)  # (S, M, mb, ...)
     return stacked[-1]
 
@@ -135,3 +150,37 @@ def stack_stage_params(per_stage_params: list):
     return jax.tree_util.tree_map(
         lambda *xs: jnp.stack(xs, axis=0), *per_stage_params
     )
+
+
+def make_conv_stage(
+    *,
+    padding: str = "SAME",
+    act: str = "relu",
+    pool: int = 0,
+    backend: str | None = None,
+):
+    """Build a pipeline stage body from the fused streaming-conv kernel.
+
+    The returned ``stage_fn(params, x)`` runs one DHM actor chain —
+    conv -> bias -> activation (-> pool) — as a single fused kernel call
+    on ``params = {"w": (K, K, C, N), "b": (N,)}``. With SAME padding,
+    ``pool=0`` and C == N the stage is shape-homogeneous, which is what
+    ``pipeline_forward`` requires of its stage bodies.
+    """
+    from repro.kernels.backends import DEFAULT_BACKEND
+    from repro.kernels.stream_conv import stream_conv_block
+
+    resolved = DEFAULT_BACKEND if backend is None else backend
+
+    def stage_fn(params, x):
+        return stream_conv_block(
+            x,
+            params["w"],
+            params["b"],
+            padding=padding,
+            act=act,
+            pool=pool,
+            backend=resolved,
+        )
+
+    return stage_fn

@@ -2,11 +2,16 @@
 
 - ``pow2_matmul``: weight-only pow2-codebook quantized matmul — the TPU
   translation of the paper's constant-specialized multipliers (§4.2).
-- ``stream_conv``: line-buffer streaming convolution — the paper's dataflow
-  conv engine [10] with VMEM-resident sliding windows.
+- ``stream_conv``: row-blocked streaming convolution with a fused
+  conv -> bias -> activation -> 2x2-max-pool epilogue — the paper's
+  dataflow conv/activation/pool actor chain [10] as one kernel, ONE MXU
+  matmul per row block.
 
-Each kernel ships as ``<name>.py`` (pl.pallas_call + BlockSpec),
+Each kernel ships as the kernel module (pl.pallas_call + BlockSpec),
 ``ops.py`` (jit'd public wrapper) and ``ref.py`` (pure-jnp oracle).
-On this CPU container kernels run in interpret mode; on TPU the same
-pallas_call lowers to Mosaic.
+Backends are selected per call (``backends.py``): ``pallas`` is the
+compiled default — Mosaic on TPU, an XLA lowering of the same algorithm on
+platforms where compiled Pallas is unavailable (XLA:CPU) — and
+``pallas_interpret`` runs the exact kernel program through the Pallas
+interpreter as the correctness oracle.
 """

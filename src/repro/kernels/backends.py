@@ -1,0 +1,45 @@
+"""Backend selection shared by the kernel wrappers.
+
+Every public kernel wrapper takes an explicit ``backend=`` enum:
+
+  ``pallas``           compiled Pallas — the production path. On TPU this
+                       lowers through Mosaic. On backends where compiled
+                       Pallas is unavailable (XLA:CPU only supports
+                       interpret mode), the wrapper dispatches to an
+                       XLA-compiled implementation of the *same* algorithm,
+                       so ``pallas`` always means "compiled, fast".
+  ``pallas_interpret`` the Pallas kernel body run through the Pallas
+                       interpreter — slow, but executes the exact kernel
+                       program; kept as the correctness oracle in tests.
+  ``ref``              the pure-jnp reference (``lax.conv`` / dense matmul).
+
+Unknown strings raise: a typo like ``"palas_interpret"`` must never silently
+select a different path.
+"""
+from __future__ import annotations
+
+import jax
+
+VALID_BACKENDS = ("pallas", "pallas_interpret", "ref")
+
+# Compiled by default. Interpret mode stays available as the oracle.
+DEFAULT_BACKEND = "pallas"
+
+
+def validate_backend(backend: str) -> str:
+    """Raise ValueError on anything outside the enum; return it unchanged."""
+    if backend not in VALID_BACKENDS:
+        raise ValueError(
+            f"unknown backend {backend!r}; expected one of {VALID_BACKENDS}"
+        )
+    return backend
+
+
+def compiled_pallas_available() -> bool:
+    """Whether `pallas_call(interpret=False)` can lower on this platform.
+
+    Mosaic compiles on TPU; XLA:CPU (and GPU without Triton here) only
+    supports the interpreter, so the ``pallas`` backend falls back to the
+    XLA rendering of the same algorithm there.
+    """
+    return jax.default_backend() == "tpu"

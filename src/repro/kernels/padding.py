@@ -1,0 +1,29 @@
+"""Shared padding/rounding helpers for the kernel wrappers.
+
+Zero padding is exact for every kernel here: zero input rows/channels
+contribute zero partial sums, and zero pow2 codes decode to 0.0.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def round_up(x: int, mult: int) -> int:
+    """Smallest multiple of ``mult`` >= x."""
+    return -(-x // mult) * mult
+
+
+def pad_axis_to(x: jax.Array, axis: int, target: int) -> jax.Array:
+    """Zero-pad ``axis`` up to ``target`` elements (no-op if already there)."""
+    pad = target - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def pad_axis_to_multiple(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    """Zero-pad ``axis`` up to the next multiple of ``mult``."""
+    return pad_axis_to(x, axis, round_up(x.shape[axis], mult))

@@ -1,7 +1,13 @@
 """Public jit'd wrapper for the pow2 matmul: quantization, padding to block
-multiples, and dispatch to the Pallas kernel (or the jnp reference on
-platforms without Pallas support — XLA:CPU compile of the 512-device dry-run
-uses the reference path; the kernel is validated in interpret mode)."""
+multiples, and dispatch by backend (see ``repro.kernels.backends``).
+
+``backend="pallas"`` (the default) means compiled: Mosaic-compiled Pallas
+on TPU; on platforms without compiled Pallas (XLA:CPU) it lowers the same
+decode-then-matmul semantics through the XLA reference, so the default is
+always a compiled path. ``pallas_interpret`` runs the kernel body through
+the Pallas interpreter (the correctness oracle); ``ref`` forces the jnp
+reference. Unknown backend strings raise.
+"""
 from __future__ import annotations
 
 import functools
@@ -11,6 +17,12 @@ import jax.numpy as jnp
 
 from repro.core.quant.packing import pack_codes_u4
 from repro.core.quant.pow2 import pow2_codes
+from repro.kernels.backends import (
+    DEFAULT_BACKEND,
+    compiled_pallas_available,
+    validate_backend,
+)
+from repro.kernels.padding import pad_axis_to_multiple
 from repro.kernels.pow2_matmul.pow2 import pow2_matmul_pallas
 from repro.kernels.pow2_matmul.ref import pow2_matmul_ref
 
@@ -28,16 +40,6 @@ def quantize_weights(w: jax.Array):
     return pack_codes_u4(codes), scale.reshape(-1)
 
 
-def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
-    size = x.shape[axis]
-    pad = (-size) % mult
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
-
-
 @functools.partial(
     jax.jit,
     static_argnames=("block_m", "block_n", "block_k", "out_dtype", "backend"),
@@ -51,22 +53,26 @@ def pow2_matmul(
     block_n: int = 128,
     block_k: int = 128,
     out_dtype=jnp.float32,
-    backend: str = "pallas_interpret",  # pallas | pallas_interpret | ref
+    backend: str = DEFAULT_BACKEND,  # pallas | pallas_interpret | ref
 ) -> jax.Array:
     """out[m, n] = sum_k x[m, k] * decode(codes[k, n]) * scale[n].
 
-    Shapes need not be block-aligned; inputs are zero-padded (zero codes
-    decode to 0.0, so padding is exact).
+    Shapes need not be block-aligned; inputs are zero-padded here (honoring
+    the kernel's "pad in ops.pow2_matmul" contract — zero codes decode to
+    0.0, so padding is exact) and the result is sliced back to (M, N).
     """
-    if backend == "ref":
+    validate_backend(backend)
+    if backend == "ref" or (
+        backend == "pallas" and not compiled_pallas_available()
+    ):
         return pow2_matmul_ref(x, packed, scale, out_dtype=out_dtype)
     m, k = x.shape
     n = packed.shape[1] * 2
     bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
     bn = max(2, bn - (bn % 2))
-    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
-    wp = _pad_to(_pad_to(packed, 0, bk), 1, bn // 2)
-    sp = _pad_to(scale, 0, bn)
+    xp = pad_axis_to_multiple(pad_axis_to_multiple(x, 0, bm), 1, bk)
+    wp = pad_axis_to_multiple(pad_axis_to_multiple(packed, 0, bk), 1, bn // 2)
+    sp = pad_axis_to_multiple(scale, 0, bn)
     out = pow2_matmul_pallas(
         xp,
         wp,

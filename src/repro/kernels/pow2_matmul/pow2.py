@@ -83,7 +83,7 @@ def pow2_matmul_pallas(
     block_n: int = 128,
     block_k: int = 128,
     out_dtype=jnp.float32,
-    interpret: bool = True,
+    interpret: bool = False,
 ) -> jax.Array:
     m, k = x.shape
     k2, n_half = packed.shape

@@ -1,4 +1,7 @@
-"""Public wrapper for the fused SSM scan."""
+"""Public wrapper for the fused SSM scan. Backend enum as in
+``repro.kernels.backends``: ``pallas`` (compiled default; falls back to
+the XLA reference scan where compiled Pallas is unavailable),
+``pallas_interpret`` (kernel-body oracle), ``ref``."""
 from __future__ import annotations
 
 import functools
@@ -6,6 +9,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.backends import (
+    DEFAULT_BACKEND,
+    compiled_pallas_available,
+    validate_backend,
+)
 from repro.kernels.ssm_scan.ref import ssm_scan_ref
 from repro.kernels.ssm_scan.scan import ssm_scan_pallas
 
@@ -13,11 +21,14 @@ from repro.kernels.ssm_scan.scan import ssm_scan_pallas
 @functools.partial(jax.jit, static_argnames=("block_d", "backend"))
 def ssm_scan(
     x, dt, b, c, a, d_skip, *, block_d: int = 256,
-    backend: str = "pallas_interpret",
+    backend: str = DEFAULT_BACKEND,
 ):
     """Fused Mamba-1 selective scan: y_t = (h_t . C_t) + D*x_t with
     h_t = exp(dt_t A) h_{t-1} + (dt_t x_t) B_t. States stay in VMEM."""
-    if backend == "ref":
+    validate_backend(backend)
+    if backend == "ref" or (
+        backend == "pallas" and not compiled_pallas_available()
+    ):
         return ssm_scan_ref(x, dt, b, c, a, d_skip)
     di = x.shape[-1]
     bd = block_d

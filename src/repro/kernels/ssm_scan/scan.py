@@ -43,9 +43,12 @@ def _ssm_scan_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, dskip_ref, y_ref,
         h = dta * h_ref[...] + (dt_t * x_t)[:, None] * b_t[None, :]
         h_ref[...] = h
         y_t = jnp.sum(h * c_t[None, :], axis=-1) + d_skip * x_t
+        # All-Slice indices: mixing raw ints/slices into the store index
+        # breaks the state-discharge rule on some jax versions.
         pl.store(
-            y_ref, (0, pl.dslice(t, 1), slice(None)),
-            y_t.astype(y_ref.dtype)[None],
+            y_ref,
+            (pl.dslice(0, 1), pl.dslice(t, 1), pl.dslice(0, y_t.shape[0])),
+            y_t.astype(y_ref.dtype)[None, None],
         )
         return 0
 

@@ -1,125 +1,190 @@
-"""Pallas TPU kernel: streaming line-buffer convolution (paper [10], §5).
+"""Pallas TPU kernel: row-blocked streaming convolution with a fused
+conv -> bias -> activation -> pool epilogue (paper [10], §5).
 
-The FPGA conv engine keeps (K-1) image lines in registers and slides a KxK
-window one pixel per clock. The TPU adaptation keeps a (K-1)-row **line
-buffer in VMEM scratch** and streams the image row-by-row through the grid:
+The FPGA conv engine of the paper chains three always-firing actors —
+convolution, activation, pooling — with no intermediate frame storage. The
+TPU rendering streams the image through the grid in **row blocks** and runs
+the whole actor chain on each block before anything is written back:
 
-  grid = (B, H_out): one output row per step. Each step
-    1. loads ONE new input row (the BlockSpec pipeline streams rows
-       HBM -> VMEM, the analogue of the pixel stream),
-    2. assembles the KxK window rows from [line buffer ++ new row],
-    3. computes the output row with K*K shifted row-segment matmuls
-       against the (C, N) tap matrices — the fully-unrolled multiplier
-       array of Fig. 1-c, with the MXU playing the adder tree,
-    4. rotates the line buffer by one row.
+  grid = (B, H_out/R, N/bn, C/bc): one R-row block of output per
+  (batch, row-block, feature-block) cell, accumulated over channel blocks.
+  Each step
 
-The weight tensor is expected as (K*K, C, N) — taps flattened — so each tap
-is one MXU matmul; channels C and features N are the hardware-aligned dims.
-VALID padding, stride 1. The line buffer makes the kernel's HBM traffic
-exactly one read of x and one write of y (no im2col inflation): bytes =
-B*H*W*C + B*H_out*W_out*N elements, matching the FPGA engine's
-zero-intermediate-storage property.
+    1. receives R+K-1 input rows through the BlockSpec pipeline (an R-row
+       body block plus a (K-1)-row halo — the halo is the line buffer: the
+       only rows ever fetched twice),
+    2. assembles the K*K shifted views into ONE (R*W_out, K*K*bc) operand
+       and issues a SINGLE MXU matmul against the flattened
+       (K*K*bc, bn) tap matrix — the fully-unrolled multiplier array of
+       Fig. 1-c collapsed into one systolic pass, not K*K per-tap dots,
+    3. on the last channel block, applies the fused epilogue in VMEM:
+       + bias, activation (relu/tanh), 2x2 max-pool — conv, activation and
+       pooling actors as one hardware pipeline stage,
+    4. writes back only the pooled block: HBM traffic is one read of x
+       (plus the (K-1)-row halo), zero intermediate conv/activation frames,
+       and a 4x-smaller pooled output.
+
+Weights are expected as (K*K, C, N) — taps flattened, channels C and
+features N as the hardware-aligned dims. VALID padding, stride 1 (SAME is
+padded by the host wrapper, as the FPGA engine pads the pixel stream at
+frame edges). Channel blocks (``block_c``) and feature blocks (``block_n``)
+bound the VMEM working set so CIFAR/SVHN-sized layers fit; row blocks
+(``block_r``) amortize grid overhead and feed the MXU tall operands.
 """
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.padding import pad_axis_to, round_up
+from repro.kernels.stream_conv.epilogue import apply_epilogue, validate_epilogue
 
-def _stream_conv_kernel(x_row_ref, w_ref, o_ref, lbuf_ref, *, k: int, w_out: int):
-    """One grid step: consume input row (r + K - 1), emit output row r."""
-    new_row = x_row_ref[0, 0]  # (W, C) — the row streamed in this step
 
-    # Window rows: lbuf holds rows r .. r+K-2, new_row is row r+K-1.
-    acc = jnp.zeros((w_out, o_ref.shape[-1]), jnp.float32)
+def _kernel_body(
+    x_blk, w_ref, b_ref, o_ref, acc_ref, *, k, r, w_out, act, pool, out_dtype
+):
+    """Shared body: x_blk is the (r + k - 1, W, bc) window block."""
+    cb = pl.program_id(3)
+    n_cb = pl.num_programs(3)
+
+    @pl.when(cb == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    bc = x_blk.shape[-1]
+    # K*K shifted views of the block -> one tall operand. Pure data
+    # movement (VPU); the contraction below is the only matmul.
+    taps = []
     for ki in range(k):
-        row = lbuf_ref[ki] if ki < k - 1 else new_row
+        band = jax.lax.slice_in_dim(x_blk, ki, ki + r, axis=0)  # (r, W, bc)
         for kj in range(k):
-            seg = jax.lax.dynamic_slice_in_dim(row, kj, w_out, axis=0)
-            tap = w_ref[ki * k + kj]  # (C, N)
-            acc += jnp.dot(
-                seg.astype(jnp.float32),
-                tap.astype(jnp.float32),
-                preferred_element_type=jnp.float32,
-            )
-    o_ref[0, 0] = acc.astype(o_ref.dtype)
+            taps.append(jax.lax.slice_in_dim(band, kj, kj + w_out, axis=1))
+    patches = jnp.stack(taps, axis=2)  # (r, w_out, k*k, bc)
+    operand = patches.reshape(r * w_out, k * k * bc).astype(jnp.float32)
+    w_flat = w_ref[...].reshape(k * k * bc, -1).astype(jnp.float32)
+    # ONE MXU matmul per row block (per channel-block accumulation step).
+    acc_ref[...] += jnp.dot(
+        operand, w_flat, preferred_element_type=jnp.float32
+    ).reshape(r, w_out, -1)
 
-    # Rotate the line buffer: drop row r, append row r+K-1.
-    for ki in range(k - 2):
-        lbuf_ref[ki] = lbuf_ref[ki + 1]
-    if k >= 2:
-        lbuf_ref[k - 2] = new_row
+    @pl.when(cb == n_cb - 1)
+    def _write():
+        y = apply_epilogue(acc_ref[...], b_ref[...], act=act, pool=pool)
+        o_ref[0] = y.astype(out_dtype)
 
 
-def _fill_kernel(x_rows_ref, lbuf_ref):
-    """Pre-load the first K-1 rows of image b into the line buffer."""
-    lbuf_ref[...] = x_rows_ref[0]
+def _fused_kernel_halo(x_cur_ref, x_halo_ref, w_ref, b_ref, o_ref, acc_ref, **kw):
+    x_blk = jnp.concatenate([x_cur_ref[0], x_halo_ref[0]], axis=0)
+    _kernel_body(x_blk, w_ref, b_ref, o_ref, acc_ref, **kw)
+
+
+def _fused_kernel_k1(x_cur_ref, w_ref, b_ref, o_ref, acc_ref, **kw):
+    _kernel_body(x_cur_ref[0], w_ref, b_ref, o_ref, acc_ref, **kw)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("k", "block_n", "out_dtype", "interpret")
+    jax.jit,
+    static_argnames=(
+        "k", "act", "pool", "block_r", "block_c", "block_n", "out_dtype",
+        "interpret",
+    ),
 )
-def stream_conv2d_pallas(
-    x: jax.Array,  # (B, H, W, C)
+def stream_conv_fused_pallas(
+    x: jax.Array,  # (B, H, W, C), already SAME-padded if needed
     w_taps: jax.Array,  # (K*K, C, N)
+    bias: jax.Array,  # (N,)
     *,
     k: int,
+    act: str = "none",
+    pool: int = 0,
+    block_r: int = 8,
+    block_c: int = 0,  # 0 = full C per step
+    block_n: int = 0,  # 0 = full N per step
     out_dtype=jnp.float32,
-    block_n: int = 0,  # unused placeholder for tuning API symmetry
-    interpret: bool = True,
+    interpret: bool = False,
 ) -> jax.Array:
+    """Fused streaming conv. VALID, stride 1; pool in {0, 2}; act in
+    {none, relu, tanh}. Returns (B, H', W', N) where H', W' are the conv
+    output dims, halved (floor) when pool == 2."""
     b, h, wd, c = x.shape
     kk, c2, n = w_taps.shape
     if kk != k * k or c2 != c:
         raise ValueError(f"w_taps {w_taps.shape} inconsistent with k={k}, C={c}")
+    if bias.shape != (n,):
+        raise ValueError(f"bias must be ({n},), got {bias.shape}")
+    validate_epilogue(act, pool)
     h_out, w_out = h - k + 1, wd - k + 1
     if h_out <= 0 or w_out <= 0:
         raise ValueError(f"image {h}x{wd} too small for k={k}")
+    if pool == 2 and (h_out < 2 or w_out < 2):
+        raise ValueError(f"conv output {h_out}x{w_out} too small for 2x2 pool")
 
-    kernel = functools.partial(_stream_conv_kernel, k=k, w_out=w_out)
+    # Row block: a multiple of the halo height (so the halo BlockSpec's
+    # element offset (rb+1)*r is expressible in halo-block units) and of the
+    # pool stride, clipped to the smallest cover of h_out.
+    hb = k - 1
+    mult = 1
+    if hb:
+        mult = math.lcm(mult, hb)
+    if pool == 2:
+        mult = math.lcm(mult, 2)
+    r = round_up(max(block_r, mult), mult)
+    r = min(r, round_up(h_out, mult))
+    n_rb = -(-h_out // r)
 
-    # Two-phase schedule per image: a fill pass primes the line buffer with
-    # rows [0, K-1), then the stream pass consumes one row per output row.
-    # Phases are fused into one grid by handing the stream pass row
-    # (r + K - 1) and priming the buffer when r == 0 via input_output_aliasing
-    # of a scratch; Pallas TPU scratch persists across grid steps of the same
-    # pallas_call, so the fill runs as the first grid column (r == 0 loads
-    # rows 0..K-2 through a second input spec).
-    def _kernel_with_fill(x_row_ref, x_fill_ref, w_ref, o_ref, lbuf_ref):
-        r = pl.program_id(1)
+    bc = min(block_c, c) if block_c > 0 else c
+    bn = min(block_n, n) if block_n > 0 else n
+    c_pad = round_up(c, bc)
+    n_pad = round_up(n, bn)
 
-        @pl.when(r == 0)
-        def _fill():
-            lbuf_ref[...] = x_fill_ref[0]
+    # Host-side zero padding: rows so every body+halo block is in bounds
+    # (zero rows only feed discarded outputs), channels/features so the
+    # block grid divides evenly (zero channels contribute zero partials).
+    h_rows = n_rb * r + hb
+    xp = pad_axis_to(pad_axis_to(x, 1, h_rows), 3, c_pad)
+    wp = pad_axis_to(pad_axis_to(w_taps, 1, c_pad), 2, n_pad)
+    bp = pad_axis_to(bias, 0, n_pad)
 
-        kernel(x_row_ref, w_ref, o_ref, lbuf_ref)
+    r_out = r // 2 if pool == 2 else r
+    w_pool = w_out // 2 if pool == 2 else w_out
+    h_keep = h_out // 2 if pool == 2 else h_out
 
-    grid = (b, h_out)
-    return pl.pallas_call(
-        _kernel_with_fill,
+    grid = (b, n_rb, n_pad // bn, c_pad // bc)
+    kw = dict(k=k, r=r, w_out=w_out, act=act, pool=pool, out_dtype=out_dtype)
+
+    in_specs = [
+        pl.BlockSpec((1, r, wd, bc), lambda bb, rb, nb, cb: (bb, rb, 0, cb)),
+    ]
+    if hb:
+        stride = r // hb
+        in_specs.append(
+            pl.BlockSpec(
+                (1, hb, wd, bc),
+                lambda bb, rb, nb, cb: (bb, (rb + 1) * stride, 0, cb),
+            )
+        )
+        kernel = functools.partial(_fused_kernel_halo, **kw)
+    else:
+        kernel = functools.partial(_fused_kernel_k1, **kw)
+    in_specs += [
+        pl.BlockSpec((k * k, bc, bn), lambda bb, rb, nb, cb: (0, cb, nb)),
+        pl.BlockSpec((bn,), lambda bb, rb, nb, cb: (nb,)),
+    ]
+
+    out = pl.pallas_call(
+        kernel,
         grid=grid,
-        in_specs=[
-            # One input row per step: row (r + K - 1) of image b.
-            pl.BlockSpec(
-                (1, 1, wd, c), lambda bb, r: (bb, r + k - 1, 0, 0)
-            ),
-            # Fill rows [0, K-1) of image b (same block every r; only read
-            # at r == 0).
-            pl.BlockSpec(
-                (1, max(1, k - 1), wd, c), lambda bb, r: (bb, 0, 0, 0)
-            ),
-            pl.BlockSpec((k * k, c, n), lambda bb, r: (0, 0, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, w_out, n), lambda bb, r: (bb, r, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, h_out, w_out, n), out_dtype),
-        scratch_shapes=[pltpu.VMEM((max(1, k - 1), wd, c), x.dtype)],
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(
+            (1, r_out, w_pool, bn), lambda bb, rb, nb, cb: (bb, rb, 0, nb)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, n_rb * r_out, w_pool, n_pad), out_dtype),
+        scratch_shapes=[pltpu.VMEM((r, w_out, bn), jnp.float32)],
         interpret=interpret,
-    )(
-        x.reshape(b, h, wd, c),
-        x,
-        w_taps,
-    )
+    )(*([xp] + ([xp] if hb else []) + [wp, bp]))
+    return out[:, :h_keep, :, :n]

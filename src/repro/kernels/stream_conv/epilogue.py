@@ -1,0 +1,42 @@
+"""Shared fused epilogue: bias -> activation -> 2x2 max-pool.
+
+One definition used by BOTH compiled conv paths (the Pallas kernel body in
+``conv.py`` and the XLA fallback in ``xla.py``), so the backends cannot
+drift apart. The jnp reference (``ref.py``) deliberately keeps its own
+independent ``lax.reduce_window`` composition: it is the oracle the fused
+paths are tested against, so it must not share this code.
+
+Works on any (..., H, W, N) float32 block — the Pallas kernel calls it on
+a (r, w_out, bn) VMEM block, the XLA path on a (B, r, w_out, N) row block.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+ACTS = ("none", "relu", "tanh")
+POOLS = (0, 2)
+
+
+def validate_epilogue(act: str, pool: int) -> None:
+    if act not in ACTS:
+        raise ValueError(f"unknown act {act!r}; expected one of {ACTS}")
+    if pool not in POOLS:
+        raise ValueError(f"pool must be 0 or 2, got {pool}")
+
+
+def apply_epilogue(y, bias, *, act: str, pool: int):
+    """y: (..., H, W, N) f32; bias: (N,). Returns the block after
+    bias + activation + optional 2x2 max-pool (floor semantics)."""
+    validate_epilogue(act, pool)
+    y = y + bias.astype(jnp.float32)
+    if act == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif act == "tanh":
+        y = jnp.tanh(y)
+    if pool == 2:
+        *lead, h, w, n = y.shape
+        h2, w2 = 2 * (h // 2), 2 * (w // 2)
+        y = y[..., :h2, :w2, :]
+        y = y.reshape(*lead, h2 // 2, 2, w2 // 2, 2, n)
+        y = y.max(axis=(-4, -2))
+    return y

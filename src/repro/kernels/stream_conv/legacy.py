@@ -1,0 +1,88 @@
+"""The seed streaming-conv kernel, kept verbatim as a benchmark baseline.
+
+One output row per grid step, K*K per-tap dots against (C, N) tap matrices,
+with a (K-1)-row VMEM line buffer rotated by hand. Superseded by the
+row-blocked single-matmul kernel in ``conv.py`` — this version exists only
+so ``benchmarks/kernel_bench.py`` can keep measuring the speedup of the
+fused path against the original design, and as a second correctness oracle.
+Interpret mode only; do not use in model code.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _stream_conv_kernel_seed(x_row_ref, w_ref, o_ref, lbuf_ref, *, k, w_out):
+    """One grid step: consume input row (r + K - 1), emit output row r."""
+    new_row = x_row_ref[0, 0]  # (W, C)
+
+    acc = jnp.zeros((w_out, o_ref.shape[-1]), jnp.float32)
+    for ki in range(k):
+        row = lbuf_ref[ki] if ki < k - 1 else new_row
+        for kj in range(k):
+            seg = jax.lax.dynamic_slice_in_dim(row, kj, w_out, axis=0)
+            tap = w_ref[ki * k + kj]  # (C, N)
+            acc += jnp.dot(
+                seg.astype(jnp.float32),
+                tap.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+    o_ref[0, 0] = acc.astype(o_ref.dtype)
+
+    for ki in range(k - 2):
+        lbuf_ref[ki] = lbuf_ref[ki + 1]
+    if k >= 2:
+        lbuf_ref[k - 2] = new_row
+
+
+@functools.partial(jax.jit, static_argnames=("k", "out_dtype", "interpret"))
+def stream_conv2d_pallas_seed(
+    x: jax.Array,  # (B, H, W, C)
+    w_taps: jax.Array,  # (K*K, C, N)
+    *,
+    k: int,
+    out_dtype=jnp.float32,
+    interpret: bool = True,
+) -> jax.Array:
+    b, h, wd, c = x.shape
+    kk, c2, n = w_taps.shape
+    if kk != k * k or c2 != c:
+        raise ValueError(f"w_taps {w_taps.shape} inconsistent with k={k}, C={c}")
+    h_out, w_out = h - k + 1, wd - k + 1
+    if h_out <= 0 or w_out <= 0:
+        raise ValueError(f"image {h}x{wd} too small for k={k}")
+
+    kernel = functools.partial(_stream_conv_kernel_seed, k=k, w_out=w_out)
+
+    def _kernel_with_fill(x_row_ref, x_fill_ref, w_ref, o_ref, lbuf_ref):
+        r = pl.program_id(1)
+
+        @pl.when(r == 0)
+        def _fill():
+            lbuf_ref[...] = x_fill_ref[0]
+
+        kernel(x_row_ref, w_ref, o_ref, lbuf_ref)
+
+    grid = (b, h_out)
+    return pl.pallas_call(
+        _kernel_with_fill,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, wd, c), lambda bb, r: (bb, r + k - 1, 0, 0)),
+            pl.BlockSpec((1, max(1, k - 1), wd, c), lambda bb, r: (bb, 0, 0, 0)),
+            pl.BlockSpec((k * k, c, n), lambda bb, r: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, w_out, n), lambda bb, r: (bb, r, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h_out, w_out, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((max(1, k - 1), wd, c), x.dtype)],
+        interpret=interpret,
+    )(
+        x.reshape(b, h, wd, c),
+        x,
+        w_taps,
+    )

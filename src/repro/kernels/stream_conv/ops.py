@@ -1,4 +1,20 @@
-"""Public wrapper for the streaming line-buffer conv2d."""
+"""Public wrappers for the streaming conv kernels.
+
+``stream_conv2d`` is the bare conv (kept for API compatibility and as the
+benchmark subject); ``stream_conv_block`` is the fused
+conv -> bias -> activation -> 2x2-max-pool actor chain — the DHM pipeline
+stage — used by the CNN model, the DHM pipeline stage bodies, and the
+examples.
+
+Backends (validated; see ``repro.kernels.backends``):
+  - ``pallas``:           compiled. Mosaic-compiled Pallas on TPU; on
+                          platforms without compiled Pallas (XLA:CPU) the
+                          same row-block single-matmul algorithm is lowered
+                          through XLA (``xla.py``). This is the default.
+  - ``pallas_interpret``: the Pallas kernel through the interpreter — the
+                          correctness oracle.
+  - ``ref``:              plain ``lax.conv`` composition.
+"""
 from __future__ import annotations
 
 import functools
@@ -6,36 +22,115 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.stream_conv.conv import stream_conv2d_pallas
-from repro.kernels.stream_conv.ref import stream_conv2d_ref
+from repro.kernels.backends import (
+    DEFAULT_BACKEND,
+    compiled_pallas_available,
+    validate_backend,
+)
+from repro.kernels.stream_conv.conv import stream_conv_fused_pallas
+from repro.kernels.stream_conv.ref import stream_conv_block_ref
+from repro.kernels.stream_conv.xla import stream_conv_fused_xla
 
 
-@functools.partial(jax.jit, static_argnames=("padding", "backend", "out_dtype"))
+def _pad_same(x: jax.Array, k: int) -> jax.Array:
+    """SAME pads on the host side (the FPGA engine pads the pixel stream
+    at frame edges). XLA's SAME convention — low = (k-1)//2, high = k//2 —
+    so even-K results match the lax.conv reference backend exactly."""
+    lo = (k - 1) // 2
+    hi = k // 2
+    return jnp.pad(x, ((0, 0), (lo, hi), (lo, hi), (0, 0)))
+
+
+def _fused_dispatch(
+    x, w, b, *, padding, act, pool, out_dtype, backend,
+    block_r, block_c, block_n,
+):
+    k = w.shape[0]
+    if w.shape[1] != k:
+        raise ValueError(f"only square kernels, got {w.shape}")
+    validate_backend(backend)
+    if backend == "ref":
+        return stream_conv_block_ref(
+            x, w, b, padding=padding, act=act, pool=pool
+        ).astype(out_dtype)
+    if padding == "SAME":
+        x = _pad_same(x, k)
+    elif padding != "VALID":
+        raise ValueError(padding)
+    w_taps = w.reshape(k * k, w.shape[2], w.shape[3])
+    if backend == "pallas" and not compiled_pallas_available():
+        # Compiled fallback: identical algorithm, lowered through XLA.
+        # Row blocks there are sized from a memory budget, not VMEM, so
+        # the block_* tuning knobs are Pallas-only.
+        return stream_conv_fused_xla(
+            x, w_taps, b, k=k, act=act, pool=pool, out_dtype=out_dtype
+        )
+    return stream_conv_fused_pallas(
+        x,
+        w_taps,
+        b,
+        k=k,
+        act=act,
+        pool=pool,
+        block_r=block_r,
+        block_c=block_c,
+        block_n=block_n,
+        out_dtype=out_dtype,
+        interpret=(backend == "pallas_interpret"),
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "padding", "backend", "out_dtype", "block_r", "block_c", "block_n"
+    ),
+)
 def stream_conv2d(
     x: jax.Array,  # (B, H, W, C)
     w: jax.Array,  # (K, K, C, N) HWIO
     *,
     padding: str = "VALID",
     out_dtype=jnp.float32,
-    backend: str = "pallas_interpret",
+    backend: str = DEFAULT_BACKEND,
+    block_r: int = 8,
+    block_c: int = 0,
+    block_n: int = 0,
 ) -> jax.Array:
-    """Streaming conv2d, stride 1. SAME pads on the host side (the FPGA
-    engine pads the pixel stream at frame edges)."""
-    k = w.shape[0]
-    if w.shape[1] != k:
-        raise ValueError(f"only square kernels, got {w.shape}")
-    if padding == "SAME":
-        pad = k // 2
-        x = jnp.pad(x, ((0, 0), (pad, k - 1 - pad), (pad, k - 1 - pad), (0, 0)))
-    elif padding != "VALID":
-        raise ValueError(padding)
-    if backend == "ref":
-        return stream_conv2d_ref(x, w).astype(out_dtype)
-    w_taps = w.reshape(k * k, w.shape[2], w.shape[3])
-    return stream_conv2d_pallas(
-        x,
-        w_taps,
-        k=k,
-        out_dtype=out_dtype,
-        interpret=(backend == "pallas_interpret"),
+    """Streaming conv2d, stride 1, no epilogue. SAME pads on the host side."""
+    zero_b = jnp.zeros((w.shape[3],), jnp.float32)
+    return _fused_dispatch(
+        x, w, zero_b,
+        padding=padding, act="none", pool=0, out_dtype=out_dtype,
+        backend=backend, block_r=block_r, block_c=block_c, block_n=block_n,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "padding", "act", "pool", "backend", "out_dtype",
+        "block_r", "block_c", "block_n",
+    ),
+)
+def stream_conv_block(
+    x: jax.Array,  # (B, H, W, C)
+    w: jax.Array,  # (K, K, C, N) HWIO
+    b: jax.Array,  # (N,)
+    *,
+    padding: str = "VALID",
+    act: str = "relu",
+    pool: int = 2,
+    out_dtype=jnp.float32,
+    backend: str = DEFAULT_BACKEND,
+    block_r: int = 8,
+    block_c: int = 0,
+    block_n: int = 0,
+) -> jax.Array:
+    """Fused conv -> bias -> act -> 2x2-max-pool block (one DHM pipeline
+    stage). ``pool=0`` disables pooling, ``act='none'`` the activation."""
+    return _fused_dispatch(
+        x, w, b,
+        padding=padding, act=act, pool=pool, out_dtype=out_dtype,
+        backend=backend, block_r=block_r, block_c=block_c, block_n=block_n,
     )

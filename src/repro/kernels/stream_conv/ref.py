@@ -1,6 +1,11 @@
-"""Pure-jnp oracle for the streaming line-buffer convolution: a plain VALID
-conv2d (NHWC x HWIO -> NHWC), stride 1 — the semantics of the paper's
-dataflow conv engine once the stream is re-assembled into a frame."""
+"""Pure-jnp oracles for the streaming conv kernels.
+
+``stream_conv2d_ref`` is a plain VALID conv2d (NHWC x HWIO -> NHWC), stride
+1 — the semantics of the paper's dataflow conv engine once the stream is
+re-assembled into a frame. ``stream_conv_block_ref`` composes the UNFUSED
+actor chain (conv, + bias, activation, 2x2 max-pool) as separate XLA ops;
+the fused kernels must match it exactly.
+"""
 from __future__ import annotations
 
 import jax
@@ -16,3 +21,41 @@ def stream_conv2d_ref(x: jax.Array, w: jax.Array) -> jax.Array:
         padding="VALID",
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
     )
+
+
+def stream_conv_block_ref(
+    x: jax.Array,  # (B, H, W, C)
+    w: jax.Array,  # (K, K, C, N) HWIO
+    b: jax.Array,  # (N,)
+    *,
+    padding: str = "VALID",
+    act: str = "none",
+    pool: int = 0,
+) -> jax.Array:
+    """Unfused conv -> bias -> act -> 2x2 max-pool reference composition."""
+    y = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(1, 1),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    y = y + b.astype(jnp.float32)
+    if act == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif act == "tanh":
+        y = jnp.tanh(y)
+    elif act != "none":
+        raise ValueError(f"unknown act {act!r}")
+    if pool == 2:
+        y = jax.lax.reduce_window(
+            y,
+            -jnp.inf,
+            jax.lax.max,
+            window_dimensions=(1, 2, 2, 1),
+            window_strides=(1, 2, 2, 1),
+            padding="VALID",
+        )
+    elif pool != 0:
+        raise ValueError(f"pool must be 0 or 2, got {pool}")
+    return y

@@ -1,0 +1,92 @@
+"""XLA rendering of the fused streaming conv — the compiled path on
+platforms where Mosaic/Pallas compilation is unavailable (XLA:CPU only
+supports the Pallas interpreter).
+
+Same algorithm as the Pallas kernel in ``conv.py``, including the row
+blocking: each R-row block's K*K shifted views are assembled into one tall
+operand and contracted against the flattened (K*K*C, N) tap matrix in a
+SINGLE matmul per row block, then the shared bias -> activation ->
+2x2-max-pool epilogue runs in-block. No ``lax.conv``, and no unbounded
+im2col: R is sized so the per-block operand stays under a fixed byte
+budget (the XLA analogue of the kernel's VMEM blocking), so arbitrarily
+large batch/feature-map products cannot blow up memory. Small workloads
+fit one block and skip the ``lax.map`` loop entirely.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.padding import round_up
+from repro.kernels.stream_conv.epilogue import apply_epilogue, validate_epilogue
+
+# Per-block im2col operand budget. ~128 MB: big enough that realistic
+# single-frame layers run as one fused block, small enough that batched
+# CIFAR-scale layers (which would need GBs unblocked) get row-blocked.
+_BLOCK_BYTES_BUDGET = 128 * 1024 * 1024
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "act", "pool", "out_dtype")
+)
+def stream_conv_fused_xla(
+    x: jax.Array,  # (B, H, W, C), already SAME-padded if needed
+    w_taps: jax.Array,  # (K*K, C, N)
+    bias: jax.Array,  # (N,)
+    *,
+    k: int,
+    act: str = "none",
+    pool: int = 0,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    b, h, wd, c = x.shape
+    kk, c2, n = w_taps.shape
+    if kk != k * k or c2 != c:
+        raise ValueError(f"w_taps {w_taps.shape} inconsistent with k={k}, C={c}")
+    validate_epilogue(act, pool)
+    h_out, w_out = h - k + 1, wd - k + 1
+    if h_out <= 0 or w_out <= 0:
+        raise ValueError(f"image {h}x{wd} too small for k={k}")
+    if pool == 2 and (h_out < 2 or w_out < 2):
+        raise ValueError(f"conv output {h_out}x{w_out} too small for 2x2 pool")
+
+    # Row block from the byte budget: largest R (multiple of the pool
+    # stride) whose (B, R, W_out, K*K, C) f32 operand fits.
+    mult = 2 if pool == 2 else 1
+    row_bytes = max(1, b * w_out * k * k * c * 4)
+    r = max(mult, (_BLOCK_BYTES_BUDGET // row_bytes) // mult * mult)
+    r = min(r, round_up(h_out, mult))
+    n_rb = -(-h_out // r)
+    r_out = r // 2 if pool == 2 else r
+    w_pool = w_out // 2 if pool == 2 else w_out
+    h_keep = h_out // 2 if pool == 2 else h_out
+
+    # Pad rows so every block can read r + k - 1 input rows (zero rows only
+    # feed outputs that are sliced off below).
+    h_rows = n_rb * r + k - 1
+    if h_rows > h:
+        x = jnp.pad(x, ((0, 0), (0, h_rows - h), (0, 0), (0, 0)))
+    w_flat = w_taps.reshape(k * k * c, n).astype(jnp.float32)
+
+    def block_fn(rb):
+        xb = jax.lax.dynamic_slice_in_dim(x, rb * r, r + k - 1, axis=1)
+        taps = []
+        for ki in range(k):
+            for kj in range(k):
+                taps.append(xb[:, ki : ki + r, kj : kj + w_out, :])
+        patches = jnp.stack(taps, axis=3)  # (B, r, w_out, k*k, C)
+        yb = jnp.dot(
+            patches.reshape(b * r * w_out, k * k * c).astype(jnp.float32),
+            w_flat,
+            preferred_element_type=jnp.float32,
+        ).reshape(b, r, w_out, n)
+        return apply_epilogue(yb, bias, act=act, pool=pool)
+
+    if n_rb == 1:
+        y = block_fn(0)
+    else:
+        blocks = jax.lax.map(block_fn, jnp.arange(n_rb))  # (n_rb, B, ...)
+        y = jnp.moveaxis(blocks, 0, 1).reshape(b, n_rb * r_out, w_pool, n)
+    return y[:, :h_keep].astype(out_dtype)

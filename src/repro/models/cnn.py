@@ -13,9 +13,12 @@ paper's workload numbers exactly: 3.8 Mop (LeNet5 feature extractor) and
 24.6 Mop (Cifar10/SVHN feature extractor).
 
 Everything is functional: ``init_cnn`` builds a param pytree, ``cnn_apply``
-runs the forward pass. Convolutions here are the *reference* path
-(lax.conv_general_dilated); the Pallas streaming line-buffer kernel in
-``repro.kernels.stream_conv`` implements the same op the DHM way.
+runs the forward pass. Convolutions default to the *reference* path
+(lax.conv_general_dilated + separate bias/pool/act passes); passing
+``conv_backend=`` routes every conv stage through the fused streaming
+kernel ``repro.kernels.stream_conv.stream_conv_block`` — conv, bias,
+activation and 2x2 max-pool as one DHM actor chain. The two paths agree
+because pooling and the (monotone) activations commute.
 """
 from __future__ import annotations
 
@@ -171,6 +174,7 @@ def cnn_apply(
     weight_bits: int | None = None,
     act_bits: int | None = None,
     pow2_weights: bool = False,
+    conv_backend: str | None = None,
 ) -> jax.Array:
     """Forward pass. x: (B, H, W, C) NHWC. Returns logits (B, n_classes).
 
@@ -178,7 +182,9 @@ def cnn_apply(
     STE); ``act_bits`` additionally quantizes the inter-layer feature streams
     — the paper quantizes both the parameters and the pixel/feature flow.
     ``pow2_weights`` projects every weight onto the {0, ±2^k} codebook with
-    STE (beyond-paper: 100%-multiplierless QAT).
+    STE (beyond-paper: 100%-multiplierless QAT). ``conv_backend`` (a
+    ``repro.kernels.backends`` name) runs every conv stage through the fused
+    streaming kernel instead of the lax.conv reference composition.
     """
     if pow2_weights:
         from repro.core.quant.pow2 import project_pow2_ste
@@ -195,19 +201,36 @@ def cnn_apply(
         spec = FixedPointSpec(bits=act_bits, frac_bits=act_bits - 2)
         return fake_quant_ste(h, spec)
 
+    if conv_backend is not None:
+        from repro.kernels.stream_conv import stream_conv_block
+
     h = x
     for spec, p in zip(topo.conv_layers, params["conv"]):
-        h = jax.lax.conv_general_dilated(
-            h,
-            p["w"],
-            window_strides=(1, 1),
-            padding=spec.padding,
-            dimension_numbers=("NHWC", "HWIO", "NHWC"),
-        )
-        h = h + p["b"]
-        if spec.pool:
-            h = _maxpool(h, spec.pool)
-        h = _act(spec.act)(h)
+        if conv_backend is not None:
+            # Fused streaming kernel: conv+bias+act+pool as one actor chain.
+            # Epilogue order is act-then-pool; identical to the reference's
+            # pool-then-act because the supported acts are monotone.
+            h = stream_conv_block(
+                h,
+                p["w"],
+                p["b"],
+                padding=spec.padding,
+                act=spec.act,
+                pool=spec.pool,
+                backend=conv_backend,
+            )
+        else:
+            h = jax.lax.conv_general_dilated(
+                h,
+                p["w"],
+                window_strides=(1, 1),
+                padding=spec.padding,
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            )
+            h = h + p["b"]
+            if spec.pool:
+                h = _maxpool(h, spec.pool)
+            h = _act(spec.act)(h)
         h = maybe_qact(h)
     h = h.reshape(h.shape[0], -1)
     for i, p in enumerate(params["fc"]):

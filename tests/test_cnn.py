@@ -64,6 +64,32 @@ class TestForward:
         q3 = cnn_apply(params, LENET5, x, weight_bits=3, act_bits=3)
         assert not np.allclose(full, q3)
 
+    @pytest.mark.parametrize("name", sorted(PAPER_TOPOLOGIES))
+    def test_fused_conv_backend_matches_reference(self, name):
+        """cnn_apply(conv_backend=...) routes every conv stage through the
+        fused streaming kernel; logits must match the lax.conv composition
+        (pool and the monotone activations commute)."""
+        topo = PAPER_TOPOLOGIES[name]
+        params = init_cnn(jax.random.PRNGKey(3), topo)
+        x = jax.random.normal(
+            jax.random.PRNGKey(4),
+            (2, topo.input_hw, topo.input_hw, topo.input_channels),
+        )
+        ref = cnn_apply(params, topo, x)
+        fused = cnn_apply(params, topo, x, conv_backend="pallas")
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_fused_conv_backend_quantized(self):
+        """Fused path composes with weight/activation fake-quant."""
+        params = init_cnn(jax.random.PRNGKey(0), LENET5)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 28, 28, 1))
+        ref = cnn_apply(params, LENET5, x, weight_bits=4, act_bits=4)
+        fused = cnn_apply(params, LENET5, x, weight_bits=4, act_bits=4,
+                          conv_backend="pallas")
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
+
 
 class TestTraining:
     def test_loss_decreases_and_accuracy(self):

@@ -6,7 +6,6 @@ import subprocess
 import sys
 
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.dhm import (
     CYCLONE_V_5CGXFC9E7,
@@ -193,20 +192,16 @@ class TestPartition:
             s = pa.stage_of_layer(layer)
             assert layer in pa.layers_of_stage(s)
 
-    @given(
-        n=st.integers(2, 30),
-        s=st.integers(1, 6),
-        seed=st.integers(0, 10_000),
-    )
-    @settings(max_examples=40, deadline=None)
-    def test_property_optimal_vs_greedy(self, n, s, seed):
-        """DP bottleneck is never worse than a greedy threshold partition,
-        and always >= max(cost) and >= total/S (lower bounds)."""
+    @pytest.mark.parametrize("seed", range(40))
+    def test_property_optimal_vs_greedy(self, seed):
+        """DP bottleneck always >= max(cost) and >= total/S (lower bounds),
+        over seeded random cost vectors and stage counts."""
         import random
 
         rnd = random.Random(seed)
+        n = rnd.randint(2, 30)
+        s = min(rnd.randint(1, 6), n)
         costs = [rnd.uniform(0.1, 10.0) for _ in range(n)]
-        s = min(s, n)
         pa = partition_stages(costs, s)
         assert pa.bottleneck >= max(costs) - 1e-9
         assert pa.bottleneck >= sum(costs) / s - 1e-9
@@ -216,6 +211,34 @@ class TestPartition:
         br = balance_report([1.0] * 8, 4, 16)
         assert br.bubble_fraction == pytest.approx(3 / 19)
         assert br.imbalance == pytest.approx(1.0)
+
+
+class TestConvStage:
+    def test_make_conv_stage_matches_unfused(self):
+        """The fused conv stage body == the unfused reference composition,
+        and is shape-homogeneous (SAME, pool=0, C == N)."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core.dhm.pipeline import make_conv_stage
+        from repro.kernels.stream_conv import stream_conv_block_ref
+
+        k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+        params = {
+            "w": jax.random.normal(k1, (3, 3, 4, 4)) * 0.3,
+            "b": jnp.zeros((4,)),
+        }
+        x = jax.random.normal(k2, (2, 8, 8, 4))
+        stage_fn = make_conv_stage(padding="SAME", act="tanh", pool=0)
+        y = stage_fn(params, x)
+        assert y.shape == x.shape
+        ref = stream_conv_block_ref(
+            x, params["w"], params["b"], padding="SAME", act="tanh", pool=0
+        )
+        import numpy as np
+
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-5)
 
 
 PIPELINE_SUBPROCESS = r"""
@@ -252,7 +275,7 @@ class TestPipeline:
                 "HOME": "/root",
             },
             cwd="/root/repo",
-            timeout=300,
+            timeout=600,
         )
         assert res.returncode == 0, res.stderr[-2000:]
         assert "OK" in res.stdout

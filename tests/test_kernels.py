@@ -1,15 +1,47 @@
-"""Per-kernel allclose tests vs the pure-jnp oracles, with hypothesis
-shape/dtype sweeps (interpret mode executes the kernel bodies on CPU)."""
+"""Per-kernel allclose tests vs the pure-jnp oracles, with seeded
+parametrized shape sweeps (no hypothesis dependency — the suite must
+collect on a clean machine). ``pallas_interpret`` executes the kernel
+bodies through the Pallas interpreter and is the correctness oracle; the
+default ``pallas`` backend is the compiled path (XLA-lowered on CPU)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.quant.pow2 import project_pow2
+from repro.kernels.backends import VALID_BACKENDS
 from repro.kernels.pow2_matmul import pow2_matmul, pow2_matmul_ref, quantize_weights
 from repro.kernels.ssm_scan import ssm_scan, ssm_scan_ref
-from repro.kernels.stream_conv import stream_conv2d, stream_conv2d_ref
+from repro.kernels.stream_conv import (
+    stream_conv2d,
+    stream_conv2d_pallas_seed,
+    stream_conv2d_ref,
+    stream_conv_block,
+    stream_conv_block_ref,
+)
+
+
+def _count_primitive(jaxpr, name: str) -> int:
+    """Recursively count occurrences of a primitive in a jaxpr (descends
+    into pjit/scan/pallas_call sub-jaxprs)."""
+
+    def subjaxprs(val):
+        if isinstance(val, jax.core.ClosedJaxpr):
+            yield val.jaxpr
+        elif isinstance(val, jax.core.Jaxpr):
+            yield val
+        elif isinstance(val, (list, tuple)):
+            for v in val:
+                yield from subjaxprs(v)
+
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == name:
+            n += 1
+        for v in eqn.params.values():
+            for j in subjaxprs(v):
+                n += _count_primitive(j, name)
+    return n
 
 
 class TestPow2Matmul:
@@ -22,28 +54,59 @@ class TestPow2Matmul:
 
     def test_matches_ref_aligned(self):
         x, _, packed, scale = self._mk(128, 128, 128)
-        out = pow2_matmul(x, packed, scale)
+        out = pow2_matmul(x, packed, scale, backend="pallas_interpret")
         ref = pow2_matmul_ref(x, packed, scale)
         np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
 
     def test_matches_ref_ragged(self):
         """Non-block-aligned shapes go through the padding path."""
         x, _, packed, scale = self._mk(37, 53, 66)
-        out = pow2_matmul(x, packed, scale, block_m=32, block_n=32, block_k=32)
+        out = pow2_matmul(x, packed, scale, block_m=32, block_n=32, block_k=32,
+                          backend="pallas_interpret")
         ref = pow2_matmul_ref(x, packed, scale)
         np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("m,k,n", [(1, 1, 2), (3, 5, 2), (7, 13, 6),
+                                       (129, 127, 130)])
+    def test_matches_ref_odd_shapes(self, m, k, n):
+        """Odd / prime / off-by-one M,K,N: the ops wrapper pads to block
+        multiples (the kernel's 'pad in ops.pow2_matmul' contract) and
+        slices the result back."""
+        x, _, packed, scale = self._mk(m, k, n, seed=m * k * n)
+        out = pow2_matmul(x, packed, scale, block_m=32, block_n=32, block_k=32,
+                          backend="pallas_interpret")
+        ref = pow2_matmul_ref(x, packed, scale)
+        assert out.shape == (m, n)
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+    def test_kernel_rejects_unpadded(self):
+        """The raw kernel itself refuses non-divisible shapes, pointing at
+        the wrapper that pads."""
+        from repro.kernels.pow2_matmul.pow2 import pow2_matmul_pallas
+
+        x, _, packed, scale = self._mk(33, 32, 32)
+        with pytest.raises(ValueError, match="pad in ops.pow2_matmul"):
+            pow2_matmul_pallas(x, packed, scale, block_m=32, block_n=32,
+                               block_k=32, interpret=True)
+
+    def test_unknown_backend_raises(self):
+        x, _, packed, scale = self._mk(8, 8, 8)
+        with pytest.raises(ValueError, match="unknown backend"):
+            pow2_matmul(x, packed, scale, backend="palas_interpret")
 
     def test_matches_projected_dense_matmul(self):
         """Kernel semantics == x @ project_pow2(w): the quantized network the
         paper synthesizes is exactly the one the kernel computes."""
         x, w, packed, scale = self._mk(16, 64, 32)
-        out = pow2_matmul(x, packed, scale, block_m=16, block_n=16, block_k=16)
+        out = pow2_matmul(x, packed, scale, block_m=16, block_n=16, block_k=16,
+                          backend="pallas_interpret")
         dense = x @ project_pow2(w, channel_axis=1)
         np.testing.assert_allclose(out, dense, rtol=1e-4, atol=1e-4)
 
     def test_bf16_activations(self):
         x, _, packed, scale = self._mk(32, 64, 32, dtype=jnp.bfloat16)
-        out = pow2_matmul(x, packed, scale, block_m=32, block_n=32, block_k=32)
+        out = pow2_matmul(x, packed, scale, block_m=32, block_n=32, block_k=32,
+                          backend="pallas_interpret")
         ref = pow2_matmul_ref(x, packed, scale)
         rel = float(
             jnp.linalg.norm(out.astype(jnp.float32) - ref) / jnp.linalg.norm(ref)
@@ -54,7 +117,7 @@ class TestPow2Matmul:
         x, _, packed, scale = self._mk(32, 32, 32)
         out = pow2_matmul(
             x, packed, scale, block_m=32, block_n=32, block_k=32,
-            out_dtype=jnp.bfloat16,
+            out_dtype=jnp.bfloat16, backend="pallas_interpret",
         )
         assert out.dtype == jnp.bfloat16
 
@@ -64,7 +127,8 @@ class TestPow2Matmul:
         x = jax.random.normal(jax.random.PRNGKey(0), (8, 16))
         w = jnp.zeros((16, 8))
         packed, scale = quantize_weights(w)
-        out = pow2_matmul(x, packed, scale, block_m=8, block_n=8, block_k=8)
+        out = pow2_matmul(x, packed, scale, block_m=8, block_n=8, block_k=8,
+                          backend="pallas_interpret")
         assert np.array_equal(np.asarray(out), np.zeros((8, 8), np.float32))
 
     def test_weight_bandwidth_is_quarter(self):
@@ -75,17 +139,24 @@ class TestPow2Matmul:
         bf16_bytes = w.size * 2
         assert packed_bytes * 4 == bf16_bytes
 
-    @given(
-        m=st.integers(1, 70),
-        k=st.integers(1, 70),
-        n_half=st.integers(1, 35),
-        seed=st.integers(0, 1000),
+    def test_compiled_default_matches_oracle(self):
+        """The default (compiled) backend agrees with the interpret oracle."""
+        x, _, packed, scale = self._mk(24, 40, 16, seed=11)
+        out = pow2_matmul(x, packed, scale, block_m=16, block_n=16, block_k=16)
+        oracle = pow2_matmul(x, packed, scale, block_m=16, block_n=16,
+                             block_k=16, backend="pallas_interpret")
+        np.testing.assert_allclose(out, oracle, rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize(
+        "m,k,n_half,seed",
+        [(1, 1, 1, 0), (5, 9, 3, 1), (17, 33, 9, 2), (64, 32, 16, 3),
+         (70, 70, 35, 4), (2, 64, 32, 5), (31, 2, 5, 6), (48, 17, 20, 7)],
     )
-    @settings(max_examples=15, deadline=None)
-    def test_property_shape_sweep(self, m, k, n_half, seed):
+    def test_shape_sweep(self, m, k, n_half, seed):
         n = 2 * n_half
         x, _, packed, scale = self._mk(m, k, n, seed=seed)
-        out = pow2_matmul(x, packed, scale, block_m=32, block_n=32, block_k=32)
+        out = pow2_matmul(x, packed, scale, block_m=32, block_n=32, block_k=32,
+                          backend="pallas_interpret")
         ref = pow2_matmul_ref(x, packed, scale)
         assert out.shape == (m, n)
         np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
@@ -99,18 +170,34 @@ class TestStreamConv:
         return x, wt
 
     @pytest.mark.parametrize("k", [1, 3, 5])
-    def test_matches_ref_valid(self, k):
+    @pytest.mark.parametrize("backend", ["pallas", "pallas_interpret"])
+    def test_matches_ref_valid(self, k, backend):
         x, w = self._mk(2, 14, 14, 3, 8, k)
-        out = stream_conv2d(x, w, padding="VALID")
+        out = stream_conv2d(x, w, padding="VALID", backend=backend)
         ref = stream_conv2d_ref(x, w)
         np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
 
-    def test_matches_ref_same(self):
+    @pytest.mark.parametrize("backend", ["pallas", "pallas_interpret"])
+    def test_matches_ref_same(self, backend):
         x, w = self._mk(2, 16, 16, 4, 8, 5)
-        out = stream_conv2d(x, w, padding="SAME")
+        out = stream_conv2d(x, w, padding="SAME", backend=backend)
         ref = jax.lax.conv_general_dilated(
             x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
         )
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+
+    @pytest.mark.parametrize("k", [2, 4])
+    @pytest.mark.parametrize("backend", ["pallas", "pallas_interpret"])
+    def test_even_kernel_same_matches_xla_convention(self, k, backend):
+        """Even K: host-side SAME padding must follow XLA's low=(k-1)//2,
+        high=k//2 split — a regression here shows up as a one-pixel shift
+        between backends."""
+        x, w = self._mk(1, 9, 9, 2, 3, k, seed=k)
+        out = stream_conv2d(x, w, padding="SAME", backend=backend)
+        ref = jax.lax.conv_general_dilated(
+            x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        )
+        assert out.shape == ref.shape
         np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
 
     def test_lenet_conv1_shape(self):
@@ -121,7 +208,7 @@ class TestStreamConv:
 
     def test_bf16(self):
         x, w = self._mk(1, 10, 10, 2, 4, 3, dtype=jnp.bfloat16)
-        out = stream_conv2d(x, w, padding="VALID")
+        out = stream_conv2d(x, w, padding="VALID", backend="pallas_interpret")
         ref = stream_conv2d_ref(x, w)
         rel = float(
             jnp.linalg.norm(out.astype(jnp.float32) - ref)
@@ -129,23 +216,148 @@ class TestStreamConv:
         )
         assert rel < 1e-2
 
-    @given(
-        b=st.integers(1, 3),
-        h=st.integers(6, 20),
-        c=st.integers(1, 5),
-        n=st.integers(1, 8),
-        k=st.sampled_from([1, 3, 5]),
-        seed=st.integers(0, 1000),
+    def test_unknown_backend_raises(self):
+        x, w = self._mk(1, 8, 8, 2, 4, 3)
+        with pytest.raises(ValueError, match="unknown backend"):
+            stream_conv2d(x, w, backend="palas_interpret")
+        with pytest.raises(ValueError, match="unknown backend"):
+            stream_conv_block(x, w, jnp.zeros((4,)), backend="mosaic")
+
+    def test_backend_enum_is_closed(self):
+        assert set(VALID_BACKENDS) == {"pallas", "pallas_interpret", "ref"}
+
+    def test_seed_kernel_still_matches(self):
+        """The archived seed kernel (benchmark baseline) stays correct."""
+        x, w = self._mk(2, 12, 12, 3, 6, 3, seed=4)
+        out = stream_conv2d_pallas_seed(x, w.reshape(9, 3, 6), k=3)
+        np.testing.assert_allclose(
+            out, stream_conv2d_ref(x, w), rtol=1e-4, atol=1e-5
+        )
+
+    @pytest.mark.parametrize(
+        "b,h,c,n,k,seed",
+        [(1, 6, 1, 1, 1, 0), (1, 7, 2, 3, 3, 1), (2, 9, 3, 5, 5, 2),
+         (3, 20, 5, 8, 3, 3), (1, 12, 4, 7, 5, 4), (2, 16, 1, 2, 5, 5),
+         (1, 6, 5, 4, 5, 6), (2, 11, 2, 6, 3, 7)],
     )
-    @settings(max_examples=15, deadline=None)
-    def test_property_shape_sweep(self, b, h, c, n, k, seed):
+    def test_shape_sweep(self, b, h, c, n, k, seed):
         if h < k:
             h = k + 1
         x, w = self._mk(b, h, h, c, n, k, seed=seed)
-        out = stream_conv2d(x, w, padding="VALID")
+        out = stream_conv2d(x, w, padding="VALID", backend="pallas_interpret")
         ref = stream_conv2d_ref(x, w)
         assert out.shape == ref.shape
         np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+class TestStreamConvFused:
+    """The fused conv -> bias -> act -> pool path vs the unfused reference
+    composition, across kernel sizes, paddings, backends and block shapes."""
+
+    def _mk(self, b, h, w, c, n, k, seed=0):
+        kx, kw, kb = jax.random.split(jax.random.PRNGKey(seed), 3)
+        x = jax.random.normal(kx, (b, h, w, c))
+        wt = jax.random.normal(kw, (k, k, c, n)) * 0.2
+        bias = jax.random.normal(kb, (n,)) * 0.1
+        return x, wt, bias
+
+    @pytest.mark.parametrize("k", [3, 5])
+    @pytest.mark.parametrize("padding", ["VALID", "SAME"])
+    @pytest.mark.parametrize("backend", ["pallas", "pallas_interpret"])
+    def test_fused_matches_unfused(self, k, padding, backend):
+        x, w, b = self._mk(2, 14, 14, 3, 8, k, seed=k)
+        out = stream_conv_block(
+            x, w, b, padding=padding, act="relu", pool=2, backend=backend
+        )
+        ref = stream_conv_block_ref(x, w, b, padding=padding, act="relu", pool=2)
+        assert out.shape == ref.shape
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+
+    @pytest.mark.parametrize("act", ["none", "relu", "tanh"])
+    @pytest.mark.parametrize("pool", [0, 2])
+    def test_epilogue_combinations(self, act, pool):
+        x, w, b = self._mk(1, 11, 11, 4, 6, 3, seed=9)
+        out = stream_conv_block(
+            x, w, b, padding="VALID", act=act, pool=pool,
+            backend="pallas_interpret",
+        )
+        ref = stream_conv_block_ref(x, w, b, padding="VALID", act=act, pool=pool)
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+
+    @pytest.mark.parametrize("block_c,block_n,block_r", [
+        (2, 12, 4),   # C=3 not a multiple of 2, N=32 not a multiple of 12
+        (3, 32, 8),   # exact blocks
+        (1, 5, 2),    # degenerate channel blocks, ragged feature blocks
+    ])
+    def test_channel_feature_blocking(self, block_c, block_n, block_r):
+        """CIFAR-sized layer with non-multiple-of-block channel/feature
+        counts: host-side zero padding keeps the result exact."""
+        x, w, b = self._mk(1, 32, 32, 3, 32, 5, seed=5)
+        out = stream_conv_block(
+            x, w, b, padding="SAME", act="relu", pool=2,
+            backend="pallas_interpret",
+            block_c=block_c, block_n=block_n, block_r=block_r,
+        )
+        ref = stream_conv_block_ref(x, w, b, padding="SAME", act="relu", pool=2)
+        assert out.shape == ref.shape
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+
+    def test_interpret_vs_compiled_agree(self):
+        """The interpret oracle and the compiled default produce the same
+        numbers for the fused path."""
+        x, w, b = self._mk(2, 16, 16, 5, 9, 5, seed=3)
+        compiled = stream_conv_block(x, w, b, padding="SAME", act="relu", pool=2)
+        oracle = stream_conv_block(
+            x, w, b, padding="SAME", act="relu", pool=2,
+            backend="pallas_interpret",
+        )
+        np.testing.assert_allclose(compiled, oracle, rtol=1e-5, atol=1e-6)
+
+    def test_odd_spatial_dims(self):
+        """Odd H/W: pooling floors, row blocks are padded and sliced."""
+        x, w, b = self._mk(1, 13, 13, 2, 4, 3, seed=8)
+        out = stream_conv_block(
+            x, w, b, padding="VALID", act="relu", pool=2,
+            backend="pallas_interpret",
+        )
+        ref = stream_conv_block_ref(x, w, b, padding="VALID", act="relu", pool=2)
+        assert out.shape == ref.shape == (1, 5, 5, 4)
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+
+
+class TestStreamConvStructure:
+    """Structural guarantees of the rewritten kernel: ONE matmul per row
+    block, no K^2 per-tap dot loop, no hidden lax.conv."""
+
+    def _jaxpr(self, backend, fused=False):
+        x = jnp.ones((1, 32, 32, 3))
+        w = jnp.ones((5, 5, 3, 32))
+        b = jnp.ones((32,))
+        if fused:
+            fn = lambda a, ww, bb: stream_conv_block(  # noqa: E731
+                a, ww, bb, padding="SAME", act="relu", pool=2, backend=backend
+            )
+            return jax.make_jaxpr(fn)(x, w, b).jaxpr
+        fn = lambda a, ww: stream_conv2d(  # noqa: E731
+            a, ww, padding="SAME", backend=backend
+        )
+        return jax.make_jaxpr(fn)(x, w).jaxpr
+
+    @pytest.mark.parametrize("backend", ["pallas", "pallas_interpret"])
+    @pytest.mark.parametrize("fused", [False, True])
+    def test_single_matmul_per_row_block(self, backend, fused):
+        jaxpr = self._jaxpr(backend, fused=fused)
+        assert _count_primitive(jaxpr, "dot_general") == 1
+        assert _count_primitive(jaxpr, "conv_general_dilated") == 0
+
+    def test_seed_kernel_had_kk_dots(self):
+        """Contrast: the seed kernel issued K*K=25 per-tap dots."""
+        x = jnp.ones((1, 32, 32, 3))
+        w = jnp.ones((25, 3, 32))
+        jaxpr = jax.make_jaxpr(
+            lambda a, ww: stream_conv2d_pallas_seed(a, ww, k=5)
+        )(x, w).jaxpr
+        assert _count_primitive(jaxpr, "dot_general") == 25
 
 
 class TestSSMScan:
@@ -161,9 +373,14 @@ class TestSSMScan:
 
     def test_matches_ref(self):
         args = self._mk(2, 24, 16, 4)
-        out = ssm_scan(*args, block_d=8)
+        out = ssm_scan(*args, block_d=8, backend="pallas_interpret")
         ref = ssm_scan_ref(*args)
         np.testing.assert_allclose(out, ref, atol=1e-5)
+
+    def test_unknown_backend_raises(self):
+        args = self._mk(1, 4, 4, 2)
+        with pytest.raises(ValueError, match="unknown backend"):
+            ssm_scan(*args, backend="palas")
 
     def test_matches_model_recurrence(self):
         """Kernel == the chunked_linear_recurrence path used by the model
@@ -171,7 +388,8 @@ class TestSSMScan:
         from repro.models.ssm import chunked_linear_recurrence
 
         x, dt, b, c, a, d_skip = self._mk(2, 17, 8, 4, seed=3)
-        out = ssm_scan(x, dt, b, c, a, d_skip, block_d=8)
+        out = ssm_scan(x, dt, b, c, a, d_skip, block_d=8,
+                       backend="pallas_interpret")
         dta = jnp.exp(dt[..., None] * a[None, None])
         bx = (dt * x)[..., None] * b[:, :, None, :]
         h_all, _ = chunked_linear_recurrence(
@@ -184,21 +402,18 @@ class TestSSMScan:
         """HBM IO is only x/dt/B/C in and y out: output must not depend on
         block_d tiling (the VMEM state is internal)."""
         args = self._mk(1, 12, 16, 2, seed=5)
-        o1 = ssm_scan(*args, block_d=16)
-        o2 = ssm_scan(*args, block_d=4)
+        o1 = ssm_scan(*args, block_d=16, backend="pallas_interpret")
+        o2 = ssm_scan(*args, block_d=4, backend="pallas_interpret")
         np.testing.assert_allclose(o1, o2, atol=1e-6)
 
-    @given(
-        bz=st.integers(1, 2),
-        s=st.integers(2, 20),
-        d=st.sampled_from([4, 8, 16]),
-        n=st.sampled_from([1, 2, 4]),
-        seed=st.integers(0, 500),
+    @pytest.mark.parametrize(
+        "bz,s,d,n,seed",
+        [(1, 2, 4, 1, 0), (2, 7, 8, 2, 1), (1, 20, 16, 4, 2),
+         (2, 13, 4, 4, 3), (1, 5, 8, 1, 4), (2, 16, 16, 2, 5)],
     )
-    @settings(max_examples=10, deadline=None)
-    def test_property_shape_sweep(self, bz, s, d, n, seed):
+    def test_shape_sweep(self, bz, s, d, n, seed):
         args = self._mk(bz, s, d, n, seed=seed)
-        out = ssm_scan(*args, block_d=4)
+        out = ssm_scan(*args, block_d=4, backend="pallas_interpret")
         ref = ssm_scan_ref(*args)
         assert out.shape == (bz, s, d)
         np.testing.assert_allclose(out, ref, atol=1e-4)
