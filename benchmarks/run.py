@@ -23,6 +23,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
+        e2e_bench,
         fig3_bitwidth,
         kernel_bench,
         table1_param_classes,
@@ -40,9 +41,14 @@ def main() -> None:
         networks=("lenet5", "cifar10", "svhn") if args.full else ("lenet5",)
     )
     kernel_rows = kernel_bench.run()
+    # End-to-end compiled-plan rows (frames/sec per topology, fp32 vs
+    # quantized plan) ride in the same record: the Table-4-style
+    # throughput trajectory per PR.
+    kernel_rows += e2e_bench.run()
     rows += kernel_rows
 
-    # Machine-readable kernel perf record (seed path vs fused path).
+    # Machine-readable kernel perf record (seed path vs fused path, plus
+    # the end-to-end compiled plans).
     import jax
 
     with open("BENCH_kernels.json", "w") as f:

@@ -3,9 +3,10 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
 
 """The paper, end to end: train LeNet5, pick the bit-width, classify the
 constants, estimate FPGA resources under all three multiplier strategies,
-report DHM throughput — then run the TPU analogue: map the layer graph onto
-a 4-stage spatial pipeline (shard_map + ppermute) and stream µbatches
-through it.
+report DHM throughput — then run the TPU analogue through the DHM
+compiler: build a topology, ``compile_dhm`` it (topology -> DPN -> stages
+-> fused-kernel plan, quantization baked in), and run the plan either
+single-device or as a 4-stage spatial pipeline (shard_map + ppermute).
 
     PYTHONPATH=src python examples/dhm_cnn.py
 """
@@ -17,25 +18,18 @@ import numpy as np
 
 from repro.core.dhm import (
     CYCLONE_V_5CGXFC9E7,
-    KINTEX7_XC7Z045,
     MultiplierStrategy,
+    QuantSpec,
     balance_report,
     cnn_to_dpn,
+    compile_dhm,
     dhm_throughput_gops,
     estimate_resources,
-    partition_stages,
-)
-from repro.core.dhm.pipeline import (
-    PipelineConfig,
-    make_conv_stage,
-    pipeline_forward,
-    stack_stage_params,
 )
 from repro.core.dhm.resources import ParamClassFractions
-from repro.kernels.stream_conv import stream_conv_block, stream_conv_block_ref
-from repro.models.cnn import LENET5
+from repro.models.cnn import CNNTopology, ConvLayerSpec, LENET5, cnn_apply_reference
 from repro.paper.analysis import classify_model
-from repro.paper.train_cnn import evaluate, get_trained_cnn
+from repro.paper.train_cnn import get_trained_cnn
 
 
 def main():
@@ -65,75 +59,69 @@ def main():
     print("\n== 3. DHM throughput (paper Table 4) ==")
     print("  " + dhm_throughput_gops(LENET5, 65.71).summary())
 
-    print("\n== 4. TPU analogue: spatial pipeline mapping ==")
-    costs = [sum(a.flops for a in layer) for layer in g.layers()]
-    costs = [c for c in costs if c > 0]
-    pa = partition_stages(costs, 2)
-    br = balance_report(costs, 2, n_microbatches=8)
-    print(f"  layer costs {[f'{c/1e3:.0f}k' for c in costs]} -> stages "
-          f"{pa.boundaries}, bottleneck {pa.bottleneck/1e3:.0f}k flops, "
-          f"pipeline efficiency {br.pipeline_efficiency:.2f}")
-
-    # Stream µbatches through a 4-stage pipeline on 4 virtual devices —
-    # each stage has private devices (DHM: private resources per actor) and
-    # each stage body is one fused streaming-conv actor chain
-    # (conv -> bias -> tanh as a single kernel call, SAME, C == N so the
-    # activation shape is homogeneous across stages).
-    mesh = jax.make_mesh((4,), ("stage",))
-    hw, ch, kk = 8, 4, 3
-    keys = jax.random.split(jax.random.PRNGKey(0), 4)
-    stage_params = stack_stage_params(
-        [
-            {
-                "w": jax.random.normal(k, (kk, kk, ch, ch)) * 0.2,
-                "b": jnp.zeros((ch,)),
-            }
-            for k in keys
-        ]
+    print("\n== 4. Compile: topology -> DPN -> stages -> fused plan ==")
+    # The whole TPU mapping is now one pass: compile_dhm expands the
+    # topology to the paper-granularity actor graph, partitions it with the
+    # min-max DP mapper (costed from actor FLOP payloads), and emits fused
+    # conv->bias->act(->pool->quant) kernel closures per stage, with the
+    # paper's 3-bit quantization baked into the plan.
+    plan = compile_dhm(
+        LENET5, trained.params,
+        quant=QuantSpec(weight_bits=bits, act_bits=bits),
+        n_stages=2,
     )
-    mbs = jax.random.normal(jax.random.PRNGKey(1), (8, 2, hw, hw, ch))
-    stage_fn = make_conv_stage(padding="SAME", act="tanh", pool=0)
-
-    t0 = time.time()
-    out = pipeline_forward(
-        stage_fn, stage_params, mbs, mesh=mesh, cfg=PipelineConfig(4, 8)
+    br = balance_report(
+        [s.cost_flops for s in plan.stages], plan.n_stages, n_microbatches=8
     )
-    ref = mbs.reshape(-1, hw, hw, ch)
-    for i in range(4):
-        ref = stream_conv_block_ref(
-            ref, stage_params["w"][i], stage_params["b"][i],
-            padding="SAME", act="tanh", pool=0,
-        )
-    ref = ref.reshape(mbs.shape)
-    ok = np.allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
-    print(f"  4-stage shard_map conv pipeline: correct={ok} "
-          f"({time.time()-t0:.2f}s, bubble={PipelineConfig(4,8).n_stages-1}"
-          f"/{8+3} ticks)")
-
-    print("\n== 5. Fused streaming-conv kernel (one matmul / row block) ==")
-    # LeNet5 conv1 as one fused actor chain: conv(20,5) -> bias -> 2x2
-    # max-pool -> tanh, straight from the trained parameters.
-    p0 = trained.params["conv"][0]
+    print(f"  {plan.n_stages} stages over {len(plan.conv_params)} conv "
+          f"layers: boundaries {plan.assignment.boundaries}, bottleneck "
+          f"{plan.assignment.bottleneck/1e3:.0f}k flops, pipeline "
+          f"efficiency {br.pipeline_efficiency:.2f}")
     x = jnp.asarray(
         np.random.default_rng(0).normal(size=(8, 28, 28, 1)), jnp.float32
     )
-    fused = stream_conv_block(
-        x, p0["w"], p0["b"], padding="VALID", act="tanh", pool=2
-    )
-    unfused = stream_conv_block_ref(
-        x, p0["w"], p0["b"], padding="VALID", act="tanh", pool=2
-    )
-    ok = np.allclose(np.asarray(fused), np.asarray(unfused), atol=1e-4)
-    fused.block_until_ready()
+    ref = cnn_apply_reference(trained.params, LENET5, x,
+                              weight_bits=bits, act_bits=bits)
+    logits = plan(x)
+    logits.block_until_ready()
     t0 = time.time()
     for _ in range(5):
-        out = stream_conv_block(
-            x, p0["w"], p0["b"], padding="VALID", act="tanh", pool=2
-        )
+        out = plan(x)
     out.block_until_ready()
     us = (time.time() - t0) / 5 * 1e6
-    print(f"  fused conv+bias+tanh+pool {tuple(x.shape)} -> "
-          f"{tuple(fused.shape)}: correct={ok}, {us:.0f} us/call")
+    ok = np.allclose(np.asarray(logits), np.asarray(ref), atol=1e-4)
+    print(f"  quantized compiled plan {tuple(x.shape)} -> "
+          f"{tuple(logits.shape)}: matches fake-quant reference={ok}, "
+          f"{us:.0f} us/call ({8 / (us * 1e-6):.0f} frames/s)")
+
+    print("\n== 5. Same plan, spatial pipeline on 4 virtual devices ==")
+    # A homogeneous 4-conv-layer topology (SAME, pool=0, C == N) so every
+    # compiled stage is shape-identical; the SAME compiled plan then runs
+    # on a mesh — each stage gets a private device group (DHM: private
+    # resources per actor) and µbatches stream over ICI.
+    pipe_topo = CNNTopology(
+        name="pipe4", input_hw=8, input_channels=4,
+        conv_layers=tuple(
+            ConvLayerSpec(n_out=4, kernel=3, padding="SAME", pool=0,
+                          act="tanh")
+            for _ in range(4)
+        ),
+        fc_dims=(), n_classes=2,
+    )
+    from repro.models.cnn import init_cnn
+
+    pipe_plan = compile_dhm(
+        pipe_topo, init_cnn(jax.random.PRNGKey(0), pipe_topo), n_stages=4
+    )
+    mesh = jax.make_mesh((4,), ("stage",))
+    mbs = jax.random.normal(jax.random.PRNGKey(1), (8, 2, 8, 8, 4))
+    t0 = time.time()
+    out = pipe_plan.run_pipelined(mbs, mesh=mesh)
+    seq = pipe_plan.features(mbs.reshape(-1, 8, 8, 4)).reshape(mbs.shape)
+    ok = np.allclose(np.asarray(out), np.asarray(seq), atol=1e-5)
+    print(f"  4-stage compiled pipeline: matches single-device plan={ok} "
+          f"({time.time()-t0:.2f}s, bubble={pipe_plan.n_stages-1}"
+          f"/{8+3} ticks)")
     print("OK")
 
 

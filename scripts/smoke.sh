@@ -15,11 +15,37 @@ python -m benchmarks.run | tee BENCH.csv
 echo "== kernel perf record =="
 python - <<'EOF'
 import json
-rec = json.load(open("BENCH_kernels.json"))
+import sys
+
+try:
+    rec = json.load(open("BENCH_kernels.json"))
+except FileNotFoundError:
+    sys.exit("FATAL: BENCH_kernels.json missing — benchmarks.run did not "
+             "write the kernel perf record")
+
+rows = {r["name"]: r for r in rec.get("rows", [])}
+expected = [
+    "kernel/stream_conv_cifar_c1_seed_interpret",
+    "kernel/stream_conv_cifar_c1_fused",
+] + [
+    f"e2e/{net}_{variant}_plan"
+    for net in ("lenet5", "cifar10", "svhn")
+    for variant in ("fp32", "quant")
+]
+missing = [n for n in expected if n not in rows]
+if missing:
+    sys.exit(f"FATAL: BENCH_kernels.json is missing expected rows: {missing}\n"
+             f"present: {sorted(rows)}")
 paths = {r.get("path") for r in rec["rows"]}
 assert {"seed", "fused"} <= paths, f"missing kernel paths in record: {paths}"
-fused = next(r for r in rec["rows"] if r.get("path") == "fused")
+
+fused = rows["kernel/stream_conv_cifar_c1_fused"]
 print(f"fused stream conv: {fused['us_per_call']:.0f} us/call, "
       f"x{fused['speedup_vs_seed']:.1f} vs seed interpret path")
+for net in ("lenet5", "cifar10", "svhn"):
+    fp = rows[f"e2e/{net}_fp32_plan"]
+    q = rows[f"e2e/{net}_quant_plan"]
+    print(f"e2e {net}: fp32 {fp['frames_per_s']:.0f} frames/s, "
+          f"quant {q['frames_per_s']:.0f} frames/s")
 EOF
 echo "SMOKE OK"

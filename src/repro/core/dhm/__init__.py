@@ -1,14 +1,36 @@
-"""Direct Hardware Mapping (DHM) core — the paper's contribution.
+"""Direct Hardware Mapping (DHM) core — the paper's contribution, organised
+as a compiler pipeline:
+
+    CNNTopology --(graph)--> DPN actor graph --(mapping)--> stages
+               --(compiler)--> CompiledDHM plan --(pipeline)--> mesh
 
 - ``graph``: dataflow-process-network (DPN) IR; CNN/LM graph builders at the
   paper's actor granularity (conv engines, adder trees, activations).
-- ``resources``: the FPGA resource model for the three multiplier strategies
-  (paper Tables 2 & 3).
+- ``mapping``: exact min-max DP partitioning of the (topologically ordered)
+  actor layers into contiguous stages — the TPU-native act of "direct
+  mapping" (the FPGA's critical actor becomes the bottleneck stage).
+- ``compiler``: the single lowering path. ``compile_dhm(topo, params,
+  quant=QuantSpec(...), n_stages=..., backend=...)`` validates the
+  topology, expands it to the DPN, partitions it from the actor FLOP
+  payloads, and emits per-stage fused-kernel closures with quantization
+  baked in (weights fake-quantized / pow2-projected once; the feature
+  stream quantized inside the kernel epilogue; the FC head lowered through
+  the packed pow2 matmul when requested). Every consumer — ``cnn_apply``,
+  pipeline stage bodies, examples, e2e benchmarks — routes through it.
+- ``pipeline``: the streaming pipelined executor (shard_map + ppermute);
+  runs a CompiledDHM's stages on disjoint device groups, GPipe schedule.
+- ``resources``: the FPGA resource model for the three multiplier
+  strategies (paper Tables 2 & 3).
 - ``throughput``: the streaming-throughput model (paper Table 4).
-- ``mapping``: spatial mapping of a DPN onto a TPU mesh (stage partitioning)
-  — the TPU-native act of "direct mapping".
-- ``pipeline``: the streaming pipelined executor (shard_map + ppermute).
 """
+from repro.core.dhm.compiler import (
+    CompiledDHM,
+    CompiledStage,
+    QuantSpec,
+    compile_dhm,
+    emit_conv_stage,
+    validate_topology,
+)
 from repro.core.dhm.graph import (
     Actor,
     ActorKind,
@@ -30,9 +52,15 @@ from repro.core.dhm.mapping import StageAssignment, partition_stages, balance_re
 __all__ = [
     "Actor",
     "ActorKind",
+    "CompiledDHM",
+    "CompiledStage",
     "DataflowGraph",
+    "QuantSpec",
     "cnn_to_dpn",
+    "compile_dhm",
+    "emit_conv_stage",
     "layer_costs_to_dpn",
+    "validate_topology",
     "DeviceModel",
     "CYCLONE_V_5CGXFC9E7",
     "KINTEX7_XC7Z045",

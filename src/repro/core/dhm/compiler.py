@@ -1,0 +1,446 @@
+"""Graph-driven DHM compiler: CNNTopology -> DPN -> stages -> execution plan.
+
+This is the repo's rendering of HADDOC2's "network description in,
+synthesizable actor graph out" pass as ONE lowering pipeline (the paper and
+its companion report arXiv:1705.04543 frame direct hardware mapping as a
+compiler problem). ``compile_dhm`` is the single entry point every consumer
+routes through — ``cnn_apply``, the pipeline stage bodies, the examples and
+the end-to-end benchmarks — so new topologies, backends or sharding
+strategies plug in here instead of growing parallel hand-wired paths.
+
+Lowering stages:
+
+1. **Validate** the topology: ``act`` / ``pool`` / ``padding`` strings are
+   checked against the fused-epilogue vocabulary at compile time, so a
+   typo'd ``act="rleu"`` raises here with the valid options, not as an
+   opaque KeyError deep inside a kernel trace.
+2. **Expand** the CNN description into the paper-granularity dataflow
+   process network (``cnn_to_dpn``): one conv engine per (map, channel),
+   neuron sums, activation and pool actors, line buffers sized by the
+   fixed-point width of the quantization spec.
+3. **Partition** the actor graph into ``n_stages`` contiguous stages with
+   the exact min-max DP mapper, costed from the actor FLOP payloads — the
+   critical-actor balancing the FPGA gets from its clock, solved here as a
+   linear-partition problem.
+4. **Emit** per-stage fused-kernel closures (``stream_conv_block`` actor
+   chains) with the quantization *baked into the plan*: weights are
+   fixed-point fake-quantized / pow2-projected once at compile time, and
+   the feature-stream quantization runs inside the fused kernel epilogue
+   (``act_bits``), never as a separate pass over HBM. The FC head lowers
+   through the packed ``pow2_matmul`` kernel when ``quant.pow2_weights``
+   (with straight-through gradients, so pow2 QAT still trains).
+
+The resulting :class:`CompiledDHM` executes single-device (sequential fused
+stages — the default path under ``cnn_apply``) or spatially on a mesh via
+``pipeline_forward`` (``run_pipelined``), where each stage owns a private
+device group exactly as each DHM actor owns private silicon.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dhm.graph import DataflowGraph, cnn_to_dpn
+from repro.core.dhm.mapping import StageAssignment, partition_stages
+from repro.kernels.backends import DEFAULT_BACKEND, validate_backend
+from repro.kernels.stream_conv.epilogue import ACTS, POOLS
+
+PADDINGS = ("SAME", "VALID")
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """The quantization contract baked into a compiled plan.
+
+    ``weight_bits``: fixed-point fake-quant of all parameters (dynamic
+    power-of-two scales, STE gradients — the paper's Q-format QAT).
+    ``act_bits``: fixed-point width of the inter-actor feature stream,
+    applied INSIDE the fused kernel epilogue (the paper quantizes the pixel
+    flow, not just the parameters).
+    ``pow2_weights``: project weights onto the {0, ±2^k} codebook; the FC
+    head then lowers through the packed ``pow2_matmul`` kernel (when no
+    additional ``weight_bits`` re-quantization is stacked on top).
+    """
+
+    weight_bits: Optional[int] = None
+    act_bits: Optional[int] = None
+    pow2_weights: bool = False
+
+    def __post_init__(self):
+        for name in ("weight_bits", "act_bits"):
+            v = getattr(self, name)
+            if v is not None and v < 2:
+                raise ValueError(f"{name} must be >= 2 (or None), got {v}")
+
+    @property
+    def stream_bits(self) -> int:
+        """Fixed-point width used to size DPN line buffers and streams."""
+        return self.act_bits or self.weight_bits or 32
+
+    @property
+    def packed_fc_head(self) -> bool:
+        """Whether the FC head lowers through the packed pow2 kernel.
+
+        With ``weight_bits`` stacked on top of the pow2 projection the
+        weights leave the pure codebook, so the head falls back to the
+        dense (projected + fake-quantized) matmul.
+        """
+        return self.pow2_weights and self.weight_bits is None
+
+
+def _validate_layer(where: str, *, padding: str, act: str, pool: int) -> None:
+    """Compile-time validation of the epilogue vocabulary — a typo raises
+    here with the options listed, not as a trace-time KeyError."""
+    if act not in ACTS:
+        raise ValueError(f"{where}: unknown act {act!r}; expected one of {ACTS}")
+    if pool not in POOLS:
+        raise ValueError(
+            f"{where}: unsupported pool {pool!r}; expected one of {POOLS}"
+        )
+    if padding not in PADDINGS:
+        raise ValueError(
+            f"{where}: unknown padding {padding!r}; expected one of {PADDINGS}"
+        )
+
+
+def validate_topology(topo) -> None:
+    """Validate every conv layer of a CNNTopology at compile time."""
+    for li, spec in enumerate(topo.conv_layers):
+        _validate_layer(
+            f"{topo.name} conv layer {li}",
+            padding=spec.padding, act=spec.act, pool=spec.pool,
+        )
+
+
+@functools.lru_cache(maxsize=64)
+def _cached_dpn(topo, bits: int) -> DataflowGraph:
+    """CNNTopology is a frozen (hashable) dataclass, so the actor-graph
+    expansion — thousands of actors for CIFAR-sized nets — is built once
+    per (topology, bit-width), not once per trace."""
+    return cnn_to_dpn(topo, bits=bits)
+
+
+def _conv_layer_costs(graph: DataflowGraph, n_conv: int) -> list:
+    """Per-conv-layer FLOP cost summed from the actor payloads (conv layer
+    i owns DPN topological layer i + 1; layer 0 is the source)."""
+    by_layer: dict = {}
+    for a in graph.actors:
+        by_layer[a.layer] = by_layer.get(a.layer, 0.0) + a.flops
+    return [by_layer.get(i + 1, 0.0) for i in range(n_conv)]
+
+
+@functools.lru_cache(maxsize=256)
+def _cached_layout(topo, bits: int, n_stages: int) -> StageAssignment:
+    """Cost aggregation (a Python walk over thousands of actors) + the DP
+    partition depend only on (topology, bit-width, n_stages) — memoized so
+    eager per-batch ``cnn_apply`` calls don't re-walk the graph."""
+    graph = _cached_dpn(topo, bits)
+    costs = _conv_layer_costs(graph, len(topo.conv_layers))
+    return partition_stages(costs, n_stages)
+
+
+def emit_conv_stage(
+    specs: Sequence,
+    *,
+    backend: Optional[str] = None,
+    act_bits: Optional[int] = None,
+    block_r: int = 8,
+    block_c: int = 0,
+    block_n: int = 0,
+) -> Callable:
+    """Emit one pipeline-stage body: a chain of fused conv actor blocks.
+
+    ``specs`` is a sequence of conv-layer specs (anything with ``padding``,
+    ``act``, ``pool`` attributes — e.g. ``ConvLayerSpec``). The returned
+    ``stage_fn(params, x)`` runs conv -> bias -> act (-> pool -> stream
+    quant) per layer, each as a single fused kernel call. ``params`` is a
+    list with one ``{"w": (K, K, C, N), "b": (N,)}`` dict per layer (a bare
+    dict is accepted for single-layer stages).
+    """
+    from repro.kernels.stream_conv import stream_conv_block
+
+    specs = tuple(specs)
+    if not specs:
+        raise ValueError("a conv stage needs at least one layer spec")
+    for li, spec in enumerate(specs):
+        _validate_layer(
+            f"stage layer {li}",
+            padding=spec.padding, act=spec.act, pool=spec.pool,
+        )
+    resolved = validate_backend(
+        DEFAULT_BACKEND if backend is None else backend
+    )
+
+    def stage_fn(params, x):
+        layer_params = [params] if isinstance(params, dict) else list(params)
+        if len(layer_params) != len(specs):
+            raise ValueError(
+                f"stage has {len(specs)} layers but got "
+                f"{len(layer_params)} param dicts"
+            )
+        for spec, p in zip(specs, layer_params):
+            x = stream_conv_block(
+                x,
+                p["w"],
+                p["b"],
+                padding=spec.padding,
+                act=spec.act,
+                pool=spec.pool,
+                act_bits=act_bits,
+                backend=resolved,
+                block_r=block_r,
+                block_c=block_c,
+                block_n=block_n,
+            )
+        return x
+
+    return stage_fn
+
+
+# ---------------------------------------------------------------------------
+# Quantization baking
+
+
+def _bake_conv_params(conv_params, quant: QuantSpec):
+    """Mirror the fake-quant reference composition order: pow2 projection
+    (STE) first, then fixed-point fake-quant of every tensor."""
+    from repro.core.quant.fixed_point import fake_quant_dynamic
+    from repro.core.quant.pow2 import project_pow2_ste
+
+    out = []
+    for p in conv_params:
+        w, b = p["w"], p["b"]
+        if quant.pow2_weights:
+            w = project_pow2_ste(w)
+        if quant.weight_bits is not None:
+            w = fake_quant_dynamic(w, quant.weight_bits)
+            b = fake_quant_dynamic(b, quant.weight_bits)
+        out.append({"w": w, "b": b})
+    return tuple(out)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _pow2_linear_ste(x, w, backend):
+    """Forward through the packed pow2 kernel (x @ decode(pack(w)));
+    backward straight-through, as if the layer were ``x @ project_pow2(w)``
+    — so pow2 QAT keeps training while serving-path lowering is exercised
+    in the forward pass."""
+    from repro.kernels.pow2_matmul import pow2_matmul, quantize_weights
+
+    packed, scale = quantize_weights(w)
+    return pow2_matmul(x, packed, scale, backend=backend)
+
+
+def _pow2_linear_ste_fwd(x, w, backend):
+    from repro.core.quant.pow2 import project_pow2
+
+    return _pow2_linear_ste(x, w, backend), (x, project_pow2(w, channel_axis=1))
+
+
+def _pow2_linear_ste_bwd(backend, res, g):
+    x, w_proj = res
+    return (
+        jnp.dot(g, w_proj.T.astype(g.dtype)),
+        jnp.dot(x.T.astype(g.dtype), g),  # STE: identity through the projection
+    )
+
+
+_pow2_linear_ste.defvjp(_pow2_linear_ste_fwd, _pow2_linear_ste_bwd)
+
+
+def _emit_head(fc_params, quant: QuantSpec, backend: str) -> Callable:
+    """Emit the classifier head: flatten -> FC stack, with the same
+    quantization contract as the conv stages (tanh + feature-stream quant
+    between hidden layers; logits unquantized, as in the reference)."""
+    from repro.core.quant.fixed_point import fake_quant_dynamic, fake_quant_ste
+    from repro.core.quant.pow2 import project_pow2_ste
+    from repro.kernels.stream_conv.epilogue import stream_quant_spec
+
+    baked = []
+    for p in fc_params:
+        w, b = p["w"], p["b"]
+        if quant.pow2_weights and not quant.packed_fc_head:
+            w = project_pow2_ste(w)
+        if quant.weight_bits is not None:
+            w = fake_quant_dynamic(w, quant.weight_bits)
+            b = fake_quant_dynamic(b, quant.weight_bits)
+        baked.append({"w": w, "b": b})
+
+    # Same Q-format as the in-kernel stream quantization of the conv stages.
+    qact_spec = (
+        stream_quant_spec(quant.act_bits) if quant.act_bits is not None else None
+    )
+
+    def head_fn(h):
+        h = h.reshape(h.shape[0], -1)
+        for i, p in enumerate(baked):
+            if quant.packed_fc_head:
+                h = _pow2_linear_ste(h, p["w"], backend) + p["b"]
+            else:
+                h = h @ p["w"] + p["b"]
+            if i < len(baked) - 1:
+                h = jnp.tanh(h)
+                if qact_spec is not None:
+                    h = fake_quant_ste(h, qact_spec)
+        return h
+
+    return head_fn
+
+
+# ---------------------------------------------------------------------------
+# The compiled plan
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledStage:
+    """One pipeline stage: a contiguous run of conv layers fused into a
+    single actor-chain closure."""
+
+    index: int
+    conv_layers: tuple  # conv-layer indices owned by this stage
+    specs: tuple  # the ConvLayerSpec per owned layer
+    fn: Callable  # (params_list, x) -> y
+    cost_flops: float  # summed actor payloads (the mapper's stage cost)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledDHM:
+    """Executable lowering of a CNN topology: quantized parameters +
+    per-stage fused-kernel closures + the FC head, plus the IR artifacts
+    (DPN graph, stage assignment) the lowering went through."""
+
+    topo: object
+    quant: QuantSpec
+    backend: str
+    graph: DataflowGraph
+    assignment: StageAssignment
+    stages: tuple
+    conv_params: tuple  # per conv layer {"w", "b"}, quantization baked
+    head_fn: Callable
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.stages)
+
+    def stage_params(self, stage: int) -> list:
+        return [self.conv_params[i] for i in self.stages[stage].conv_layers]
+
+    def features(self, x: jax.Array) -> jax.Array:
+        """Run the conv stages sequentially (single-device execution)."""
+        for st in self.stages:
+            x = st.fn(self.stage_params(st.index), x)
+        return x
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        """x: (B, H, W, C) NHWC -> logits (B, n_classes)."""
+        return self.head_fn(self.features(x))
+
+    # -- spatial (mesh) execution ------------------------------------------
+
+    def pipeline_stage_fn(self):
+        """The shared stage body + stacked per-stage params for
+        ``pipeline_forward``. Requires homogeneous stages (identical layer
+        specs and param shapes per stage), which is what the streaming
+        executor requires of its stage bodies anyway."""
+        from repro.core.dhm.pipeline import stack_stage_params
+
+        first = self.stages[0].specs
+        for st in self.stages[1:]:
+            if st.specs != first:
+                raise ValueError(
+                    "pipelined execution needs homogeneous stages (same "
+                    f"conv specs per stage); stage 0 has {first} but stage "
+                    f"{st.index} has {st.specs}"
+                )
+        stacked = stack_stage_params(
+            [self.stage_params(s) for s in range(self.n_stages)]
+        )
+        return self.stages[0].fn, stacked
+
+    def run_pipelined(self, microbatches, *, mesh, cfg=None):
+        """Stream (M, mb, H, W, C) µbatches through the conv stages on a
+        mesh (one device group per stage). Returns the feature stream;
+        apply ``head_fn`` after re-flattening for logits."""
+        from repro.core.dhm.pipeline import PipelineConfig, pipeline_forward
+
+        if cfg is None:
+            cfg = PipelineConfig(self.n_stages, microbatches.shape[0])
+        stage_fn, stacked = self.pipeline_stage_fn()
+        return pipeline_forward(
+            stage_fn, stacked, microbatches, mesh=mesh, cfg=cfg
+        )
+
+
+def compile_dhm(
+    topo,
+    params: dict,
+    *,
+    quant: QuantSpec = QuantSpec(),
+    n_stages: int = 1,
+    backend: Optional[str] = None,
+    block_r: int = 8,
+    block_c: int = 0,
+    block_n: int = 0,
+) -> CompiledDHM:
+    """Lower a CNNTopology + params to an executable DHM plan.
+
+    Args:
+      topo: a ``repro.models.cnn.CNNTopology`` (or any object with the same
+        ``conv_layers`` / ``conv_shapes()`` duck type).
+      params: ``{"conv": [{"w", "b"}...], "fc": [{"w", "b"}...]}`` as built
+        by ``init_cnn``. Quantization per ``quant`` is baked into the plan
+        here, once.
+      quant: the :class:`QuantSpec` contract.
+      n_stages: contiguous pipeline stages to partition the conv stack into
+        (1 = the whole feature extractor as one sequential plan).
+      backend: kernel backend enum (``repro.kernels.backends``); None means
+        the compiled default.
+    """
+    validate_topology(topo)
+    resolved = validate_backend(DEFAULT_BACKEND if backend is None else backend)
+    n_conv = len(topo.conv_layers)
+    if not 1 <= n_stages <= n_conv:
+        raise ValueError(
+            f"n_stages must be in [1, {n_conv}] for {topo.name}, got {n_stages}"
+        )
+
+    graph = _cached_dpn(topo, quant.stream_bits)
+    assignment = _cached_layout(topo, quant.stream_bits, n_stages)
+
+    conv_params = _bake_conv_params(params["conv"], quant)
+    stages = []
+    for s in range(n_stages):
+        idxs = tuple(assignment.layers_of_stage(s))
+        specs = tuple(topo.conv_layers[i] for i in idxs)
+        stages.append(
+            CompiledStage(
+                index=s,
+                conv_layers=idxs,
+                specs=specs,
+                fn=emit_conv_stage(
+                    specs,
+                    backend=resolved,
+                    act_bits=quant.act_bits,
+                    block_r=block_r,
+                    block_c=block_c,
+                    block_n=block_n,
+                ),
+                cost_flops=assignment.stage_costs[s],
+            )
+        )
+
+    head_fn = _emit_head(params["fc"], quant, resolved)
+    return CompiledDHM(
+        topo=topo,
+        quant=quant,
+        backend=resolved,
+        graph=graph,
+        assignment=assignment,
+        stages=tuple(stages),
+        conv_params=conv_params,
+        head_fn=head_fn,
+    )

@@ -157,30 +157,22 @@ def make_conv_stage(
     padding: str = "SAME",
     act: str = "relu",
     pool: int = 0,
+    act_bits: int | None = None,
     backend: str | None = None,
 ):
-    """Build a pipeline stage body from the fused streaming-conv kernel.
+    """Build a single-layer pipeline stage body — a compiler-emitted DHM
+    actor chain (conv -> bias -> activation (-> pool -> stream quant)) as
+    one fused kernel call on ``params = {"w": (K, K, C, N), "b": (N,)}``.
 
-    The returned ``stage_fn(params, x)`` runs one DHM actor chain —
-    conv -> bias -> activation (-> pool) — as a single fused kernel call
-    on ``params = {"w": (K, K, C, N), "b": (N,)}``. With SAME padding,
-    ``pool=0`` and C == N the stage is shape-homogeneous, which is what
-    ``pipeline_forward`` requires of its stage bodies.
+    Thin veneer over :func:`repro.core.dhm.compiler.emit_conv_stage`, so
+    the pipeline stage bodies and the single-device plans share ONE
+    lowering path (act/pool/padding are validated at build time there).
+    With SAME padding, ``pool=0`` and C == N the stage is
+    shape-homogeneous, which is what ``pipeline_forward`` requires.
     """
-    from repro.kernels.backends import DEFAULT_BACKEND
-    from repro.kernels.stream_conv import stream_conv_block
+    import types
 
-    resolved = DEFAULT_BACKEND if backend is None else backend
+    from repro.core.dhm.compiler import emit_conv_stage
 
-    def stage_fn(params, x):
-        return stream_conv_block(
-            x,
-            params["w"],
-            params["b"],
-            padding=padding,
-            act=act,
-            pool=pool,
-            backend=resolved,
-        )
-
-    return stage_fn
+    spec = types.SimpleNamespace(padding=padding, act=act, pool=pool)
+    return emit_conv_stage((spec,), backend=backend, act_bits=act_bits)

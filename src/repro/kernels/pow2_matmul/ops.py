@@ -22,22 +22,26 @@ from repro.kernels.backends import (
     compiled_pallas_available,
     validate_backend,
 )
-from repro.kernels.padding import pad_axis_to_multiple
+from repro.kernels.padding import pad_axis_to, pad_axis_to_multiple
 from repro.kernels.pow2_matmul.pow2 import pow2_matmul_pallas
 from repro.kernels.pow2_matmul.ref import pow2_matmul_ref
 
 
 def quantize_weights(w: jax.Array):
-    """(K, N) float weights -> (packed (K, N//2) uint8, scale (N,) f32).
+    """(K, N) float weights -> (packed (K, ceil(N/2)) uint8, scale (N,) f32).
 
-    N must be even (pad the layer width otherwise).
+    Odd N is auto-padded with a zero column so two codes always fill a
+    byte; zero codes decode to 0.0, so the pad is exact. The returned
+    ``scale`` keeps the TRUE width N — it is the layer-width source of
+    truth that lets ``pow2_matmul`` slice its output back to (M, N).
     """
     if w.ndim != 2:
         raise ValueError(f"expected (K, N) weights, got {w.shape}")
-    if w.shape[1] % 2:
-        raise ValueError("N must be even to pack 2 codes/byte")
-    codes, scale = pow2_codes(w, channel_axis=1)  # scale (1, N)
-    return pack_codes_u4(codes), scale.reshape(-1)
+    n = w.shape[1]
+    if n % 2:
+        w = jnp.pad(w, ((0, 0), (0, 1)))
+    codes, scale = pow2_codes(w, channel_axis=1)  # scale (1, N_even)
+    return pack_codes_u4(codes), scale.reshape(-1)[:n]
 
 
 @functools.partial(
@@ -57,22 +61,30 @@ def pow2_matmul(
 ) -> jax.Array:
     """out[m, n] = sum_k x[m, k] * decode(codes[k, n]) * scale[n].
 
+    The true layer width N is ``scale.shape[0]``; ``packed`` carries
+    ceil(N/2) bytes (odd N is zero-column-padded by ``quantize_weights``).
     Shapes need not be block-aligned; inputs are zero-padded here (honoring
     the kernel's "pad in ops.pow2_matmul" contract — zero codes decode to
     0.0, so padding is exact) and the result is sliced back to (M, N).
     """
     validate_backend(backend)
+    n = scale.shape[0]
+    if packed.shape[1] != (n + 1) // 2:
+        raise ValueError(
+            f"packed width {packed.shape[1]} inconsistent with scale length "
+            f"{n} (expected ceil(N/2) = {(n + 1) // 2} bytes)"
+        )
     if backend == "ref" or (
         backend == "pallas" and not compiled_pallas_available()
     ):
         return pow2_matmul_ref(x, packed, scale, out_dtype=out_dtype)
     m, k = x.shape
-    n = packed.shape[1] * 2
-    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    n_even = packed.shape[1] * 2
+    bm, bn, bk = min(block_m, m), min(block_n, n_even), min(block_k, k)
     bn = max(2, bn - (bn % 2))
     xp = pad_axis_to_multiple(pad_axis_to_multiple(x, 0, bm), 1, bk)
     wp = pad_axis_to_multiple(pad_axis_to_multiple(packed, 0, bk), 1, bn // 2)
-    sp = pad_axis_to_multiple(scale, 0, bn)
+    sp = pad_axis_to_multiple(pad_axis_to(scale, 0, n_even), 0, bn)
     out = pow2_matmul_pallas(
         xp,
         wp,

@@ -17,14 +17,16 @@ from repro.core.quant.pow2 import decode_pow2
 
 def pow2_matmul_ref(
     x: jax.Array,  # (M, K) float
-    packed: jax.Array,  # (K, N // 2) uint8
-    scale: jax.Array,  # (N,) float32
+    packed: jax.Array,  # (K, ceil(N/2)) uint8
+    scale: jax.Array,  # (N,) float32 — N is the true layer width
     *,
     out_dtype=jnp.float32,
 ) -> jax.Array:
-    codes = unpack_codes_u4(packed)  # (K, N)
+    codes = unpack_codes_u4(packed)  # (K, 2 * ceil(N/2))
     w = decode_pow2(codes, jnp.ones((), jnp.float32))  # unit-scale decode
     acc = jnp.dot(
         x.astype(jnp.float32), w, preferred_element_type=jnp.float32
     )
-    return (acc * scale[None, :]).astype(out_dtype)
+    # Odd N: the pad column holds zero codes; slice it off before scaling.
+    n = scale.shape[0]
+    return (acc[:, :n] * scale[None, :]).astype(out_dtype)

@@ -46,7 +46,8 @@ from repro.kernels.stream_conv.epilogue import apply_epilogue, validate_epilogue
 
 
 def _kernel_body(
-    x_blk, w_ref, b_ref, o_ref, acc_ref, *, k, r, w_out, act, pool, out_dtype
+    x_blk, w_ref, b_ref, o_ref, acc_ref, *, k, r, w_out, act, pool, act_bits,
+    out_dtype,
 ):
     """Shared body: x_blk is the (r + k - 1, W, bc) window block."""
     cb = pl.program_id(3)
@@ -74,7 +75,9 @@ def _kernel_body(
 
     @pl.when(cb == n_cb - 1)
     def _write():
-        y = apply_epilogue(acc_ref[...], b_ref[...], act=act, pool=pool)
+        y = apply_epilogue(
+            acc_ref[...], b_ref[...], act=act, pool=pool, act_bits=act_bits
+        )
         o_ref[0] = y.astype(out_dtype)
 
 
@@ -90,8 +93,8 @@ def _fused_kernel_k1(x_cur_ref, w_ref, b_ref, o_ref, acc_ref, **kw):
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "k", "act", "pool", "block_r", "block_c", "block_n", "out_dtype",
-        "interpret",
+        "k", "act", "pool", "act_bits", "block_r", "block_c", "block_n",
+        "out_dtype", "interpret",
     ),
 )
 def stream_conv_fused_pallas(
@@ -102,6 +105,7 @@ def stream_conv_fused_pallas(
     k: int,
     act: str = "none",
     pool: int = 0,
+    act_bits: int | None = None,
     block_r: int = 8,
     block_c: int = 0,  # 0 = full C per step
     block_n: int = 0,  # 0 = full N per step
@@ -109,15 +113,16 @@ def stream_conv_fused_pallas(
     interpret: bool = False,
 ) -> jax.Array:
     """Fused streaming conv. VALID, stride 1; pool in {0, 2}; act in
-    {none, relu, tanh}. Returns (B, H', W', N) where H', W' are the conv
-    output dims, halved (floor) when pool == 2."""
+    {none, relu, tanh}; ``act_bits`` quantizes the output feature stream
+    in-kernel. Returns (B, H', W', N) where H', W' are the conv output
+    dims, halved (floor) when pool == 2."""
     b, h, wd, c = x.shape
     kk, c2, n = w_taps.shape
     if kk != k * k or c2 != c:
         raise ValueError(f"w_taps {w_taps.shape} inconsistent with k={k}, C={c}")
     if bias.shape != (n,):
         raise ValueError(f"bias must be ({n},), got {bias.shape}")
-    validate_epilogue(act, pool)
+    validate_epilogue(act, pool, act_bits)
     h_out, w_out = h - k + 1, wd - k + 1
     if h_out <= 0 or w_out <= 0:
         raise ValueError(f"image {h}x{wd} too small for k={k}")
@@ -155,7 +160,10 @@ def stream_conv_fused_pallas(
     h_keep = h_out // 2 if pool == 2 else h_out
 
     grid = (b, n_rb, n_pad // bn, c_pad // bc)
-    kw = dict(k=k, r=r, w_out=w_out, act=act, pool=pool, out_dtype=out_dtype)
+    kw = dict(
+        k=k, r=r, w_out=w_out, act=act, pool=pool, act_bits=act_bits,
+        out_dtype=out_dtype,
+    )
 
     in_specs = [
         pl.BlockSpec((1, r, wd, bc), lambda bb, rb, nb, cb: (bb, rb, 0, cb)),

@@ -1,10 +1,21 @@
-"""Shared fused epilogue: bias -> activation -> 2x2 max-pool.
+"""Shared fused epilogue: bias -> activation -> 2x2 max-pool -> feature-stream
+fixed-point quantization.
 
 One definition used by BOTH compiled conv paths (the Pallas kernel body in
 ``conv.py`` and the XLA fallback in ``xla.py``), so the backends cannot
 drift apart. The jnp reference (``ref.py``) deliberately keeps its own
-independent ``lax.reduce_window`` composition: it is the oracle the fused
-paths are tested against, so it must not share this code.
+independent composition (``lax.reduce_window`` + ``fake_quant_ste``): it is
+the oracle the fused paths are tested against, so it must not share this
+code.
+
+``act_bits`` is the paper's "quantize the pixel flow": the inter-actor
+feature stream is a short fixed-point format, so the quantization step
+belongs INSIDE the fused actor chain — the block is rounded in VMEM before
+write-back, never as a separate pass over the HBM-resident frame. The
+Q-format matches the model reference (``FixedPointSpec(bits, bits - 2)``,
+the format ``cnn_apply``'s fake-quant composition uses for activations),
+and the forward computation — clip(round(y / scale)) * scale — is exactly
+``fake_quant_ste``'s forward.
 
 Works on any (..., H, W, N) float32 block — the Pallas kernel calls it on
 a (r, w_out, bn) VMEM block, the XLA path on a (B, r, w_out, N) row block.
@@ -13,21 +24,44 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core.quant.fixed_point import FixedPointSpec
+
 ACTS = ("none", "relu", "tanh")
 POOLS = (0, 2)
 
 
-def validate_epilogue(act: str, pool: int) -> None:
+def stream_quant_spec(act_bits: int) -> FixedPointSpec:
+    """The feature-stream Q-format: 1 sign bit, 1 integer bit, rest
+    fractional — the same format the model-level fake-quant reference
+    applies to activations."""
+    return FixedPointSpec(bits=act_bits, frac_bits=act_bits - 2)
+
+
+def validate_epilogue(act: str, pool: int, act_bits: int | None = None) -> None:
     if act not in ACTS:
         raise ValueError(f"unknown act {act!r}; expected one of {ACTS}")
     if pool not in POOLS:
         raise ValueError(f"pool must be 0 or 2, got {pool}")
+    if act_bits is not None and act_bits < 2:
+        raise ValueError(f"act_bits must be >= 2 (or None), got {act_bits}")
 
 
-def apply_epilogue(y, bias, *, act: str, pool: int):
+def apply_epilogue(
+    y, bias, *, act: str, pool: int, act_bits: int | None = None,
+    ste: bool = False,
+):
     """y: (..., H, W, N) f32; bias: (N,). Returns the block after
-    bias + activation + optional 2x2 max-pool (floor semantics)."""
-    validate_epilogue(act, pool)
+    bias + activation + optional 2x2 max-pool (floor semantics) + optional
+    feature-stream quantization — all in-register/VMEM.
+
+    ``ste=True`` routes the quantization through ``fake_quant_ste``
+    (identity gradient inside the representable range) — same forward
+    values, used by the differentiable XLA rendering so QAT through the
+    fused path keeps training. The Pallas kernel body keeps the raw
+    round/clip (``ste=False``): it is forward-only anyway, and the kernel
+    program must stay plain jnp ops.
+    """
+    validate_epilogue(act, pool, act_bits)
     y = y + bias.astype(jnp.float32)
     if act == "relu":
         y = jnp.maximum(y, 0.0)
@@ -39,4 +73,13 @@ def apply_epilogue(y, bias, *, act: str, pool: int):
         y = y[..., :h2, :w2, :]
         y = y.reshape(*lead, h2 // 2, 2, w2 // 2, 2, n)
         y = y.max(axis=(-4, -2))
+    if act_bits is not None:
+        spec = stream_quant_spec(act_bits)
+        if ste:
+            from repro.core.quant.fixed_point import fake_quant_ste
+
+            y = fake_quant_ste(y, spec)
+        else:
+            q = jnp.clip(jnp.round(y / spec.scale), spec.qmin, spec.qmax)
+            y = q * spec.scale
     return y

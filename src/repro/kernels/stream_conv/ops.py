@@ -42,7 +42,7 @@ def _pad_same(x: jax.Array, k: int) -> jax.Array:
 
 
 def _fused_dispatch(
-    x, w, b, *, padding, act, pool, out_dtype, backend,
+    x, w, b, *, padding, act, pool, act_bits, out_dtype, backend,
     block_r, block_c, block_n,
 ):
     k = w.shape[0]
@@ -51,7 +51,7 @@ def _fused_dispatch(
     validate_backend(backend)
     if backend == "ref":
         return stream_conv_block_ref(
-            x, w, b, padding=padding, act=act, pool=pool
+            x, w, b, padding=padding, act=act, pool=pool, act_bits=act_bits
         ).astype(out_dtype)
     if padding == "SAME":
         x = _pad_same(x, k)
@@ -63,7 +63,8 @@ def _fused_dispatch(
         # Row blocks there are sized from a memory budget, not VMEM, so
         # the block_* tuning knobs are Pallas-only.
         return stream_conv_fused_xla(
-            x, w_taps, b, k=k, act=act, pool=pool, out_dtype=out_dtype
+            x, w_taps, b, k=k, act=act, pool=pool, act_bits=act_bits,
+            out_dtype=out_dtype,
         )
     return stream_conv_fused_pallas(
         x,
@@ -72,6 +73,7 @@ def _fused_dispatch(
         k=k,
         act=act,
         pool=pool,
+        act_bits=act_bits,
         block_r=block_r,
         block_c=block_c,
         block_n=block_n,
@@ -101,15 +103,16 @@ def stream_conv2d(
     zero_b = jnp.zeros((w.shape[3],), jnp.float32)
     return _fused_dispatch(
         x, w, zero_b,
-        padding=padding, act="none", pool=0, out_dtype=out_dtype,
-        backend=backend, block_r=block_r, block_c=block_c, block_n=block_n,
+        padding=padding, act="none", pool=0, act_bits=None,
+        out_dtype=out_dtype, backend=backend,
+        block_r=block_r, block_c=block_c, block_n=block_n,
     )
 
 
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "padding", "act", "pool", "backend", "out_dtype",
+        "padding", "act", "pool", "act_bits", "backend", "out_dtype",
         "block_r", "block_c", "block_n",
     ),
 )
@@ -121,6 +124,7 @@ def stream_conv_block(
     padding: str = "VALID",
     act: str = "relu",
     pool: int = 2,
+    act_bits: int | None = None,
     out_dtype=jnp.float32,
     backend: str = DEFAULT_BACKEND,
     block_r: int = 8,
@@ -128,9 +132,12 @@ def stream_conv_block(
     block_n: int = 0,
 ) -> jax.Array:
     """Fused conv -> bias -> act -> 2x2-max-pool block (one DHM pipeline
-    stage). ``pool=0`` disables pooling, ``act='none'`` the activation."""
+    stage). ``pool=0`` disables pooling, ``act='none'`` the activation;
+    ``act_bits`` quantizes the output feature stream inside the same fused
+    epilogue (the paper's quantized pixel flow — no separate HBM pass)."""
     return _fused_dispatch(
         x, w, b,
-        padding=padding, act=act, pool=pool, out_dtype=out_dtype,
-        backend=backend, block_r=block_r, block_c=block_c, block_n=block_n,
+        padding=padding, act=act, pool=pool, act_bits=act_bits,
+        out_dtype=out_dtype, backend=backend,
+        block_r=block_r, block_c=block_c, block_n=block_n,
     )

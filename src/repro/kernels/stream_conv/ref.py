@@ -3,13 +3,18 @@
 ``stream_conv2d_ref`` is a plain VALID conv2d (NHWC x HWIO -> NHWC), stride
 1 — the semantics of the paper's dataflow conv engine once the stream is
 re-assembled into a frame. ``stream_conv_block_ref`` composes the UNFUSED
-actor chain (conv, + bias, activation, 2x2 max-pool) as separate XLA ops;
-the fused kernels must match it exactly.
+actor chain (conv, + bias, activation, 2x2 max-pool, feature-stream
+fake-quant) as separate XLA ops; the fused kernels must match it exactly.
+The quantization step here deliberately goes through ``fake_quant_ste``
+(the model-level reference) so the in-kernel epilogue is tested against an
+independent rendering of the same Q-format.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.quant.fixed_point import FixedPointSpec, fake_quant_ste
 
 
 def stream_conv2d_ref(x: jax.Array, w: jax.Array) -> jax.Array:
@@ -31,8 +36,10 @@ def stream_conv_block_ref(
     padding: str = "VALID",
     act: str = "none",
     pool: int = 0,
+    act_bits: int | None = None,
 ) -> jax.Array:
-    """Unfused conv -> bias -> act -> 2x2 max-pool reference composition."""
+    """Unfused conv -> bias -> act -> 2x2 max-pool -> fake-quant reference
+    composition."""
     y = jax.lax.conv_general_dilated(
         x.astype(jnp.float32),
         w.astype(jnp.float32),
@@ -58,4 +65,6 @@ def stream_conv_block_ref(
         )
     elif pool != 0:
         raise ValueError(f"pool must be 0 or 2, got {pool}")
+    if act_bits is not None:
+        y = fake_quant_ste(y, FixedPointSpec(bits=act_bits, frac_bits=act_bits - 2))
     return y

@@ -29,7 +29,7 @@ _BLOCK_BYTES_BUDGET = 128 * 1024 * 1024
 
 
 @functools.partial(
-    jax.jit, static_argnames=("k", "act", "pool", "out_dtype")
+    jax.jit, static_argnames=("k", "act", "pool", "act_bits", "out_dtype")
 )
 def stream_conv_fused_xla(
     x: jax.Array,  # (B, H, W, C), already SAME-padded if needed
@@ -39,13 +39,14 @@ def stream_conv_fused_xla(
     k: int,
     act: str = "none",
     pool: int = 0,
+    act_bits: int | None = None,
     out_dtype=jnp.float32,
 ) -> jax.Array:
     b, h, wd, c = x.shape
     kk, c2, n = w_taps.shape
     if kk != k * k or c2 != c:
         raise ValueError(f"w_taps {w_taps.shape} inconsistent with k={k}, C={c}")
-    validate_epilogue(act, pool)
+    validate_epilogue(act, pool, act_bits)
     h_out, w_out = h - k + 1, wd - k + 1
     if h_out <= 0 or w_out <= 0:
         raise ValueError(f"image {h}x{wd} too small for k={k}")
@@ -82,7 +83,12 @@ def stream_conv_fused_xla(
             w_flat,
             preferred_element_type=jnp.float32,
         ).reshape(b, r, w_out, n)
-        return apply_epilogue(yb, bias, act=act, pool=pool)
+        # ste=True: identical forward values, STE gradients — the XLA
+        # rendering is the differentiable fused path, so in-kernel stream
+        # quantization must not zero out QAT gradients.
+        return apply_epilogue(
+            yb, bias, act=act, pool=pool, act_bits=act_bits, ste=True
+        )
 
     if n_rb == 1:
         y = block_fn(0)

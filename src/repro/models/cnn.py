@@ -13,12 +13,17 @@ paper's workload numbers exactly: 3.8 Mop (LeNet5 feature extractor) and
 24.6 Mop (Cifar10/SVHN feature extractor).
 
 Everything is functional: ``init_cnn`` builds a param pytree, ``cnn_apply``
-runs the forward pass. Convolutions default to the *reference* path
-(lax.conv_general_dilated + separate bias/pool/act passes); passing
-``conv_backend=`` routes every conv stage through the fused streaming
-kernel ``repro.kernels.stream_conv.stream_conv_block`` — conv, bias,
-activation and 2x2 max-pool as one DHM actor chain. The two paths agree
-because pooling and the (monotone) activations commute.
+runs the forward pass. ``cnn_apply`` is a thin veneer over the DHM
+compiler: the topology + params + quantization spec lower through
+``repro.core.dhm.compiler.compile_dhm`` into a plan of fused actor-chain
+stages, and the forward pass runs that plan. ``conv_backend=None`` selects
+the ``ref`` kernel backend (the lax.conv composition — the fast,
+well-differentiable path for training); any ``repro.kernels.backends``
+name routes the stages through the corresponding fused streaming kernel.
+``cnn_apply_reference`` keeps the original hand-composed forward pass
+(separate conv/bias/pool/act/fake-quant XLA ops) as the oracle compiled
+plans are tested against. The two agree because pooling and the (monotone)
+activations commute.
 """
 from __future__ import annotations
 
@@ -178,14 +183,47 @@ def cnn_apply(
 ) -> jax.Array:
     """Forward pass. x: (B, H, W, C) NHWC. Returns logits (B, n_classes).
 
-    ``weight_bits`` enables fixed-point fake-quant of all parameters (QAT via
-    STE); ``act_bits`` additionally quantizes the inter-layer feature streams
-    — the paper quantizes both the parameters and the pixel/feature flow.
-    ``pow2_weights`` projects every weight onto the {0, ±2^k} codebook with
-    STE (beyond-paper: 100%-multiplierless QAT). ``conv_backend`` (a
-    ``repro.kernels.backends`` name) runs every conv stage through the fused
-    streaming kernel instead of the lax.conv reference composition.
+    Lowers through the DHM compiler: topology + params + quantization spec
+    become a single-device :class:`~repro.core.dhm.compiler.CompiledDHM`
+    plan of fused actor-chain stages, which is then run on ``x``.
+
+    ``weight_bits`` enables fixed-point fake-quant of all parameters (QAT
+    via STE); ``act_bits`` additionally quantizes the inter-layer feature
+    streams — inside the fused kernel epilogue, the paper's quantized pixel
+    flow. ``pow2_weights`` projects every weight onto the {0, ±2^k}
+    codebook with STE and lowers the FC head through the packed
+    ``pow2_matmul`` kernel (beyond-paper: 100%-multiplierless QAT).
+    ``conv_backend`` (a ``repro.kernels.backends`` name) selects the kernel
+    backend for every conv stage; None means the ``ref`` composition
+    (lax.conv — the fast path for training, with well-tuned gradients).
     """
+    from repro.core.dhm.compiler import QuantSpec, compile_dhm
+
+    plan = compile_dhm(
+        topo,
+        params,
+        quant=QuantSpec(
+            weight_bits=weight_bits,
+            act_bits=act_bits,
+            pow2_weights=pow2_weights,
+        ),
+        backend=conv_backend if conv_backend is not None else "ref",
+    )
+    return plan(x)
+
+
+def cnn_apply_reference(
+    params: dict,
+    topo: CNNTopology,
+    x: jax.Array,
+    *,
+    weight_bits: int | None = None,
+    act_bits: int | None = None,
+    pow2_weights: bool = False,
+) -> jax.Array:
+    """The hand-composed forward pass (separate conv / bias / pool / act /
+    fake-quant XLA ops) — the oracle every compiled plan is tested against.
+    Kept free of the compiler and the fused kernels on purpose."""
     if pow2_weights:
         from repro.core.quant.pow2 import project_pow2_ste
 
@@ -201,36 +239,19 @@ def cnn_apply(
         spec = FixedPointSpec(bits=act_bits, frac_bits=act_bits - 2)
         return fake_quant_ste(h, spec)
 
-    if conv_backend is not None:
-        from repro.kernels.stream_conv import stream_conv_block
-
     h = x
     for spec, p in zip(topo.conv_layers, params["conv"]):
-        if conv_backend is not None:
-            # Fused streaming kernel: conv+bias+act+pool as one actor chain.
-            # Epilogue order is act-then-pool; identical to the reference's
-            # pool-then-act because the supported acts are monotone.
-            h = stream_conv_block(
-                h,
-                p["w"],
-                p["b"],
-                padding=spec.padding,
-                act=spec.act,
-                pool=spec.pool,
-                backend=conv_backend,
-            )
-        else:
-            h = jax.lax.conv_general_dilated(
-                h,
-                p["w"],
-                window_strides=(1, 1),
-                padding=spec.padding,
-                dimension_numbers=("NHWC", "HWIO", "NHWC"),
-            )
-            h = h + p["b"]
-            if spec.pool:
-                h = _maxpool(h, spec.pool)
-            h = _act(spec.act)(h)
+        h = jax.lax.conv_general_dilated(
+            h,
+            p["w"],
+            window_strides=(1, 1),
+            padding=spec.padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        h = h + p["b"]
+        if spec.pool:
+            h = _maxpool(h, spec.pool)
+        h = _act(spec.act)(h)
         h = maybe_qact(h)
     h = h.reshape(h.shape[0], -1)
     for i, p in enumerate(params["fc"]):

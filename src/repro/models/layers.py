@@ -83,7 +83,11 @@ def linear(x, p: dict, *, quant: Optional[str] = None):
     if "codes" in p:  # pow2_packed
         from repro.core.quant.packing import unpack_codes_u4
 
-        w = decode_pow2(unpack_codes_u4(p["codes"]), p["scale"]).astype(x.dtype)
+        codes = unpack_codes_u4(p["codes"])
+        # Odd layer widths are packed with a zero pad column; the scale
+        # keeps the true width, so slice the decoded codes back to it.
+        n = p["scale"].shape[-1]
+        w = decode_pow2(codes[..., :n], p["scale"]).astype(x.dtype)
     elif quant == "pow2_qat":
         w = project_pow2_ste(p["w"])
     else:
@@ -102,12 +106,21 @@ def init_linear(key, d_in: int, d_out: int, *, bias: bool = False, dtype=jnp.flo
 
 
 def pack_linear_pow2(p: dict) -> dict:
-    """Convert a dense linear param dict to packed pow2 serving format."""
+    """Convert a dense linear param dict to packed pow2 serving format.
+
+    Odd output widths are packed with a zero pad column (zero codes decode
+    to 0.0); the stored scale keeps the true width so ``linear`` can slice
+    the decoded weights back.
+    """
     from repro.core.quant.packing import pack_codes_u4
     from repro.core.quant.pow2 import pow2_codes
 
-    codes, scale = pow2_codes(p["w"], channel_axis=1)
-    out = {"codes": pack_codes_u4(codes), "scale": scale.reshape(-1)}
+    w = p["w"]
+    n = w.shape[1]
+    if n % 2:
+        w = jnp.pad(w, ((0, 0), (0, 1)))
+    codes, scale = pow2_codes(w, channel_axis=1)
+    out = {"codes": pack_codes_u4(codes), "scale": scale.reshape(-1)[:n]}
     if "b" in p:
         out["b"] = p["b"]
     return out

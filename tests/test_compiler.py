@@ -1,0 +1,468 @@
+"""Tests for the DHM compiler: compile-time validation, end-to-end
+equivalence of compiled plans vs the hand-composed reference (all three
+paper topologies, fp32 + quantized + pow2), the in-kernel feature-stream
+quantization, structural single-matmul guarantees on the compiler path,
+and the pipelined executor matching the single-device plan."""
+import os
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dhm.compiler import (
+    CompiledDHM,
+    QuantSpec,
+    compile_dhm,
+    emit_conv_stage,
+    validate_topology,
+)
+from repro.models.cnn import (
+    CNNTopology,
+    ConvLayerSpec,
+    LENET5,
+    PAPER_TOPOLOGIES,
+    cnn_apply,
+    cnn_apply_reference,
+    init_cnn,
+)
+
+
+def _count_primitive(jaxpr, name: str) -> int:
+    """Recursively count occurrences of a primitive in a jaxpr (descends
+    into pjit/scan/pallas_call sub-jaxprs)."""
+
+    def subjaxprs(val):
+        if isinstance(val, jax.core.ClosedJaxpr):
+            yield val.jaxpr
+        elif isinstance(val, jax.core.Jaxpr):
+            yield val
+        elif isinstance(val, (list, tuple)):
+            for v in val:
+                yield from subjaxprs(v)
+
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == name:
+            n += 1
+        for v in eqn.params.values():
+            for j in subjaxprs(v):
+                n += _count_primitive(j, name)
+    return n
+
+
+def _count_primitive_in_pallas(jaxpr, name: str) -> int:
+    """Count occurrences of ``name`` that live INSIDE pallas_call bodies."""
+
+    def subjaxprs(val):
+        if isinstance(val, jax.core.ClosedJaxpr):
+            yield val.jaxpr
+        elif isinstance(val, jax.core.Jaxpr):
+            yield val
+        elif isinstance(val, (list, tuple)):
+            for v in val:
+                yield from subjaxprs(v)
+
+    n = 0
+    for eqn in jaxpr.eqns:
+        for v in eqn.params.values():
+            for j in subjaxprs(v):
+                if eqn.primitive.name == "pallas_call":
+                    n += _count_primitive(j, name)
+                else:
+                    n += _count_primitive_in_pallas(j, name)
+    return n
+
+
+def _mk_inputs(topo, seed=4, batch=2):
+    params = init_cnn(jax.random.PRNGKey(seed - 1), topo)
+    x = jax.random.normal(
+        jax.random.PRNGKey(seed),
+        (batch, topo.input_hw, topo.input_hw, topo.input_channels),
+    )
+    return params, x
+
+
+class TestValidation:
+    def _topo(self, **layer_kw):
+        return CNNTopology(
+            name="bad", input_hw=12, input_channels=2,
+            conv_layers=(ConvLayerSpec(n_out=4, kernel=3, **layer_kw),),
+            fc_dims=(), n_classes=2,
+        )
+
+    def test_typo_act_raises_at_compile_time(self):
+        """A typo'd act raises a ValueError naming the options from
+        compile_dhm — not a KeyError deep inside a kernel trace."""
+        topo = self._topo(act="rleu")
+        params = init_cnn(jax.random.PRNGKey(0), topo)
+        with pytest.raises(ValueError, match="rleu.*none.*relu.*tanh"):
+            compile_dhm(topo, params)
+
+    def test_typo_padding_raises(self):
+        with pytest.raises(ValueError, match="SMAE"):
+            validate_topology(self._topo(padding="SMAE"))
+
+    def test_bad_pool_raises(self):
+        with pytest.raises(ValueError, match="pool"):
+            validate_topology(self._topo(pool=3))
+
+    def test_cnn_apply_validates_too(self):
+        """The model entry point inherits compile-time validation."""
+        topo = self._topo(act="rleu")
+        params = init_cnn(jax.random.PRNGKey(0), topo)
+        x = jnp.ones((1, 12, 12, 2))
+        with pytest.raises(ValueError, match="unknown act"):
+            cnn_apply(params, topo, x)
+
+    def test_emit_conv_stage_validates(self):
+        import types
+
+        spec = types.SimpleNamespace(padding="SAME", act="relu", pool=7)
+        with pytest.raises(ValueError, match="pool"):
+            emit_conv_stage((spec,))
+
+    def test_unknown_backend_raises(self):
+        params, _ = _mk_inputs(LENET5)
+        with pytest.raises(ValueError, match="unknown backend"):
+            compile_dhm(LENET5, params, backend="palas")
+
+    def test_bad_n_stages_raises(self):
+        params, _ = _mk_inputs(LENET5)
+        with pytest.raises(ValueError, match="n_stages"):
+            compile_dhm(LENET5, params, n_stages=3)  # LeNet5 has 2 conv layers
+
+    def test_bad_quant_bits_raise(self):
+        with pytest.raises(ValueError, match="act_bits"):
+            QuantSpec(act_bits=1)
+        with pytest.raises(ValueError, match="weight_bits"):
+            QuantSpec(weight_bits=0)
+
+
+class TestLoweringArtifacts:
+    def test_plan_carries_graph_and_assignment(self):
+        """The plan exposes the IR it lowered through: the paper-granularity
+        DPN and the min-max stage assignment costed from actor payloads."""
+        params, _ = _mk_inputs(LENET5)
+        plan = compile_dhm(LENET5, params, n_stages=2)
+        assert isinstance(plan, CompiledDHM)
+        assert plan.graph.total_multipliers() == LENET5.n_multipliers()
+        assert plan.assignment.n_stages == 2
+        # Stage costs come from the actor FLOP payloads: together they
+        # cover every actor in the graph (conv engines + neuron sums +
+        # activations + pools — slightly above the bare MAC workload).
+        assert sum(s.cost_flops for s in plan.stages) == pytest.approx(
+            plan.graph.total_flops()
+        )
+        assert sum(s.cost_flops for s in plan.stages) == pytest.approx(
+            LENET5.feature_extractor_ops(), rel=0.05
+        )
+        assert [s.conv_layers for s in plan.stages] == [(0,), (1,)]
+
+    def test_stage_partition_is_contiguous_cover(self):
+        params, _ = _mk_inputs(PAPER_TOPOLOGIES["cifar10"])
+        plan = compile_dhm(PAPER_TOPOLOGIES["cifar10"], params, n_stages=2)
+        covered = [i for s in plan.stages for i in s.conv_layers]
+        assert covered == list(range(len(plan.topo.conv_layers)))
+
+
+class TestEndToEndEquivalence:
+    """CompiledDHM logits vs the hand-composed cnn_apply_reference, for all
+    three paper topologies."""
+
+    @pytest.mark.parametrize("name", sorted(PAPER_TOPOLOGIES))
+    def test_fp32_oracle_backend_matches_reference(self, name):
+        """fp32 plan through the Pallas-interpreter oracle backend."""
+        topo = PAPER_TOPOLOGIES[name]
+        params, x = _mk_inputs(topo, batch=1)
+        plan = compile_dhm(topo, params, backend="pallas_interpret")
+        ref = cnn_apply_reference(params, topo, x)
+        np.testing.assert_allclose(
+            np.asarray(plan(x)), np.asarray(ref), rtol=1e-4, atol=1e-5
+        )
+
+    @pytest.mark.parametrize("name", sorted(PAPER_TOPOLOGIES))
+    def test_fp32_compiled_backend_matches_reference(self, name):
+        topo = PAPER_TOPOLOGIES[name]
+        params, x = _mk_inputs(topo)
+        plan = compile_dhm(topo, params, backend="pallas")
+        ref = cnn_apply_reference(params, topo, x)
+        np.testing.assert_allclose(
+            np.asarray(plan(x)), np.asarray(ref), rtol=1e-4, atol=1e-4
+        )
+
+    @pytest.mark.parametrize("name", sorted(PAPER_TOPOLOGIES))
+    def test_quantized_plan_matches_fake_quant_reference(self, name):
+        """Quantized plan (weights + in-kernel feature stream) vs the
+        model-level fake-quant composition, at the paper's bit-widths."""
+        bits = {"lenet5": 3, "cifar10": 6, "svhn": 6}[name]
+        topo = PAPER_TOPOLOGIES[name]
+        params, x = _mk_inputs(topo)
+        plan = compile_dhm(
+            topo, params,
+            quant=QuantSpec(weight_bits=bits, act_bits=bits),
+            backend="pallas",
+        )
+        ref = cnn_apply_reference(
+            params, topo, x, weight_bits=bits, act_bits=bits
+        )
+        np.testing.assert_allclose(
+            np.asarray(plan(x)), np.asarray(ref), rtol=1e-4, atol=1e-4
+        )
+
+    def test_pow2_packed_head_matches_projected_reference(self):
+        """quant.pow2_weights lowers the FC head through the packed
+        pow2_matmul kernel; logits must match the reference that computes
+        x @ project_pow2(w) densely."""
+        params, x = _mk_inputs(LENET5)
+        plan = compile_dhm(
+            LENET5, params, quant=QuantSpec(pow2_weights=True),
+            backend="pallas",
+        )
+        ref = cnn_apply_reference(params, LENET5, x, pow2_weights=True)
+        np.testing.assert_allclose(
+            np.asarray(plan(x)), np.asarray(ref), rtol=1e-4, atol=1e-3
+        )
+
+    def test_pow2_packed_head_keeps_ste_gradients(self):
+        """The packed forward must not kill pow2 QAT: grads reach every
+        parameter (straight-through, as with project_pow2_ste)."""
+        params, x = _mk_inputs(LENET5)
+
+        def loss(p):
+            return jnp.sum(cnn_apply(p, LENET5, x, pow2_weights=True) ** 2)
+
+        g = jax.grad(loss)(params)
+        for leaf in jax.tree_util.tree_leaves(g):
+            assert bool(jnp.all(jnp.isfinite(leaf)))
+        fc_w_grad = g["fc"][0]["w"]
+        assert float(jnp.max(jnp.abs(fc_w_grad))) > 0.0
+
+    def test_cnn_apply_is_the_compiled_plan(self):
+        """cnn_apply == compile_dhm(...)(x): one lowering path, no separate
+        hand-wired composition left in the model."""
+        params, x = _mk_inputs(LENET5)
+        plan = compile_dhm(LENET5, params, backend="ref")
+        np.testing.assert_array_equal(
+            np.asarray(cnn_apply(params, LENET5, x)), np.asarray(plan(x))
+        )
+
+    def test_n_stages_does_not_change_logits(self):
+        topo = PAPER_TOPOLOGIES["cifar10"]
+        params, x = _mk_inputs(topo)
+        one = compile_dhm(topo, params, n_stages=1)(x)
+        three = compile_dhm(topo, params, n_stages=3)(x)
+        np.testing.assert_allclose(
+            np.asarray(one), np.asarray(three), rtol=1e-5, atol=1e-6
+        )
+
+
+class TestFusedStreamQuant:
+    """The act_bits feature-stream quantization lives inside the fused
+    kernel epilogue and agrees with fake_quant_ste on every backend."""
+
+    @pytest.mark.parametrize("backend", ["pallas", "pallas_interpret", "ref"])
+    def test_matches_fake_quant_ste_reference(self, backend):
+        from repro.core.quant.fixed_point import FixedPointSpec, fake_quant_ste
+        from repro.kernels.stream_conv import (
+            stream_conv_block,
+            stream_conv_block_ref,
+        )
+
+        kx, kw, kb = jax.random.split(jax.random.PRNGKey(7), 3)
+        x = jax.random.normal(kx, (2, 13, 13, 3))
+        w = jax.random.normal(kw, (5, 5, 3, 8)) * 0.2
+        b = jax.random.normal(kb, (8,)) * 0.1
+        out = stream_conv_block(
+            x, w, b, padding="SAME", act="relu", pool=2, act_bits=4,
+            backend=backend,
+        )
+        unquant = stream_conv_block_ref(
+            x, w, b, padding="SAME", act="relu", pool=2
+        )
+        ref = fake_quant_ste(unquant, FixedPointSpec(bits=4, frac_bits=2))
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-5
+        )
+
+    def test_quant_is_inside_the_kernel(self):
+        """Structural: with act_bits set, the rounding happens inside the
+        pallas_call body (fused epilogue), with no separate post-conv quant
+        pass in the surrounding graph."""
+        from repro.kernels.stream_conv import stream_conv_block
+
+        x = jnp.ones((1, 16, 16, 3))
+        w = jnp.ones((5, 5, 3, 8))
+        b = jnp.ones((8,))
+        jaxpr = jax.make_jaxpr(
+            lambda a, ww, bb: stream_conv_block(
+                a, ww, bb, padding="SAME", act="relu", pool=2, act_bits=4,
+                backend="pallas_interpret",
+            )
+        )(x, w, b).jaxpr
+        total = _count_primitive(jaxpr, "round")
+        inside = _count_primitive_in_pallas(jaxpr, "round")
+        assert inside == 1
+        assert total == inside  # nothing quantizes the stream outside
+
+    def test_compiled_plan_uses_in_kernel_quant(self):
+        """The whole quantized plan traces with its only feature-stream
+        rounding inside pallas_call bodies (one per conv stage)."""
+        topo = LENET5
+        params, x = _mk_inputs(topo, batch=1)
+        plan = compile_dhm(
+            topo, params, quant=QuantSpec(act_bits=4),
+            backend="pallas_interpret",
+        )
+        jaxpr = jax.make_jaxpr(plan.features)(x).jaxpr
+        inside = _count_primitive_in_pallas(jaxpr, "round")
+        total = _count_primitive(jaxpr, "round")
+        assert inside == len(topo.conv_layers)
+        assert total == inside
+
+
+class TestStructureCompilerPath:
+    """The structural single-matmul guarantee carries over to the compiler
+    path: a compiled conv stage still traces to exactly ONE dot_general per
+    row block and zero lax.conv."""
+
+    @pytest.mark.parametrize("backend", ["pallas", "pallas_interpret"])
+    def test_single_matmul_per_row_block(self, backend):
+        topo = CNNTopology(
+            name="one", input_hw=32, input_channels=3,
+            conv_layers=(
+                ConvLayerSpec(n_out=32, kernel=5, padding="SAME", pool=2,
+                              act="relu"),
+            ),
+            fc_dims=(), n_classes=2,
+        )
+        params = init_cnn(jax.random.PRNGKey(0), topo)
+        plan = compile_dhm(topo, params, backend=backend)
+        x = jnp.ones((1, 32, 32, 3))
+        jaxpr = jax.make_jaxpr(plan.features)(x).jaxpr
+        assert _count_primitive(jaxpr, "dot_general") == 1
+        assert _count_primitive(jaxpr, "conv_general_dilated") == 0
+
+    def test_make_conv_stage_is_compiler_emitted(self):
+        """The pipeline stage-body builder and emit_conv_stage produce the
+        same computation (one lowering path for stage bodies)."""
+        import types
+
+        from repro.core.dhm.pipeline import make_conv_stage
+
+        k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+        params = {
+            "w": jax.random.normal(k1, (3, 3, 4, 4)) * 0.3,
+            "b": jnp.zeros((4,)),
+        }
+        x = jax.random.normal(k2, (2, 8, 8, 4))
+        via_pipeline = make_conv_stage(padding="SAME", act="tanh", pool=0)
+        spec = types.SimpleNamespace(padding="SAME", act="tanh", pool=0)
+        via_compiler = emit_conv_stage((spec,))
+        np.testing.assert_array_equal(
+            np.asarray(via_pipeline(params, x)),
+            np.asarray(via_compiler([params], x)),
+        )
+
+
+PIPELINE_PLAN_SUBPROCESS = r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.dhm.compiler import compile_dhm
+from repro.models.cnn import CNNTopology, ConvLayerSpec, init_cnn
+topo = CNNTopology(
+    name='pipe4', input_hw=8, input_channels=4,
+    conv_layers=tuple(
+        ConvLayerSpec(n_out=4, kernel=3, padding='SAME', pool=0, act='tanh')
+        for _ in range(4)
+    ),
+    fc_dims=(), n_classes=2,
+)
+plan = compile_dhm(topo, init_cnn(jax.random.PRNGKey(0), topo), n_stages=4)
+mesh = jax.make_mesh((4,), ('stage',))
+mbs = jax.random.normal(jax.random.PRNGKey(1), (6, 2, 8, 8, 4))
+out = plan.run_pipelined(mbs, mesh=mesh)
+seq = plan.features(mbs.reshape(-1, 8, 8, 4)).reshape(mbs.shape)
+assert np.allclose(np.asarray(out), np.asarray(seq), atol=1e-5), 'plan mismatch'
+print('OK')
+"""
+
+
+class TestPipelinedPlan:
+    def test_heterogeneous_stages_refuse_pipelining(self):
+        params, _ = _mk_inputs(LENET5)
+        plan = compile_dhm(LENET5, params, n_stages=2)
+        with pytest.raises(ValueError, match="homogeneous"):
+            plan.pipeline_stage_fn()
+
+    @pytest.mark.slow
+    def test_pipelined_plan_matches_single_device_4dev(self):
+        """The compiled staged plan on a 4-device mesh == the same plan run
+        sequentially on one device (subprocess with forced host devices)."""
+        repo_root = pathlib.Path(__file__).resolve().parents[1]
+        res = subprocess.run(
+            [sys.executable, "-c", PIPELINE_PLAN_SUBPROCESS],
+            capture_output=True,
+            text=True,
+            env={
+                **os.environ,
+                "XLA_FLAGS": "--xla_force_host_platform_device_count=4",
+                "PYTHONPATH": str(repo_root / "src"),
+            },
+            cwd=str(repo_root),
+            timeout=600,
+        )
+        assert res.returncode == 0, res.stderr[-2000:]
+        assert "OK" in res.stdout
+
+
+class TestPow2OddWidth:
+    """Satellite bugfix: odd output widths pack via an auto-pad instead of
+    raising (kernel wrapper) or being silently skipped (serving walk)."""
+
+    def test_quantize_weights_odd_n(self):
+        from repro.core.quant.pow2 import project_pow2
+        from repro.kernels.pow2_matmul import pow2_matmul, quantize_weights
+
+        kx, kw = jax.random.split(jax.random.PRNGKey(1))
+        x = jax.random.normal(kx, (9, 13))
+        w = jax.random.normal(kw, (13, 7))
+        packed, scale = quantize_weights(w)
+        assert scale.shape == (7,)
+        assert packed.shape == (13, 4)  # ceil(7/2) bytes
+        for backend in ("ref", "pallas", "pallas_interpret"):
+            out = pow2_matmul(
+                x, packed, scale, block_m=8, block_n=8, block_k=8,
+                backend=backend,
+            )
+            assert out.shape == (9, 7)
+            np.testing.assert_allclose(
+                np.asarray(out),
+                np.asarray(x @ project_pow2(w, channel_axis=1)),
+                rtol=1e-4, atol=1e-4,
+            )
+
+    def test_inconsistent_packed_scale_raises(self):
+        from repro.kernels.pow2_matmul import pow2_matmul
+
+        x = jnp.ones((4, 6))
+        packed = jnp.zeros((6, 2), jnp.uint8)  # 4 columns
+        scale = jnp.ones((7,))  # claims 7
+        with pytest.raises(ValueError, match="inconsistent"):
+            pow2_matmul(x, packed, scale)
+
+    def test_linear_pack_odd_n(self):
+        from repro.core.quant.pow2 import project_pow2
+        from repro.models.layers import linear, pack_linear_pow2
+
+        k1, k2 = jax.random.split(jax.random.PRNGKey(2))
+        p = {"w": jax.random.normal(k1, (12, 7)), "b": jnp.ones((7,))}
+        x = jax.random.normal(k2, (3, 12))
+        out = linear(x, pack_linear_pow2(p))
+        ref = x @ project_pow2(p["w"], channel_axis=1) + p["b"]
+        assert out.shape == (3, 7)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4
+        )

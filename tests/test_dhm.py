@@ -264,17 +264,20 @@ class TestPipeline:
     def test_pipeline_matches_sequential_4dev(self):
         """Streaming shard_map pipeline == sequential layer application
         (run in a subprocess with 4 forced host devices)."""
+        import os
+        import pathlib
+
+        repo_root = pathlib.Path(__file__).resolve().parents[1]
         res = subprocess.run(
             [sys.executable, "-c", PIPELINE_SUBPROCESS],
             capture_output=True,
             text=True,
             env={
+                **os.environ,
                 "XLA_FLAGS": "--xla_force_host_platform_device_count=4",
-                "PYTHONPATH": "src",
-                "PATH": "/usr/bin:/bin",
-                "HOME": "/root",
+                "PYTHONPATH": str(repo_root / "src"),
             },
-            cwd="/root/repo",
+            cwd=str(repo_root),
             timeout=600,
         )
         assert res.returncode == 0, res.stderr[-2000:]
