@@ -1,12 +1,14 @@
 """End-to-end compiled-plan throughput (the per-PR Table-4 analogue).
 
-For each paper topology, lower a full plan through ``compile_dhm`` (the
-single lowering path everything routes through) twice — fp32 and at the
-paper's bit-width (weights + in-kernel feature-stream quantization) — and
-measure frames/sec of the whole plan: fused conv stages + FC head. The
-rows land in ``BENCH_kernels.json`` alongside the kernel micro-benchmarks,
-so the end-to-end throughput trajectory is recorded per PR, not just the
-isolated kernel times.
+For each benchmarked topology — the three paper nets plus the generalized
+non-paper ones (cifar10_full: overlapping 3x3/stride-2 pool;
+cifar10_strided: stride-2 downsampling convs) — lower a full plan through
+``compile_dhm`` (the single lowering path everything routes through)
+twice — fp32 and at the selected bit-width (weights + in-kernel
+feature-stream quantization) — and measure frames/sec of the whole plan:
+fused conv stages + FC head. The rows land in ``BENCH_kernels.json``
+alongside the kernel micro-benchmarks, so the end-to-end throughput
+trajectory is recorded per PR, not just the isolated kernel times.
 """
 from __future__ import annotations
 
@@ -15,37 +17,46 @@ import time
 import jax
 
 from repro.core.dhm.compiler import QuantSpec, compile_dhm
-from repro.models.cnn import PAPER_TOPOLOGIES, init_cnn
+from repro.models.cnn import ALL_TOPOLOGIES, init_cnn
 
-# Paper bit-widths (Table 3): 3 bits LeNet5, 6 bits Cifar10/SVHN.
-PAPER_BITS = {"lenet5": 3, "cifar10": 6, "svhn": 6}
+# Paper bit-widths (Table 3): 3 bits LeNet5, 6 bits Cifar10/SVHN; the
+# non-paper Cifar10 variants inherit the Cifar10 regime.
+PAPER_BITS = {
+    "lenet5": 3, "cifar10": 6, "svhn": 6,
+    "cifar10_full": 6, "cifar10_strided": 6,
+}
 BATCH = 8
 
 
 def _time(fn, *args, reps=10, passes=3):
     """Best-of-``passes`` timing (each pass averages ``reps`` calls), so
     the recorded per-PR trajectory reflects the achievable rate rather
-    than scheduler noise on a shared machine."""
+    than scheduler noise on a shared machine. Every rep blocks on its own
+    output: with only the last rep blocked, JAX's async dispatch overlaps
+    host-side dispatch of rep i+1 with device execution of rep i and the
+    per-call latency under-reports."""
     fn(*args).block_until_ready()  # compile
     best = float("inf")
     for _ in range(passes):
         t0 = time.time()
         for _ in range(reps):
-            out = fn(*args)
-        out.block_until_ready()
+            fn(*args).block_until_ready()
         best = min(best, (time.time() - t0) / reps * 1e6)
     return best
 
 
 def run() -> list:
     rows = []
-    for name in ("lenet5", "cifar10", "svhn"):
-        topo = PAPER_TOPOLOGIES[name]
+    for name in (
+        "lenet5", "cifar10", "svhn", "cifar10_full", "cifar10_strided"
+    ):
+        topo = ALL_TOPOLOGIES[name]
         bits = PAPER_BITS[name]
         params = init_cnn(jax.random.PRNGKey(0), topo)
+        h_in, w_in = topo.input_shape
         x = jax.random.normal(
             jax.random.PRNGKey(1),
-            (BATCH, topo.input_hw, topo.input_hw, topo.input_channels),
+            (BATCH, h_in, w_in, topo.input_channels),
         )
         variants = (
             ("fp32", QuantSpec()),

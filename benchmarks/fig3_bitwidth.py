@@ -25,7 +25,7 @@ def run(networks=("lenet5",)) -> list:
         topo = PAPER_TOPOLOGIES[name]
         trained = get_trained_cnn(name)
         ds = make_image_dataset(
-            hw=topo.input_hw, channels=topo.input_channels, seed=0
+            hw=topo.square_input_hw(), channels=topo.input_channels, seed=0
         )
 
         def eval_at(bits: int) -> float:

@@ -29,11 +29,12 @@ from repro.kernels.stream_conv.legacy import stream_conv2d_pallas_seed
 
 
 def _time(fn, *args, reps=3):
+    """Every rep blocks on its own output — blocking only on the last
+    dispatch lets async dispatch overlap reps and under-report latency."""
     fn(*args).block_until_ready()  # compile
     t0 = time.time()
     for _ in range(reps):
-        out = fn(*args)
-    out.block_until_ready()
+        fn(*args).block_until_ready()
     return (time.time() - t0) / reps * 1e6
 
 

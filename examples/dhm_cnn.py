@@ -94,6 +94,27 @@ def main():
           f"{tuple(logits.shape)}: matches fake-quant reference={ok}, "
           f"{us:.0f} us/call ({8 / (us * 1e-6):.0f} frames/s)")
 
+    print("\n== 4b. Generalized layer vocabulary: cifar10_full ==")
+    # Beyond the paper's three nets: Caffe's cifar10_full uses OVERLAPPING
+    # 3x3/stride-2 pooling (window != stride). The same compile_dhm pass
+    # lowers it — generalized fused epilogue, pool-aware row blocking —
+    # with no topology-specific code.
+    from repro.models.cnn import CIFAR10_FULL, init_cnn as _init
+
+    full_params = _init(jax.random.PRNGKey(2), CIFAR10_FULL)
+    full_plan = compile_dhm(
+        CIFAR10_FULL, full_params, quant=QuantSpec(weight_bits=6, act_bits=6)
+    )
+    xf = jax.random.normal(jax.random.PRNGKey(3), (4, 32, 32, 3))
+    ref_f = cnn_apply_reference(full_params, CIFAR10_FULL, xf,
+                                weight_bits=6, act_bits=6)
+    ok = np.allclose(np.asarray(full_plan(xf)), np.asarray(ref_f), atol=1e-4)
+    shapes = " -> ".join(
+        f"{h}x{w}" for (_, _, _, h, w) in CIFAR10_FULL.conv_shapes()
+    )
+    print(f"  cifar10_full (3x3/stride-2 overlapping pool, conv dims "
+          f"{shapes}): quantized plan matches reference={ok}")
+
     print("\n== 5. Same plan, spatial pipeline on 4 virtual devices ==")
     # A homogeneous 4-conv-layer topology (SAME, pool=0, C == N) so every
     # compiled stage is shape-identical; the SAME compiled plan then runs

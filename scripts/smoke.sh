@@ -1,13 +1,23 @@
 #!/usr/bin/env bash
-# One-command smoke: tier-1 test suite + the (non --full) benchmark run.
-# Usage: scripts/smoke.sh
+# One-command smoke: test suite + the (non --full) benchmark run.
+# Usage: scripts/smoke.sh [--full]
+#   default: fast tier (slow-marked tests skipped — the interpret-mode
+#            oracle subprocess/e2e tests that dominate wall time)
+#   --full:  the whole tier-1 suite (what CI's nightly / the driver runs:
+#            PYTHONPATH=src python -m pytest -x -q)
 # Leaves BENCH_kernels.json and BENCH.csv in the repo root.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1 tests =="
-python -m pytest -x -q
+PYTEST_ARGS=(-x -q)
+if [[ "${1:-}" == "--full" || "${SMOKE_FULL:-0}" == "1" ]]; then
+  echo "== tier-1 tests (full) =="
+else
+  echo "== tier-1 tests (fast tier; slow-marked skipped — use --full) =="
+  PYTEST_ARGS+=(-m "not slow")
+fi
+python -m pytest "${PYTEST_ARGS[@]}"
 
 echo "== benchmarks (non-full) =="
 python -m benchmarks.run | tee BENCH.csv
@@ -29,7 +39,8 @@ expected = [
     "kernel/stream_conv_cifar_c1_fused",
 ] + [
     f"e2e/{net}_{variant}_plan"
-    for net in ("lenet5", "cifar10", "svhn")
+    for net in ("lenet5", "cifar10", "svhn", "cifar10_full",
+                "cifar10_strided")
     for variant in ("fp32", "quant")
 ]
 missing = [n for n in expected if n not in rows]
@@ -42,7 +53,7 @@ assert {"seed", "fused"} <= paths, f"missing kernel paths in record: {paths}"
 fused = rows["kernel/stream_conv_cifar_c1_fused"]
 print(f"fused stream conv: {fused['us_per_call']:.0f} us/call, "
       f"x{fused['speedup_vs_seed']:.1f} vs seed interpret path")
-for net in ("lenet5", "cifar10", "svhn"):
+for net in ("lenet5", "cifar10", "svhn", "cifar10_full", "cifar10_strided"):
     fp = rows[f"e2e/{net}_fp32_plan"]
     q = rows[f"e2e/{net}_quant_plan"]
     print(f"e2e {net}: fp32 {fp['frames_per_s']:.0f} frames/s, "

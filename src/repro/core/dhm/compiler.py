@@ -47,7 +47,7 @@ import jax.numpy as jnp
 from repro.core.dhm.graph import DataflowGraph, cnn_to_dpn
 from repro.core.dhm.mapping import StageAssignment, partition_stages
 from repro.kernels.backends import DEFAULT_BACKEND, validate_backend
-from repro.kernels.stream_conv.epilogue import ACTS, POOLS
+from repro.kernels.stream_conv.epilogue import ACTS, normalize_pool
 
 PADDINGS = ("SAME", "VALID")
 
@@ -92,14 +92,33 @@ class QuantSpec:
         return self.pow2_weights and self.weight_bits is None
 
 
-def _validate_layer(where: str, *, padding: str, act: str, pool: int) -> None:
-    """Compile-time validation of the epilogue vocabulary — a typo raises
+def _spec_fields(spec) -> dict:
+    """The layer vocabulary of a (duck-typed) conv-layer spec, with the
+    generalized fields defaulted for specs that predate them."""
+    return dict(
+        padding=spec.padding,
+        act=spec.act,
+        pool=spec.pool,
+        pool_stride=getattr(spec, "pool_stride", None),
+        stride=getattr(spec, "stride", 1),
+    )
+
+
+def _validate_layer(
+    where: str, *, padding: str, act: str, pool: int,
+    pool_stride: int | None = None, stride: int = 1,
+) -> None:
+    """Compile-time validation of the layer vocabulary — a typo raises
     here with the options listed, not as a trace-time KeyError."""
     if act not in ACTS:
         raise ValueError(f"{where}: unknown act {act!r}; expected one of {ACTS}")
-    if pool not in POOLS:
+    try:
+        normalize_pool(pool, pool_stride)
+    except ValueError as e:
+        raise ValueError(f"{where}: {e}") from None
+    if not isinstance(stride, int) or isinstance(stride, bool) or stride < 1:
         raise ValueError(
-            f"{where}: unsupported pool {pool!r}; expected one of {POOLS}"
+            f"{where}: conv stride must be a positive int, got {stride!r}"
         )
     if padding not in PADDINGS:
         raise ValueError(
@@ -108,12 +127,32 @@ def _validate_layer(where: str, *, padding: str, act: str, pool: int) -> None:
 
 
 def validate_topology(topo) -> None:
-    """Validate every conv layer of a CNNTopology at compile time."""
+    """Validate every conv layer of a CNNTopology at compile time: the
+    layer vocabulary, and (when the topology exposes shape methods) that
+    every layer keeps positive spatial dims — a pool window larger than
+    its conv output raises here, instead of silently emitting a
+    zero-sized frame."""
     for li, spec in enumerate(topo.conv_layers):
-        _validate_layer(
-            f"{topo.name} conv layer {li}",
-            padding=spec.padding, act=spec.act, pool=spec.pool,
-        )
+        _validate_layer(f"{topo.name} conv layer {li}", **_spec_fields(spec))
+    if not hasattr(topo, "input_shape"):
+        return
+    h, w = topo.input_shape
+    for li, spec in enumerate(topo.conv_layers):
+        where = f"{topo.name} conv layer {li}"
+        h_c, w_c = spec.conv_hw(h, w)
+        if h_c < 1 or w_c < 1:
+            raise ValueError(
+                f"{where}: conv output {h_c}x{w_c} is empty for a {h}x{w} "
+                f"input (kernel={spec.kernel}, stride={spec.stride}, "
+                f"padding={spec.padding})"
+            )
+        pw, _ = spec.pool_cfg
+        if pw and (h_c < pw or w_c < pw):
+            raise ValueError(
+                f"{where}: conv output {h_c}x{w_c} too small for a "
+                f"{pw}x{pw} pool window"
+            )
+        h, w = spec.out_hw(h, w)
 
 
 @functools.lru_cache(maxsize=64)
@@ -149,28 +188,30 @@ def emit_conv_stage(
     backend: Optional[str] = None,
     act_bits: Optional[int] = None,
     block_r: int = 8,
+    block_w: int = 0,
     block_c: int = 0,
     block_n: int = 0,
 ) -> Callable:
     """Emit one pipeline-stage body: a chain of fused conv actor blocks.
 
     ``specs`` is a sequence of conv-layer specs (anything with ``padding``,
-    ``act``, ``pool`` attributes — e.g. ``ConvLayerSpec``). The returned
-    ``stage_fn(params, x)`` runs conv -> bias -> act (-> pool -> stream
-    quant) per layer, each as a single fused kernel call. ``params`` is a
-    list with one ``{"w": (K, K, C, N), "b": (N,)}`` dict per layer (a bare
-    dict is accepted for single-layer stages).
+    ``act``, ``pool`` attributes — e.g. ``ConvLayerSpec``; the generalized
+    ``stride``/``pool_stride`` fields default to 1/window when absent).
+    The returned ``stage_fn(params, x)`` runs conv -> bias -> act (-> pool
+    -> stream quant) per layer, each as a single fused kernel call.
+    ``params`` is a list with one ``{"w": (K, K, C, N), "b": (N,)}`` dict
+    per layer (a bare dict is accepted for single-layer stages).
     """
     from repro.kernels.stream_conv import stream_conv_block
 
     specs = tuple(specs)
     if not specs:
         raise ValueError("a conv stage needs at least one layer spec")
+    layer_kw = []
     for li, spec in enumerate(specs):
-        _validate_layer(
-            f"stage layer {li}",
-            padding=spec.padding, act=spec.act, pool=spec.pool,
-        )
+        fields = _spec_fields(spec)
+        _validate_layer(f"stage layer {li}", **fields)
+        layer_kw.append(fields)
     resolved = validate_backend(
         DEFAULT_BACKEND if backend is None else backend
     )
@@ -182,19 +223,18 @@ def emit_conv_stage(
                 f"stage has {len(specs)} layers but got "
                 f"{len(layer_params)} param dicts"
             )
-        for spec, p in zip(specs, layer_params):
+        for kw, p in zip(layer_kw, layer_params):
             x = stream_conv_block(
                 x,
                 p["w"],
                 p["b"],
-                padding=spec.padding,
-                act=spec.act,
-                pool=spec.pool,
                 act_bits=act_bits,
                 backend=resolved,
                 block_r=block_r,
+                block_w=block_w,
                 block_c=block_c,
                 block_n=block_n,
+                **kw,
             )
         return x
 
@@ -383,6 +423,7 @@ def compile_dhm(
     n_stages: int = 1,
     backend: Optional[str] = None,
     block_r: int = 8,
+    block_w: int = 0,
     block_c: int = 0,
     block_n: int = 0,
 ) -> CompiledDHM:
@@ -426,6 +467,7 @@ def compile_dhm(
                     backend=resolved,
                     act_bits=quant.act_bits,
                     block_r=block_r,
+                    block_w=block_w,
                     block_c=block_c,
                     block_n=block_n,
                 ),

@@ -106,10 +106,16 @@ def cnn_to_dpn(topo, *, bits: int) -> DataflowGraph:
     edges: list = []
     prev_outputs = ["input"]
     layer_idx = 0
+    h_in, w_in = topo.input_shape
     for li, (c_in, n_out, k, h_out, w_out) in enumerate(topo.conv_shapes()):
         spec = topo.conv_layers[li]
         layer_idx += 1
         acc_bits = 2 * bits + _ceil_log2(k * k * max(1, c_in))
+        # The sliding-window buffer holds (K-1) *input* lines: with SAME
+        # stride-1 convs (the paper nets) the input and conv-output widths
+        # coincide, but strided/VALID layers must buffer the wider input
+        # frame, not the conv output.
+        line_w = w_in
         # One sliding-window line buffer per *input stream*, shared by all N
         # engines that read it ([10]; this is why the paper's memory
         # footprint stays tiny).
@@ -120,7 +126,7 @@ def cnn_to_dpn(topo, *, bits: int) -> DataflowGraph:
                 Actor(
                     name=wname,
                     kind=ActorKind.WINDOW,
-                    line_buffer_bits=(k - 1) * w_out * bits,
+                    line_buffer_bits=(k - 1) * line_w * bits,
                     stream_bytes=h_out * w_out * bits / 8.0,
                     layer=layer_idx,
                 )
@@ -171,16 +177,22 @@ def cnn_to_dpn(topo, *, bits: int) -> DataflowGraph:
             )
             edges.append((sum_name, act_name))
             out_name = act_name
-            if spec.pool:
+            pw, ps = spec.pool_cfg
+            if pw:
                 pool_name = f"pool{li + 1}_n{n}"
-                h_p = h_out // spec.pool
+                # VALID sliding-window output dims: window pw, stride ps
+                # (NOT h_out // window — that silently mis-shapes every
+                # overlapping pool). The streaming pool buffers (pw - 1)
+                # conv-output lines regardless of stride.
+                h_p = (h_out - pw) // ps + 1
+                w_p = (w_out - pw) // ps + 1
                 actors.append(
                     Actor(
                         name=pool_name,
                         kind=ActorKind.POOL,
-                        flops=1.0 * h_out * w_out,
-                        line_buffer_bits=(spec.pool - 1) * w_out * bits,
-                        stream_bytes=h_p * h_p * bits / 8.0,
+                        flops=1.0 * pw * pw * h_p * w_p,
+                        line_buffer_bits=(pw - 1) * w_out * bits,
+                        stream_bytes=h_p * w_p * bits / 8.0,
                         layer=layer_idx,
                     )
                 )
@@ -188,6 +200,7 @@ def cnn_to_dpn(topo, *, bits: int) -> DataflowGraph:
                 out_name = pool_name
             neuron_names.append(out_name)
         prev_outputs = neuron_names
+        h_in, w_in = spec.out_hw(h_in, w_in)
     actors.append(
         Actor(name="output", kind=ActorKind.SINK, layer=layer_idx + 1)
     )

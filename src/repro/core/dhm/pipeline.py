@@ -157,6 +157,8 @@ def make_conv_stage(
     padding: str = "SAME",
     act: str = "relu",
     pool: int = 0,
+    pool_stride: int | None = None,
+    stride: int = 1,
     act_bits: int | None = None,
     backend: str | None = None,
 ):
@@ -166,13 +168,17 @@ def make_conv_stage(
 
     Thin veneer over :func:`repro.core.dhm.compiler.emit_conv_stage`, so
     the pipeline stage bodies and the single-device plans share ONE
-    lowering path (act/pool/padding are validated at build time there).
-    With SAME padding, ``pool=0`` and C == N the stage is
-    shape-homogeneous, which is what ``pipeline_forward`` requires.
+    lowering path (act/pool/padding/stride are validated at build time
+    there). With SAME padding, ``stride=1``, ``pool=0`` and C == N the
+    stage is shape-homogeneous, which is what ``pipeline_forward``
+    requires.
     """
     import types
 
     from repro.core.dhm.compiler import emit_conv_stage
 
-    spec = types.SimpleNamespace(padding=padding, act=act, pool=pool)
+    spec = types.SimpleNamespace(
+        padding=padding, act=act, pool=pool, pool_stride=pool_stride,
+        stride=stride,
+    )
     return emit_conv_stage((spec,), backend=backend, act_bits=act_bits)

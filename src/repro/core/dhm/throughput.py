@@ -39,7 +39,8 @@ class ThroughputReport:
 def dhm_throughput_gops(topo, f_clk_mhz: float) -> ThroughputReport:
     """Throughput of a DHM-mapped feature extractor at a clock frequency."""
     ops = topo.feature_extractor_ops()
-    samples = topo.input_hw * topo.input_hw * topo.input_channels
+    h_in, w_in = topo.input_shape
+    samples = h_in * w_in * topo.input_channels
     f = f_clk_mhz * 1e6
     gops = f * ops / samples / 1e9
     return ThroughputReport(

@@ -1,35 +1,49 @@
-"""Pallas TPU kernel: row-blocked streaming convolution with a fused
+"""Pallas TPU kernel: row/column-blocked streaming convolution with a fused
 conv -> bias -> activation -> pool epilogue (paper [10], §5).
 
 The FPGA conv engine of the paper chains three always-firing actors —
 convolution, activation, pooling — with no intermediate frame storage. The
-TPU rendering streams the image through the grid in **row blocks** and runs
-the whole actor chain on each block before anything is written back:
+TPU rendering streams the image through the grid in **row x column blocks**
+and runs the whole actor chain on each block before anything is written
+back:
 
-  grid = (B, H_out/R, N/bn, C/bc): one R-row block of output per
-  (batch, row-block, feature-block) cell, accumulated over channel blocks.
-  Each step
+  grid = (B, H'/R, W'/WC, N/bn, C/bc): one (R x WC)-output tile per
+  (batch, row-block, col-block, feature-block) cell, accumulated over
+  channel blocks. Each step
 
-    1. receives R+K-1 input rows through the BlockSpec pipeline (an R-row
-       body block plus a (K-1)-row halo — the halo is the line buffer: the
-       only rows ever fetched twice),
-    2. assembles the K*K shifted views into ONE (R*W_out, K*K*bc) operand
-       and issues a SINGLE MXU matmul against the flattened
-       (K*K*bc, bn) tap matrix — the fully-unrolled multiplier array of
-       Fig. 1-c collapsed into one systolic pass, not K*K per-tap dots,
+    1. receives its input tile through the BlockSpec pipeline: an
+       (R*s x WC*s) body block plus a halo strip on the bottom/right edge
+       (and the corner) — the halo is the line buffer: the only pixels
+       ever fetched twice. The halo width ``hb = max(0, (P_w - P_s)*s +
+       K - s)`` covers both the conv window overlap (K - s) and the pool
+       window overlap ((P_w - P_s) conv rows re-computed so overlapping
+       pool windows never straddle a block boundary),
+    2. assembles the K*K stride-s shifted views into ONE
+       (R'*WC', K*K*bc) operand and issues a SINGLE MXU matmul against the
+       flattened (K*K*bc, bn) tap matrix — the fully-unrolled multiplier
+       array of Fig. 1-c collapsed into one systolic pass, not K*K
+       per-tap dots,
     3. on the last channel block, applies the fused epilogue in VMEM:
-       + bias, activation (relu/tanh), 2x2 max-pool — conv, activation and
-       pooling actors as one hardware pipeline stage,
-    4. writes back only the pooled block: HBM traffic is one read of x
-       (plus the (K-1)-row halo), zero intermediate conv/activation frames,
-       and a 4x-smaller pooled output.
+       + bias, activation (relu/tanh), P_w x P_w / stride-P_s max-pool —
+       conv, activation and pooling actors as one hardware pipeline stage,
+    4. writes back only the pooled tile: HBM traffic is one read of x
+       (plus the halo strips), zero intermediate conv/activation frames,
+       and a pool-factor-smaller output.
 
 Weights are expected as (K*K, C, N) — taps flattened, channels C and
-features N as the hardware-aligned dims. VALID padding, stride 1 (SAME is
-padded by the host wrapper, as the FPGA engine pads the pixel stream at
-frame edges). Channel blocks (``block_c``) and feature blocks (``block_n``)
-bound the VMEM working set so CIFAR/SVHN-sized layers fit; row blocks
-(``block_r``) amortize grid overhead and feed the MXU tall operands.
+features N as the hardware-aligned dims. VALID padding, conv stride ``s``
+(SAME is padded by the host wrapper, as the FPGA engine pads the pixel
+stream at frame edges). Channel blocks (``block_c``) and feature blocks
+(``block_n``) bound the VMEM working set so CIFAR/SVHN-sized layers fit;
+row blocks (``block_r``) amortize grid overhead and feed the MXU tall
+operands; column blocks (``block_w``) let frames wider than VMEM lower
+(0 = whole width per block, the single-column-block fast path).
+
+Block-size legality: the conv-output rows per block R must be a multiple
+of lcm(pool stride, hb / gcd(hb, s)) so (a) pooled rows tile exactly and
+(b) the halo BlockSpec's element offset (rb+1)*R*s is expressible in
+halo-block units. Same rule for WC along the width. The wrapper rounds the
+requested block_r/block_w up to the nearest legal size.
 """
 from __future__ import annotations
 
@@ -42,59 +56,92 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.padding import pad_axis_to, round_up
-from repro.kernels.stream_conv.epilogue import apply_epilogue, validate_epilogue
+from repro.kernels.stream_conv.epilogue import (
+    apply_epilogue,
+    normalize_pool,
+    pool_out_dim,
+    validate_epilogue,
+)
 
 
 def _kernel_body(
-    x_blk, w_ref, b_ref, o_ref, acc_ref, *, k, r, w_out, act, pool, act_bits,
-    out_dtype,
+    x_blk, w_ref, b_ref, o_ref, acc_ref, *, k, s, r_conv, w_conv, act,
+    pool, pool_stride, act_bits, out_dtype,
 ):
-    """Shared body: x_blk is the (r + k - 1, W, bc) window block."""
-    cb = pl.program_id(3)
-    n_cb = pl.num_programs(3)
+    """Shared body: x_blk is the assembled ((r_conv-1)*s + k,
+    (w_conv-1)*s + k, bc) input tile (body + halo strips)."""
+    cb = pl.program_id(4)
+    n_cb = pl.num_programs(4)
 
     @pl.when(cb == 0)
     def _zero():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     bc = x_blk.shape[-1]
-    # K*K shifted views of the block -> one tall operand. Pure data
+    # K*K stride-s shifted views of the tile -> one tall operand. Pure data
     # movement (VPU); the contraction below is the only matmul.
     taps = []
     for ki in range(k):
-        band = jax.lax.slice_in_dim(x_blk, ki, ki + r, axis=0)  # (r, W, bc)
+        band = jax.lax.slice_in_dim(
+            x_blk, ki, ki + (r_conv - 1) * s + 1, stride=s, axis=0
+        )  # (r_conv, ·, bc)
         for kj in range(k):
-            taps.append(jax.lax.slice_in_dim(band, kj, kj + w_out, axis=1))
-    patches = jnp.stack(taps, axis=2)  # (r, w_out, k*k, bc)
-    operand = patches.reshape(r * w_out, k * k * bc).astype(jnp.float32)
+            taps.append(
+                jax.lax.slice_in_dim(
+                    band, kj, kj + (w_conv - 1) * s + 1, stride=s, axis=1
+                )
+            )
+    patches = jnp.stack(taps, axis=2)  # (r_conv, w_conv, k*k, bc)
+    operand = patches.reshape(r_conv * w_conv, k * k * bc).astype(jnp.float32)
     w_flat = w_ref[...].reshape(k * k * bc, -1).astype(jnp.float32)
-    # ONE MXU matmul per row block (per channel-block accumulation step).
+    # ONE MXU matmul per tile (per channel-block accumulation step).
     acc_ref[...] += jnp.dot(
         operand, w_flat, preferred_element_type=jnp.float32
-    ).reshape(r, w_out, -1)
+    ).reshape(r_conv, w_conv, -1)
 
     @pl.when(cb == n_cb - 1)
     def _write():
         y = apply_epilogue(
-            acc_ref[...], b_ref[...], act=act, pool=pool, act_bits=act_bits
+            acc_ref[...], b_ref[...], act=act, pool=pool,
+            pool_stride=pool_stride, act_bits=act_bits,
         )
         o_ref[0] = y.astype(out_dtype)
 
 
-def _fused_kernel_halo(x_cur_ref, x_halo_ref, w_ref, b_ref, o_ref, acc_ref, **kw):
-    x_blk = jnp.concatenate([x_cur_ref[0], x_halo_ref[0]], axis=0)
+def _fused_kernel_halo(
+    x_cur_ref, x_rh_ref, x_ch_ref, x_corner_ref, w_ref, b_ref, o_ref,
+    acc_ref, **kw,
+):
+    top = jnp.concatenate([x_cur_ref[0], x_ch_ref[0]], axis=1)
+    bot = jnp.concatenate([x_rh_ref[0], x_corner_ref[0]], axis=1)
+    x_blk = jnp.concatenate([top, bot], axis=0)
     _kernel_body(x_blk, w_ref, b_ref, o_ref, acc_ref, **kw)
 
 
-def _fused_kernel_k1(x_cur_ref, w_ref, b_ref, o_ref, acc_ref, **kw):
+def _fused_kernel_nohalo(x_cur_ref, w_ref, b_ref, o_ref, acc_ref, **kw):
     _kernel_body(x_cur_ref[0], w_ref, b_ref, o_ref, acc_ref, **kw)
+
+
+def _block_multiple(k: int, s: int, pw: int, ps: int) -> tuple:
+    """(legal block multiple, halo pixels, pool-overlap conv rows) for one
+    spatial dim. The block multiple is lcm(pool stride, hb/gcd(hb, s)):
+    pooled outputs must tile blocks exactly, and the halo BlockSpec offset
+    (idx+1)*R*s must land on a halo-block boundary."""
+    overlap = max(0, pw - ps) if pw else 0
+    hb = max(0, overlap * s + k - s)
+    mult = 1
+    if pw:
+        mult = math.lcm(mult, ps)
+    if hb:
+        mult = math.lcm(mult, hb // math.gcd(hb, s))
+    return mult, hb, overlap
 
 
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "k", "act", "pool", "act_bits", "block_r", "block_c", "block_n",
-        "out_dtype", "interpret",
+        "k", "stride", "act", "pool", "pool_stride", "act_bits",
+        "block_r", "block_w", "block_c", "block_n", "out_dtype", "interpret",
     ),
 )
 def stream_conv_fused_pallas(
@@ -103,96 +150,132 @@ def stream_conv_fused_pallas(
     bias: jax.Array,  # (N,)
     *,
     k: int,
+    stride: int = 1,
     act: str = "none",
     pool: int = 0,
+    pool_stride: int | None = None,
     act_bits: int | None = None,
     block_r: int = 8,
+    block_w: int = 0,  # 0 = full conv-output width per block
     block_c: int = 0,  # 0 = full C per step
     block_n: int = 0,  # 0 = full N per step
     out_dtype=jnp.float32,
     interpret: bool = False,
 ) -> jax.Array:
-    """Fused streaming conv. VALID, stride 1; pool in {0, 2}; act in
-    {none, relu, tanh}; ``act_bits`` quantizes the output feature stream
-    in-kernel. Returns (B, H', W', N) where H', W' are the conv output
-    dims, halved (floor) when pool == 2."""
+    """Fused streaming conv. VALID, conv stride ``stride``; ``pool`` is a
+    square max-pool window (0 = none) sliding with ``pool_stride``
+    (default: the window); act in {none, relu, tanh}; ``act_bits``
+    quantizes the output feature stream in-kernel. Returns (B, H', W', N)
+    where H', W' are the pooled output dims."""
     b, h, wd, c = x.shape
     kk, c2, n = w_taps.shape
     if kk != k * k or c2 != c:
         raise ValueError(f"w_taps {w_taps.shape} inconsistent with k={k}, C={c}")
     if bias.shape != (n,):
         raise ValueError(f"bias must be ({n},), got {bias.shape}")
-    validate_epilogue(act, pool, act_bits)
-    h_out, w_out = h - k + 1, wd - k + 1
+    if stride < 1:
+        raise ValueError(f"conv stride must be >= 1, got {stride}")
+    validate_epilogue(act, pool, pool_stride, act_bits)
+    pw, ps = normalize_pool(pool, pool_stride)
+    s = stride
+    h_out, w_out = (h - k) // s + 1, (wd - k) // s + 1
     if h_out <= 0 or w_out <= 0:
-        raise ValueError(f"image {h}x{wd} too small for k={k}")
-    if pool == 2 and (h_out < 2 or w_out < 2):
-        raise ValueError(f"conv output {h_out}x{w_out} too small for 2x2 pool")
+        raise ValueError(f"image {h}x{wd} too small for k={k}, stride={s}")
+    if pw and (h_out < pw or w_out < pw):
+        raise ValueError(
+            f"conv output {h_out}x{w_out} too small for {pw}x{pw} pool"
+        )
 
-    # Row block: a multiple of the halo height (so the halo BlockSpec's
-    # element offset (rb+1)*r is expressible in halo-block units) and of the
-    # pool stride, clipped to the smallest cover of h_out.
-    hb = k - 1
-    mult = 1
-    if hb:
-        mult = math.lcm(mult, hb)
-    if pool == 2:
-        mult = math.lcm(mult, 2)
+    mult, hb, overlap = _block_multiple(k, s, pw, ps)
     r = round_up(max(block_r, mult), mult)
     r = min(r, round_up(h_out, mult))
-    n_rb = -(-h_out // r)
+    wc = block_w if block_w > 0 else w_out
+    wc = round_up(max(wc, mult), mult)
+    wc = min(wc, round_up(w_out, mult))
+    # Conv rows/cols actually computed per block: the pool-window overlap
+    # rows are re-computed from the halo so overlapping pool windows never
+    # cross a block boundary.
+    r_conv, w_conv = r + overlap, wc + overlap
+
+    r_o = r // ps if pw else r
+    wc_o = wc // ps if pw else wc
+    h_keep = pool_out_dim(h_out, pw, ps) if pw else h_out
+    w_keep = pool_out_dim(w_out, pw, ps) if pw else w_out
+    n_rb = -(-h_keep // r_o)
+    n_wb = -(-w_keep // wc_o)
 
     bc = min(block_c, c) if block_c > 0 else c
     bn = min(block_n, n) if block_n > 0 else n
     c_pad = round_up(c, bc)
     n_pad = round_up(n, bn)
 
-    # Host-side zero padding: rows so every body+halo block is in bounds
-    # (zero rows only feed discarded outputs), channels/features so the
-    # block grid divides evenly (zero channels contribute zero partials).
-    h_rows = n_rb * r + hb
-    xp = pad_axis_to(pad_axis_to(x, 1, h_rows), 3, c_pad)
+    # Host-side zero padding: rows/cols so every body+halo block is in
+    # bounds (pad pixels only feed discarded outputs: kept pool windows
+    # read only conv outputs < h_out/w_out, which read only real pixels),
+    # channels/features so the block grid divides evenly (zero channels
+    # contribute zero partials).
+    xp = pad_axis_to(x, 1, n_rb * r * s + hb)
+    xp = pad_axis_to(xp, 2, n_wb * wc * s + hb)
+    xp = pad_axis_to(xp, 3, c_pad)
     wp = pad_axis_to(pad_axis_to(w_taps, 1, c_pad), 2, n_pad)
     bp = pad_axis_to(bias, 0, n_pad)
 
-    r_out = r // 2 if pool == 2 else r
-    w_pool = w_out // 2 if pool == 2 else w_out
-    h_keep = h_out // 2 if pool == 2 else h_out
-
-    grid = (b, n_rb, n_pad // bn, c_pad // bc)
+    grid = (b, n_rb, n_wb, n_pad // bn, c_pad // bc)
     kw = dict(
-        k=k, r=r, w_out=w_out, act=act, pool=pool, act_bits=act_bits,
-        out_dtype=out_dtype,
+        k=k, s=s, r_conv=r_conv, w_conv=w_conv, act=act, pool=pool,
+        pool_stride=pool_stride, act_bits=act_bits, out_dtype=out_dtype,
     )
 
     in_specs = [
-        pl.BlockSpec((1, r, wd, bc), lambda bb, rb, nb, cb: (bb, rb, 0, cb)),
+        pl.BlockSpec(
+            (1, r * s, wc * s, bc),
+            lambda bb, rb, wb, nb, cb: (bb, rb, wb, cb),
+        ),
     ]
+    inputs = [xp]
     if hb:
-        stride = r // hb
-        in_specs.append(
+        # Halo strips: bottom rows, right cols, and the corner. Element
+        # offset (idx+1)*R*s expressed in hb-sized block units (legal by
+        # the block-multiple rule above).
+        rs_hb = r * s // hb
+        ws_hb = wc * s // hb
+        in_specs += [
             pl.BlockSpec(
-                (1, hb, wd, bc),
-                lambda bb, rb, nb, cb: (bb, (rb + 1) * stride, 0, cb),
-            )
-        )
+                (1, hb, wc * s, bc),
+                lambda bb, rb, wb, nb, cb: (bb, (rb + 1) * rs_hb, wb, cb),
+            ),
+            pl.BlockSpec(
+                (1, r * s, hb, bc),
+                lambda bb, rb, wb, nb, cb: (bb, rb, (wb + 1) * ws_hb, cb),
+            ),
+            pl.BlockSpec(
+                (1, hb, hb, bc),
+                lambda bb, rb, wb, nb, cb: (
+                    bb, (rb + 1) * rs_hb, (wb + 1) * ws_hb, cb
+                ),
+            ),
+        ]
+        inputs += [xp, xp, xp]
         kernel = functools.partial(_fused_kernel_halo, **kw)
     else:
-        kernel = functools.partial(_fused_kernel_k1, **kw)
+        kernel = functools.partial(_fused_kernel_nohalo, **kw)
     in_specs += [
-        pl.BlockSpec((k * k, bc, bn), lambda bb, rb, nb, cb: (0, cb, nb)),
-        pl.BlockSpec((bn,), lambda bb, rb, nb, cb: (nb,)),
+        pl.BlockSpec((k * k, bc, bn), lambda bb, rb, wb, nb, cb: (0, cb, nb)),
+        pl.BlockSpec((bn,), lambda bb, rb, wb, nb, cb: (nb,)),
     ]
+    inputs += [wp, bp]
 
     out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec(
-            (1, r_out, w_pool, bn), lambda bb, rb, nb, cb: (bb, rb, 0, nb)
+            (1, r_o, wc_o, bn), lambda bb, rb, wb, nb, cb: (bb, rb, wb, nb)
         ),
-        out_shape=jax.ShapeDtypeStruct((b, n_rb * r_out, w_pool, n_pad), out_dtype),
-        scratch_shapes=[pltpu.VMEM((r, w_out, bn), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct(
+            (b, n_rb * r_o, n_wb * wc_o, n_pad), out_dtype
+        ),
+        scratch_shapes=[pltpu.VMEM((r_conv, w_conv, bn), jnp.float32)],
         interpret=interpret,
-    )(*([xp] + ([xp] if hb else []) + [wp, bp]))
-    return out[:, :h_keep, :, :n]
+    )(*inputs)
+    return out[:, :h_keep, :w_keep, :n]

@@ -1,5 +1,5 @@
-"""Shared fused epilogue: bias -> activation -> 2x2 max-pool -> feature-stream
-fixed-point quantization.
+"""Shared fused epilogue: bias -> activation -> NxN/stride-s max-pool ->
+feature-stream fixed-point quantization.
 
 One definition used by BOTH compiled conv paths (the Pallas kernel body in
 ``conv.py`` and the XLA fallback in ``xla.py``), so the backends cannot
@@ -7,6 +7,13 @@ drift apart. The jnp reference (``ref.py``) deliberately keeps its own
 independent composition (``lax.reduce_window`` + ``fake_quant_ste``): it is
 the oracle the fused paths are tested against, so it must not share this
 code.
+
+Pooling is a square ``pool x pool`` max window sliding with ``pool_stride``
+(default: ``pool``, the classic non-overlapping case — ``pool=2`` keeps
+meaning 2x2/stride-2). Overlapping windows (``pool_stride < pool``, e.g.
+Caffe's cifar10_full 3x3/stride-2) and strided sub-sampling windows
+(``pool_stride > pool``) are both legal; output dims follow the VALID
+sliding-window rule ``(d - pool) // pool_stride + 1``.
 
 ``act_bits`` is the paper's "quantize the pixel flow": the inter-actor
 feature stream is a short fixed-point format, so the quantization step
@@ -18,7 +25,7 @@ and the forward computation — clip(round(y / scale)) * scale — is exactly
 ``fake_quant_ste``'s forward.
 
 Works on any (..., H, W, N) float32 block — the Pallas kernel calls it on
-a (r, w_out, bn) VMEM block, the XLA path on a (B, r, w_out, N) row block.
+an (r, w, bn) VMEM block, the XLA path on a (B, r, w, N) row block.
 """
 from __future__ import annotations
 
@@ -27,7 +34,41 @@ import jax.numpy as jnp
 from repro.core.quant.fixed_point import FixedPointSpec
 
 ACTS = ("none", "relu", "tanh")
-POOLS = (0, 2)
+
+
+def normalize_pool(pool: int, pool_stride: int | None = None) -> tuple:
+    """Normalize the (pool, pool_stride) sugar into a concrete
+    ``(window, stride)`` pair; ``(0, 0)`` means pooling disabled.
+
+    ``pool`` is the square window size (0 disables, the historic ``pool=2``
+    means 2x2); ``pool_stride=None`` defaults to the window (the
+    window == stride case every paper topology uses).
+    """
+    if pool is None:
+        pool = 0
+    if not isinstance(pool, int) or isinstance(pool, bool):
+        raise ValueError(f"pool must be an int window size, got {pool!r}")
+    if pool < 0:
+        raise ValueError(f"pool window must be >= 0 (0 = no pool), got {pool}")
+    if pool == 0:
+        if pool_stride not in (None, 0):
+            raise ValueError(
+                f"pool_stride={pool_stride!r} given but pooling is disabled "
+                "(pool=0)"
+            )
+        return (0, 0)
+    ps = pool if pool_stride is None else pool_stride
+    if not isinstance(ps, int) or isinstance(ps, bool) or ps < 1:
+        raise ValueError(
+            f"pool_stride must be a positive int (or None = window), got "
+            f"{pool_stride!r}"
+        )
+    return (pool, ps)
+
+
+def pool_out_dim(d: int, window: int, stride: int) -> int:
+    """VALID sliding-window output length for one spatial dim."""
+    return (d - window) // stride + 1
 
 
 def stream_quant_spec(act_bits: int) -> FixedPointSpec:
@@ -37,22 +78,48 @@ def stream_quant_spec(act_bits: int) -> FixedPointSpec:
     return FixedPointSpec(bits=act_bits, frac_bits=act_bits - 2)
 
 
-def validate_epilogue(act: str, pool: int, act_bits: int | None = None) -> None:
+def validate_epilogue(
+    act: str,
+    pool: int,
+    pool_stride: int | None = None,
+    act_bits: int | None = None,
+) -> None:
     if act not in ACTS:
         raise ValueError(f"unknown act {act!r}; expected one of {ACTS}")
-    if pool not in POOLS:
-        raise ValueError(f"pool must be 0 or 2, got {pool}")
+    normalize_pool(pool, pool_stride)
     if act_bits is not None and act_bits < 2:
         raise ValueError(f"act_bits must be >= 2 (or None), got {act_bits}")
 
 
+def _maxpool_window(y, window: int, stride: int):
+    """Square max-pool over the trailing (H, W, N) dims of ``y`` via
+    window*window shifted strided views — plain jnp ops (elementwise max +
+    static strided slices), so it runs unchanged inside a Pallas kernel
+    body on a VMEM-resident block."""
+    *_, h, w, _ = y.shape
+    hp = pool_out_dim(h, window, stride)
+    wp = pool_out_dim(w, window, stride)
+    out = None
+    for di in range(window):
+        for dj in range(window):
+            v = y[
+                ...,
+                di : di + (hp - 1) * stride + 1 : stride,
+                dj : dj + (wp - 1) * stride + 1 : stride,
+                :,
+            ]
+            out = v if out is None else jnp.maximum(out, v)
+    return out
+
+
 def apply_epilogue(
-    y, bias, *, act: str, pool: int, act_bits: int | None = None,
-    ste: bool = False,
+    y, bias, *, act: str, pool: int, pool_stride: int | None = None,
+    act_bits: int | None = None, ste: bool = False,
 ):
     """y: (..., H, W, N) f32; bias: (N,). Returns the block after
-    bias + activation + optional 2x2 max-pool (floor semantics) + optional
-    feature-stream quantization — all in-register/VMEM.
+    bias + activation + optional pool x pool / pool_stride max-pool (VALID
+    floor semantics) + optional feature-stream quantization — all
+    in-register/VMEM.
 
     ``ste=True`` routes the quantization through ``fake_quant_ste``
     (identity gradient inside the representable range) — same forward
@@ -61,18 +128,15 @@ def apply_epilogue(
     round/clip (``ste=False``): it is forward-only anyway, and the kernel
     program must stay plain jnp ops.
     """
-    validate_epilogue(act, pool, act_bits)
+    validate_epilogue(act, pool, pool_stride, act_bits)
+    pw, ps = normalize_pool(pool, pool_stride)
     y = y + bias.astype(jnp.float32)
     if act == "relu":
         y = jnp.maximum(y, 0.0)
     elif act == "tanh":
         y = jnp.tanh(y)
-    if pool == 2:
-        *lead, h, w, n = y.shape
-        h2, w2 = 2 * (h // 2), 2 * (w // 2)
-        y = y[..., :h2, :w2, :]
-        y = y.reshape(*lead, h2 // 2, 2, w2 // 2, 2, n)
-        y = y.max(axis=(-4, -2))
+    if pw:
+        y = _maxpool_window(y, pw, ps)
     if act_bits is not None:
         spec = stream_quant_spec(act_bits)
         if ste:

@@ -2,9 +2,12 @@
 
 ``stream_conv2d`` is the bare conv (kept for API compatibility and as the
 benchmark subject); ``stream_conv_block`` is the fused
-conv -> bias -> activation -> 2x2-max-pool actor chain — the DHM pipeline
+conv -> bias -> activation -> max-pool actor chain — the DHM pipeline
 stage — used by the CNN model, the DHM pipeline stage bodies, and the
-examples.
+examples. Both accept a conv ``stride``; the block additionally takes a
+``(pool, pool_stride)`` pair (square window, sliding stride; ``pool=2``
+keeps meaning the classic 2x2/stride-2) and ``block_w`` column blocking
+for frames wider than VMEM.
 
 Backends (validated; see ``repro.kernels.backends``):
   - ``pallas``:           compiled. Mosaic-compiled Pallas on TPU; on
@@ -32,18 +35,26 @@ from repro.kernels.stream_conv.ref import stream_conv_block_ref
 from repro.kernels.stream_conv.xla import stream_conv_fused_xla
 
 
-def _pad_same(x: jax.Array, k: int) -> jax.Array:
+def _pad_same(x: jax.Array, k: int, stride: int = 1) -> jax.Array:
     """SAME pads on the host side (the FPGA engine pads the pixel stream
-    at frame edges). XLA's SAME convention — low = (k-1)//2, high = k//2 —
-    so even-K results match the lax.conv reference backend exactly."""
-    lo = (k - 1) // 2
-    hi = k // 2
-    return jnp.pad(x, ((0, 0), (lo, hi), (lo, hi), (0, 0)))
+    at frame edges). XLA's SAME convention — per dim, total = max((ceil(d/s)
+    - 1)*s + k - d, 0), low = total//2, high = total - low — so strided and
+    even-K results match the lax.conv reference backend exactly."""
+
+    def split(d: int) -> tuple:
+        out = -(-d // stride)
+        tot = max((out - 1) * stride + k - d, 0)
+        lo = tot // 2
+        return lo, tot - lo
+
+    ph = split(x.shape[1])
+    pw = split(x.shape[2])
+    return jnp.pad(x, ((0, 0), ph, pw, (0, 0)))
 
 
 def _fused_dispatch(
-    x, w, b, *, padding, act, pool, act_bits, out_dtype, backend,
-    block_r, block_c, block_n,
+    x, w, b, *, padding, stride, act, pool, pool_stride, act_bits, out_dtype,
+    backend, block_r, block_w, block_c, block_n,
 ):
     k = w.shape[0]
     if w.shape[1] != k:
@@ -51,10 +62,11 @@ def _fused_dispatch(
     validate_backend(backend)
     if backend == "ref":
         return stream_conv_block_ref(
-            x, w, b, padding=padding, act=act, pool=pool, act_bits=act_bits
+            x, w, b, padding=padding, stride=stride, act=act, pool=pool,
+            pool_stride=pool_stride, act_bits=act_bits,
         ).astype(out_dtype)
     if padding == "SAME":
-        x = _pad_same(x, k)
+        x = _pad_same(x, k, stride)
     elif padding != "VALID":
         raise ValueError(padding)
     w_taps = w.reshape(k * k, w.shape[2], w.shape[3])
@@ -63,18 +75,21 @@ def _fused_dispatch(
         # Row blocks there are sized from a memory budget, not VMEM, so
         # the block_* tuning knobs are Pallas-only.
         return stream_conv_fused_xla(
-            x, w_taps, b, k=k, act=act, pool=pool, act_bits=act_bits,
-            out_dtype=out_dtype,
+            x, w_taps, b, k=k, stride=stride, act=act, pool=pool,
+            pool_stride=pool_stride, act_bits=act_bits, out_dtype=out_dtype,
         )
     return stream_conv_fused_pallas(
         x,
         w_taps,
         b,
         k=k,
+        stride=stride,
         act=act,
         pool=pool,
+        pool_stride=pool_stride,
         act_bits=act_bits,
         block_r=block_r,
+        block_w=block_w,
         block_c=block_c,
         block_n=block_n,
         out_dtype=out_dtype,
@@ -85,7 +100,8 @@ def _fused_dispatch(
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "padding", "backend", "out_dtype", "block_r", "block_c", "block_n"
+        "padding", "stride", "backend", "out_dtype", "block_r", "block_w",
+        "block_c", "block_n",
     ),
 )
 def stream_conv2d(
@@ -93,27 +109,30 @@ def stream_conv2d(
     w: jax.Array,  # (K, K, C, N) HWIO
     *,
     padding: str = "VALID",
+    stride: int = 1,
     out_dtype=jnp.float32,
     backend: str = DEFAULT_BACKEND,
     block_r: int = 8,
+    block_w: int = 0,
     block_c: int = 0,
     block_n: int = 0,
 ) -> jax.Array:
-    """Streaming conv2d, stride 1, no epilogue. SAME pads on the host side."""
+    """Streaming conv2d, stride ``stride``, no epilogue. SAME pads on the
+    host side."""
     zero_b = jnp.zeros((w.shape[3],), jnp.float32)
     return _fused_dispatch(
         x, w, zero_b,
-        padding=padding, act="none", pool=0, act_bits=None,
-        out_dtype=out_dtype, backend=backend,
-        block_r=block_r, block_c=block_c, block_n=block_n,
+        padding=padding, stride=stride, act="none", pool=0, pool_stride=None,
+        act_bits=None, out_dtype=out_dtype, backend=backend,
+        block_r=block_r, block_w=block_w, block_c=block_c, block_n=block_n,
     )
 
 
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "padding", "act", "pool", "act_bits", "backend", "out_dtype",
-        "block_r", "block_c", "block_n",
+        "padding", "stride", "act", "pool", "pool_stride", "act_bits",
+        "backend", "out_dtype", "block_r", "block_w", "block_c", "block_n",
     ),
 )
 def stream_conv_block(
@@ -122,22 +141,28 @@ def stream_conv_block(
     b: jax.Array,  # (N,)
     *,
     padding: str = "VALID",
+    stride: int = 1,
     act: str = "relu",
     pool: int = 2,
+    pool_stride: int | None = None,
     act_bits: int | None = None,
     out_dtype=jnp.float32,
     backend: str = DEFAULT_BACKEND,
     block_r: int = 8,
+    block_w: int = 0,
     block_c: int = 0,
     block_n: int = 0,
 ) -> jax.Array:
-    """Fused conv -> bias -> act -> 2x2-max-pool block (one DHM pipeline
-    stage). ``pool=0`` disables pooling, ``act='none'`` the activation;
-    ``act_bits`` quantizes the output feature stream inside the same fused
-    epilogue (the paper's quantized pixel flow — no separate HBM pass)."""
+    """Fused conv -> bias -> act -> NxN/stride-s-max-pool block (one DHM
+    pipeline stage). ``pool=0`` disables pooling, ``pool_stride=None``
+    means window == stride (so ``pool=2`` is the classic 2x2/2),
+    ``act='none'`` the activation; ``act_bits`` quantizes the output
+    feature stream inside the same fused epilogue (the paper's quantized
+    pixel flow — no separate HBM pass)."""
     return _fused_dispatch(
         x, w, b,
-        padding=padding, act=act, pool=pool, act_bits=act_bits,
+        padding=padding, stride=stride, act=act, pool=pool,
+        pool_stride=pool_stride, act_bits=act_bits,
         out_dtype=out_dtype, backend=backend,
-        block_r=block_r, block_c=block_c, block_n=block_n,
+        block_r=block_r, block_w=block_w, block_c=block_c, block_n=block_n,
     )

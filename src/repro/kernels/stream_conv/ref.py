@@ -1,13 +1,16 @@
 """Pure-jnp oracles for the streaming conv kernels.
 
-``stream_conv2d_ref`` is a plain VALID conv2d (NHWC x HWIO -> NHWC), stride
-1 — the semantics of the paper's dataflow conv engine once the stream is
-re-assembled into a frame. ``stream_conv_block_ref`` composes the UNFUSED
-actor chain (conv, + bias, activation, 2x2 max-pool, feature-stream
-fake-quant) as separate XLA ops; the fused kernels must match it exactly.
-The quantization step here deliberately goes through ``fake_quant_ste``
-(the model-level reference) so the in-kernel epilogue is tested against an
-independent rendering of the same Q-format.
+``stream_conv2d_ref`` is a plain VALID conv2d (NHWC x HWIO -> NHWC) with a
+configurable stride — the semantics of the paper's dataflow conv engine
+once the stream is re-assembled into a frame. ``stream_conv_block_ref``
+composes the UNFUSED actor chain (conv, + bias, activation, NxN/stride-s
+max-pool, feature-stream fake-quant) as separate XLA ops; the fused
+kernels must match it exactly. The quantization step here deliberately
+goes through ``fake_quant_ste`` (the model-level reference) so the
+in-kernel epilogue is tested against an independent rendering of the same
+Q-format, and the pooling goes through ``lax.reduce_window`` so the
+epilogue's shifted-strided-view pool is tested against an independent
+rendering too.
 """
 from __future__ import annotations
 
@@ -15,14 +18,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quant.fixed_point import FixedPointSpec, fake_quant_ste
+from repro.kernels.stream_conv.epilogue import ACTS, normalize_pool
 
 
-def stream_conv2d_ref(x: jax.Array, w: jax.Array) -> jax.Array:
-    """x: (B, H, W, C); w: (K, K, C, N). VALID, stride 1 -> (B, H-K+1, W-K+1, N)."""
+def stream_conv2d_ref(
+    x: jax.Array, w: jax.Array, *, stride: int = 1
+) -> jax.Array:
+    """x: (B, H, W, C); w: (K, K, C, N). VALID, stride ``stride`` ->
+    (B, (H-K)//s+1, (W-K)//s+1, N)."""
     return jax.lax.conv_general_dilated(
         x.astype(jnp.float32),
         w.astype(jnp.float32),
-        window_strides=(1, 1),
+        window_strides=(stride, stride),
         padding="VALID",
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
     )
@@ -34,16 +41,21 @@ def stream_conv_block_ref(
     b: jax.Array,  # (N,)
     *,
     padding: str = "VALID",
+    stride: int = 1,
     act: str = "none",
     pool: int = 0,
+    pool_stride: int | None = None,
     act_bits: int | None = None,
 ) -> jax.Array:
-    """Unfused conv -> bias -> act -> 2x2 max-pool -> fake-quant reference
-    composition."""
+    """Unfused conv -> bias -> act -> NxN/stride-s max-pool -> fake-quant
+    reference composition."""
+    if act not in ACTS:
+        raise ValueError(f"unknown act {act!r}")
+    pw, ps = normalize_pool(pool, pool_stride)
     y = jax.lax.conv_general_dilated(
         x.astype(jnp.float32),
         w.astype(jnp.float32),
-        window_strides=(1, 1),
+        window_strides=(stride, stride),
         padding=padding,
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
     )
@@ -52,19 +64,15 @@ def stream_conv_block_ref(
         y = jnp.maximum(y, 0.0)
     elif act == "tanh":
         y = jnp.tanh(y)
-    elif act != "none":
-        raise ValueError(f"unknown act {act!r}")
-    if pool == 2:
+    if pw:
         y = jax.lax.reduce_window(
             y,
             -jnp.inf,
             jax.lax.max,
-            window_dimensions=(1, 2, 2, 1),
-            window_strides=(1, 2, 2, 1),
+            window_dimensions=(1, pw, pw, 1),
+            window_strides=(1, ps, ps, 1),
             padding="VALID",
         )
-    elif pool != 0:
-        raise ValueError(f"pool must be 0 or 2, got {pool}")
     if act_bits is not None:
         y = fake_quant_ste(y, FixedPointSpec(bits=act_bits, frac_bits=act_bits - 2))
     return y

@@ -3,14 +3,18 @@ platforms where Mosaic/Pallas compilation is unavailable (XLA:CPU only
 supports the Pallas interpreter).
 
 Same algorithm as the Pallas kernel in ``conv.py``, including the row
-blocking: each R-row block's K*K shifted views are assembled into one tall
-operand and contracted against the flattened (K*K*C, N) tap matrix in a
-SINGLE matmul per row block, then the shared bias -> activation ->
-2x2-max-pool epilogue runs in-block. No ``lax.conv``, and no unbounded
-im2col: R is sized so the per-block operand stays under a fixed byte
-budget (the XLA analogue of the kernel's VMEM blocking), so arbitrarily
-large batch/feature-map products cannot blow up memory. Small workloads
-fit one block and skip the ``lax.map`` loop entirely.
+blocking: each row block's K*K stride-s shifted views are assembled into
+one tall operand and contracted against the flattened (K*K*C, N) tap
+matrix in a SINGLE matmul per row block, then the shared bias ->
+activation -> NxN/stride-s max-pool epilogue runs in-block (overlapping
+pool windows re-compute their ``pool - pool_stride`` boundary conv rows
+inside each block, exactly like the Pallas kernel's halo). No ``lax.conv``,
+and no unbounded im2col: R is sized so the per-block operand stays under a
+fixed byte budget (the XLA analogue of the kernel's VMEM blocking), so
+arbitrarily large batch/feature-map products cannot blow up memory. Small
+workloads fit one block and skip the ``lax.map`` loop entirely. Width
+blocking is a VMEM concern, not an XLA one — the whole output width is
+processed per row block here (``block_w`` is Pallas-only).
 """
 from __future__ import annotations
 
@@ -20,7 +24,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.padding import round_up
-from repro.kernels.stream_conv.epilogue import apply_epilogue, validate_epilogue
+from repro.kernels.stream_conv.epilogue import (
+    apply_epilogue,
+    normalize_pool,
+    pool_out_dim,
+    validate_epilogue,
+)
 
 # Per-block im2col operand budget. ~128 MB: big enough that realistic
 # single-frame layers run as one fused block, small enough that batched
@@ -29,7 +38,10 @@ _BLOCK_BYTES_BUDGET = 128 * 1024 * 1024
 
 
 @functools.partial(
-    jax.jit, static_argnames=("k", "act", "pool", "act_bits", "out_dtype")
+    jax.jit,
+    static_argnames=(
+        "k", "stride", "act", "pool", "pool_stride", "act_bits", "out_dtype"
+    ),
 )
 def stream_conv_fused_xla(
     x: jax.Array,  # (B, H, W, C), already SAME-padded if needed
@@ -37,8 +49,10 @@ def stream_conv_fused_xla(
     bias: jax.Array,  # (N,)
     *,
     k: int,
+    stride: int = 1,
     act: str = "none",
     pool: int = 0,
+    pool_stride: int | None = None,
     act_bits: int | None = None,
     out_dtype=jnp.float32,
 ) -> jax.Array:
@@ -46,53 +60,70 @@ def stream_conv_fused_xla(
     kk, c2, n = w_taps.shape
     if kk != k * k or c2 != c:
         raise ValueError(f"w_taps {w_taps.shape} inconsistent with k={k}, C={c}")
-    validate_epilogue(act, pool, act_bits)
-    h_out, w_out = h - k + 1, wd - k + 1
+    if stride < 1:
+        raise ValueError(f"conv stride must be >= 1, got {stride}")
+    validate_epilogue(act, pool, pool_stride, act_bits)
+    pw, ps = normalize_pool(pool, pool_stride)
+    s = stride
+    h_out, w_out = (h - k) // s + 1, (wd - k) // s + 1
     if h_out <= 0 or w_out <= 0:
-        raise ValueError(f"image {h}x{wd} too small for k={k}")
-    if pool == 2 and (h_out < 2 or w_out < 2):
-        raise ValueError(f"conv output {h_out}x{w_out} too small for 2x2 pool")
+        raise ValueError(f"image {h}x{wd} too small for k={k}, stride={s}")
+    if pw and (h_out < pw or w_out < pw):
+        raise ValueError(
+            f"conv output {h_out}x{w_out} too small for {pw}x{pw} pool"
+        )
 
     # Row block from the byte budget: largest R (multiple of the pool
     # stride) whose (B, R, W_out, K*K, C) f32 operand fits.
-    mult = 2 if pool == 2 else 1
+    overlap = max(0, pw - ps) if pw else 0
+    mult = ps if pw else 1
     row_bytes = max(1, b * w_out * k * k * c * 4)
     r = max(mult, (_BLOCK_BYTES_BUDGET // row_bytes) // mult * mult)
     r = min(r, round_up(h_out, mult))
-    n_rb = -(-h_out // r)
-    r_out = r // 2 if pool == 2 else r
-    w_pool = w_out // 2 if pool == 2 else w_out
-    h_keep = h_out // 2 if pool == 2 else h_out
+    r_conv = r + overlap  # pool-overlap rows re-computed per block
+    r_o = r // ps if pw else r
+    h_keep = pool_out_dim(h_out, pw, ps) if pw else h_out
+    w_keep = pool_out_dim(w_out, pw, ps) if pw else w_out
+    n_rb = -(-h_keep // r_o)
 
-    # Pad rows so every block can read r + k - 1 input rows (zero rows only
-    # feed outputs that are sliced off below).
-    h_rows = n_rb * r + k - 1
+    # Pad rows so every block can read its (r_conv - 1)*s + k input rows
+    # (zero rows only feed outputs that are sliced off below).
+    blk_in = (r_conv - 1) * s + k
+    h_rows = (n_rb - 1) * r * s + blk_in
     if h_rows > h:
         x = jnp.pad(x, ((0, 0), (0, h_rows - h), (0, 0), (0, 0)))
     w_flat = w_taps.reshape(k * k * c, n).astype(jnp.float32)
 
     def block_fn(rb):
-        xb = jax.lax.dynamic_slice_in_dim(x, rb * r, r + k - 1, axis=1)
+        xb = jax.lax.dynamic_slice_in_dim(x, rb * r * s, blk_in, axis=1)
         taps = []
         for ki in range(k):
             for kj in range(k):
-                taps.append(xb[:, ki : ki + r, kj : kj + w_out, :])
-        patches = jnp.stack(taps, axis=3)  # (B, r, w_out, k*k, C)
+                taps.append(
+                    xb[
+                        :,
+                        ki : ki + (r_conv - 1) * s + 1 : s,
+                        kj : kj + (w_out - 1) * s + 1 : s,
+                        :,
+                    ]
+                )
+        patches = jnp.stack(taps, axis=3)  # (B, r_conv, w_out, k*k, C)
         yb = jnp.dot(
-            patches.reshape(b * r * w_out, k * k * c).astype(jnp.float32),
+            patches.reshape(b * r_conv * w_out, k * k * c).astype(jnp.float32),
             w_flat,
             preferred_element_type=jnp.float32,
-        ).reshape(b, r, w_out, n)
+        ).reshape(b, r_conv, w_out, n)
         # ste=True: identical forward values, STE gradients — the XLA
         # rendering is the differentiable fused path, so in-kernel stream
         # quantization must not zero out QAT gradients.
         return apply_epilogue(
-            yb, bias, act=act, pool=pool, act_bits=act_bits, ste=True
+            yb, bias, act=act, pool=pool, pool_stride=pool_stride,
+            act_bits=act_bits, ste=True,
         )
 
     if n_rb == 1:
         y = block_fn(0)
     else:
         blocks = jax.lax.map(block_fn, jnp.arange(n_rb))  # (n_rb, B, ...)
-        y = jnp.moveaxis(blocks, 0, 1).reshape(b, n_rb * r_out, w_pool, n)
+        y = jnp.moveaxis(blocks, 0, 1).reshape(b, n_rb * r_o, w_keep, n)
     return y[:, :h_keep].astype(out_dtype)

@@ -1,4 +1,5 @@
-"""CNN substrate in pure JAX: the paper's three benchmark networks.
+"""CNN substrate in pure JAX: the paper's three benchmark networks plus
+the non-paper generalization topologies.
 
 Topologies (paper Table 1):
 
@@ -11,6 +12,13 @@ LeNet5 uses VALID convolutions (Caffe's original LeNet), the CIFAR10/SVHN
 topology uses SAME padding (Caffe's cifar10_quick), which reproduces the
 paper's workload numbers exactly: 3.8 Mop (LeNet5 feature extractor) and
 24.6 Mop (Cifar10/SVHN feature extractor).
+
+Beyond the paper, ``CIFAR10_FULL`` (Caffe's cifar10_full: 5x5 SAME convs
+with overlapping 3x3/stride-2 max-pool) and ``CIFAR10_STRIDED`` (stride-2
+downsampling convs instead of pooling) exercise the generalized layer
+vocabulary — conv ``stride``, ``(pool, pool_stride)`` windows with
+window != stride, and rectangular frames — through the same DHM lowering
+path as the paper nets.
 
 Everything is functional: ``init_cnn`` builds a param pytree, ``cnn_apply``
 runs the forward pass. ``cnn_apply`` is a thin veneer over the DHM
@@ -42,35 +50,109 @@ from repro.core.quant.fixed_point import (
 
 @dataclasses.dataclass(frozen=True)
 class ConvLayerSpec:
-    """One conv+mpool+act stage (a row of paper Table 1)."""
+    """One conv+mpool+act stage (a row of paper Table 1, generalized).
+
+    ``pool`` is the square max-pool window (0 = no pool) and
+    ``pool_stride`` its sliding stride; ``pool_stride=None`` means
+    window == stride, so the historic ``pool=2`` sugar still reads as
+    2x2/stride-2. ``stride`` is the conv stride.
+    """
 
     n_out: int  # N: output feature maps
     kernel: int  # K
     padding: str = "VALID"  # VALID (LeNet5) or SAME (Cifar10/SVHN)
-    pool: int = 2  # mpool window/stride (0 = no pool)
+    pool: int = 2  # mpool window (0 = no pool)
     act: str = "tanh"
+    stride: int = 1  # conv stride
+    pool_stride: int | None = None  # None -> == pool (window == stride)
+
+    @property
+    def pool_cfg(self) -> tuple:
+        """Concrete ``(window, stride)`` pool pair; ``(0, 0)`` = no pool.
+        Only ``None`` defaults the stride to the window — an explicit
+        invalid stride (e.g. 0) is kept so the compiler's validation
+        rejects it instead of shape paths silently disagreeing."""
+        if not self.pool:
+            return (0, 0)
+        ps = self.pool if self.pool_stride is None else self.pool_stride
+        return (self.pool, ps)
+
+    def out_hw(self, h: int, w: int) -> tuple:
+        """(H, W) after this layer's conv + pool, from an (H, W) input."""
+        h_c, w_c = self.conv_hw(h, w)
+        pw, ps = self.pool_cfg
+        if pw:
+            return (h_c - pw) // ps + 1, (w_c - pw) // ps + 1
+        return h_c, w_c
+
+    def conv_hw(self, h: int, w: int) -> tuple:
+        """(H, W) after the conv alone (pre-pool)."""
+        s = self.stride
+        if self.padding == "SAME":
+            return -(-h // s), -(-w // s)
+        return (h - self.kernel) // s + 1, (w - self.kernel) // s + 1
 
 
 @dataclasses.dataclass(frozen=True)
 class CNNTopology:
     name: str
-    input_hw: int
+    input_hw: object  # int (square frame) or (H, W) tuple
     input_channels: int
     conv_layers: tuple
     fc_dims: tuple  # hidden FC dims of the classifier head
     n_classes: int
 
+    def __post_init__(self):
+        hw = self.input_hw
+        ok = isinstance(hw, int) or (
+            isinstance(hw, tuple) and len(hw) == 2
+            and all(isinstance(d, int) for d in hw)
+        )
+        if not ok:
+            raise ValueError(
+                f"{self.name}: input_hw must be an int (square frame) or an "
+                f"(H, W) tuple of ints, got {hw!r}"
+            )
+
+    @property
+    def input_shape(self) -> tuple:
+        """(H, W) of the input frame (int sugar means square)."""
+        if isinstance(self.input_hw, int):
+            return (self.input_hw, self.input_hw)
+        return self.input_hw
+
+    def square_input_hw(self) -> int:
+        """The square frame side — raises clearly on rectangular inputs
+        for the few paths (synthetic datasets) that still require
+        squareness, instead of silently mis-shaping."""
+        h, w = self.input_shape
+        if h != w:
+            raise ValueError(
+                f"{self.name}: this path requires a square input frame, "
+                f"got {h}x{w}"
+            )
+        return h
+
     def conv_shapes(self):
         """Per-layer (C_in, N_out, K, H_out, W_out) after conv (pre-pool)."""
-        h = self.input_hw
+        h, w = self.input_shape
         c = self.input_channels
         out = []
         for spec in self.conv_layers:
-            h_conv = h if spec.padding == "SAME" else h - spec.kernel + 1
-            out.append((c, spec.n_out, spec.kernel, h_conv, h_conv))
-            h = h_conv // spec.pool if spec.pool else h_conv
+            h_conv, w_conv = spec.conv_hw(h, w)
+            out.append((c, spec.n_out, spec.kernel, h_conv, w_conv))
+            h, w = spec.out_hw(h, w)
             c = spec.n_out
         return out
+
+    def feature_shape(self) -> tuple:
+        """(H, W, C) of the feature-extractor output (FC head input)."""
+        h, w = self.input_shape
+        c = self.input_channels
+        for spec in self.conv_layers:
+            h, w = spec.out_hw(h, w)
+            c = spec.n_out
+        return h, w, c
 
     def feature_extractor_macs(self) -> int:
         """MACs of the conv stack for one input frame."""
@@ -114,6 +196,49 @@ SVHN = dataclasses.replace(CIFAR10, name="svhn")
 
 PAPER_TOPOLOGIES = {"lenet5": LENET5, "cifar10": CIFAR10, "svhn": SVHN}
 
+# Caffe's cifar10_full: 5x5 SAME convs with OVERLAPPING 3x3/stride-2
+# max-pool (32 -> 15 -> 7 -> 3) — the pool-window != pool-stride case the
+# paper topologies never exercise.
+CIFAR10_FULL = CNNTopology(
+    name="cifar10_full",
+    input_hw=32,
+    input_channels=3,
+    conv_layers=(
+        ConvLayerSpec(n_out=32, kernel=5, padding="SAME", pool=3,
+                      pool_stride=2, act="relu"),
+        ConvLayerSpec(n_out=32, kernel=5, padding="SAME", pool=3,
+                      pool_stride=2, act="relu"),
+        ConvLayerSpec(n_out=64, kernel=5, padding="SAME", pool=3,
+                      pool_stride=2, act="relu"),
+    ),
+    fc_dims=(64,),
+    n_classes=10,
+)
+
+# Stride-2 downsampling variant: the first two layers downsample with conv
+# stride instead of pooling (32 -> 16 -> 8), the last keeps a 2x2/2 pool.
+CIFAR10_STRIDED = CNNTopology(
+    name="cifar10_strided",
+    input_hw=32,
+    input_channels=3,
+    conv_layers=(
+        ConvLayerSpec(n_out=32, kernel=5, padding="SAME", stride=2, pool=0,
+                      act="relu"),
+        ConvLayerSpec(n_out=64, kernel=3, padding="SAME", stride=2, pool=0,
+                      act="relu"),
+        ConvLayerSpec(n_out=64, kernel=3, padding="SAME", pool=2,
+                      act="relu"),
+    ),
+    fc_dims=(64,),
+    n_classes=10,
+)
+
+EXTRA_TOPOLOGIES = {
+    "cifar10_full": CIFAR10_FULL,
+    "cifar10_strided": CIFAR10_STRIDED,
+}
+ALL_TOPOLOGIES = {**PAPER_TOPOLOGIES, **EXTRA_TOPOLOGIES}
+
 
 def _act(name: str) -> Callable:
     return {"tanh": jnp.tanh, "relu": jax.nn.relu, "none": lambda x: x}[name]
@@ -123,7 +248,6 @@ def init_cnn(key: jax.Array, topo: CNNTopology, dtype=jnp.float32) -> dict:
     """Glorot-init parameters for a topology. Layout:
     conv kernels HWIO (K, K, C, N); FC weights (in, out)."""
     params: dict = {"conv": [], "fc": []}
-    h = topo.input_hw
     c = topo.input_channels
     for spec in topo.conv_layers:
         key, wk, bk = jax.random.split(key, 3)
@@ -132,10 +256,9 @@ def init_cnn(key: jax.Array, topo: CNNTopology, dtype=jnp.float32) -> dict:
         w = w * jnp.sqrt(2.0 / fan_in)
         b = jnp.zeros((spec.n_out,), dtype)
         params["conv"].append({"w": w, "b": b})
-        h_conv = h if spec.padding == "SAME" else h - spec.kernel + 1
-        h = h_conv // spec.pool if spec.pool else h_conv
         c = spec.n_out
-    flat = h * h * c
+    h, w_, c = topo.feature_shape()
+    flat = h * w_ * c
     dims = (flat,) + tuple(topo.fc_dims) + (topo.n_classes,)
     for d_in, d_out in zip(dims[:-1], dims[1:]):
         key, wk = jax.random.split(key)
@@ -144,13 +267,14 @@ def init_cnn(key: jax.Array, topo: CNNTopology, dtype=jnp.float32) -> dict:
     return params
 
 
-def _maxpool(x: jax.Array, window: int) -> jax.Array:
+def _maxpool(x: jax.Array, window: int, stride: int | None = None) -> jax.Array:
+    stride = stride or window
     return jax.lax.reduce_window(
         x,
         -jnp.inf,
         jax.lax.max,
         window_dimensions=(1, window, window, 1),
-        window_strides=(1, window, window, 1),
+        window_strides=(1, stride, stride, 1),
         padding="VALID",
     )
 
@@ -244,13 +368,14 @@ def cnn_apply_reference(
         h = jax.lax.conv_general_dilated(
             h,
             p["w"],
-            window_strides=(1, 1),
+            window_strides=(spec.stride, spec.stride),
             padding=spec.padding,
             dimension_numbers=("NHWC", "HWIO", "NHWC"),
         )
         h = h + p["b"]
-        if spec.pool:
-            h = _maxpool(h, spec.pool)
+        pw, ps = spec.pool_cfg
+        if pw:
+            h = _maxpool(h, pw, ps)
         h = _act(spec.act)(h)
         h = maybe_qact(h)
     h = h.reshape(h.shape[0], -1)

@@ -78,7 +78,7 @@ def train_cnn(
     verbose: bool = False,
 ) -> TrainedCNN:
     ds = dataset or make_image_dataset(
-        hw=topo.input_hw, channels=topo.input_channels, seed=seed
+        hw=topo.square_input_hw(), channels=topo.input_channels, seed=seed
     )
     key = jax.random.PRNGKey(seed + 1)
     params = init_params or init_cnn(key, topo)

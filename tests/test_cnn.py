@@ -8,6 +8,11 @@ import pytest
 from repro.data import make_image_dataset
 from repro.models.cnn import (
     CIFAR10,
+    CIFAR10_FULL,
+    CIFAR10_STRIDED,
+    CNNTopology,
+    ConvLayerSpec,
+    EXTRA_TOPOLOGIES,
     LENET5,
     PAPER_TOPOLOGIES,
     SVHN,
@@ -39,6 +44,53 @@ class TestTopologies:
         # Full DHM LeNet5 needs C*N*K^2 per layer = 500 + 25000.
         assert LENET5.n_multipliers() == 25500
 
+    def test_conv_shapes_cifar10_full(self):
+        # Caffe cifar10_full: overlapping 3x3/stride-2 pool, 32->15->7->3.
+        assert CIFAR10_FULL.conv_shapes() == [
+            (3, 32, 5, 32, 32),
+            (32, 32, 5, 15, 15),
+            (32, 64, 5, 7, 7),
+        ]
+        assert CIFAR10_FULL.feature_shape() == (3, 3, 64)
+
+    def test_conv_shapes_cifar10_strided(self):
+        # Stride-2 downsampling convs: 32->16->8, then 2x2/2 pool -> 4.
+        assert CIFAR10_STRIDED.conv_shapes() == [
+            (3, 32, 5, 16, 16),
+            (32, 64, 3, 8, 8),
+            (64, 64, 3, 8, 8),
+        ]
+        assert CIFAR10_STRIDED.feature_shape() == (4, 4, 64)
+
+    def test_rectangular_input_shapes(self):
+        topo = CNNTopology(
+            name="rect", input_hw=(16, 24), input_channels=1,
+            conv_layers=(
+                ConvLayerSpec(n_out=4, kernel=3, padding="SAME", pool=2),
+            ),
+            fc_dims=(), n_classes=2,
+        )
+        assert topo.input_shape == (16, 24)
+        assert topo.conv_shapes() == [(1, 4, 3, 16, 24)]
+        assert topo.feature_shape() == (8, 12, 4)
+
+    def test_square_required_raises_clearly(self):
+        topo = CNNTopology(
+            name="rect", input_hw=(16, 24), input_channels=1,
+            conv_layers=(ConvLayerSpec(n_out=4, kernel=3),),
+            fc_dims=(), n_classes=2,
+        )
+        with pytest.raises(ValueError, match="square"):
+            topo.square_input_hw()
+
+    def test_bad_input_hw_raises(self):
+        with pytest.raises(ValueError, match="input_hw"):
+            CNNTopology(
+                name="bad", input_hw=[16, 24], input_channels=1,
+                conv_layers=(ConvLayerSpec(n_out=4, kernel=3),),
+                fc_dims=(), n_classes=2,
+            )
+
 
 class TestForward:
     @pytest.mark.parametrize("name", sorted(PAPER_TOPOLOGIES))
@@ -46,6 +98,18 @@ class TestForward:
         topo = PAPER_TOPOLOGIES[name]
         params = init_cnn(jax.random.PRNGKey(0), topo)
         x = jnp.ones((2, topo.input_hw, topo.input_hw, topo.input_channels))
+        logits = cnn_apply(params, topo, x)
+        assert logits.shape == (2, topo.n_classes)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    @pytest.mark.parametrize("name", sorted(EXTRA_TOPOLOGIES))
+    def test_forward_generalized_topologies(self, name):
+        """The non-paper topologies (overlapping pool / strided conv) run
+        through the same cnn_apply -> compile_dhm path."""
+        topo = EXTRA_TOPOLOGIES[name]
+        params = init_cnn(jax.random.PRNGKey(0), topo)
+        h, w = topo.input_shape
+        x = jnp.ones((2, h, w, topo.input_channels))
         logits = cnn_apply(params, topo, x)
         assert logits.shape == (2, topo.n_classes)
         assert bool(jnp.all(jnp.isfinite(logits)))

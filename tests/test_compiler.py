@@ -23,6 +23,7 @@ from repro.core.dhm.compiler import (
 from repro.models.cnn import (
     CNNTopology,
     ConvLayerSpec,
+    EXTRA_TOPOLOGIES,
     LENET5,
     PAPER_TOPOLOGIES,
     cnn_apply,
@@ -79,9 +80,9 @@ def _count_primitive_in_pallas(jaxpr, name: str) -> int:
 
 def _mk_inputs(topo, seed=4, batch=2):
     params = init_cnn(jax.random.PRNGKey(seed - 1), topo)
+    h, w = topo.input_shape
     x = jax.random.normal(
-        jax.random.PRNGKey(seed),
-        (batch, topo.input_hw, topo.input_hw, topo.input_channels),
+        jax.random.PRNGKey(seed), (batch, h, w, topo.input_channels)
     )
     return params, x
 
@@ -108,7 +109,36 @@ class TestValidation:
 
     def test_bad_pool_raises(self):
         with pytest.raises(ValueError, match="pool"):
-            validate_topology(self._topo(pool=3))
+            validate_topology(self._topo(pool=-1))
+
+    def test_bad_pool_stride_raises(self):
+        with pytest.raises(ValueError, match="pool_stride"):
+            validate_topology(self._topo(pool=3, pool_stride=0))
+        # pool_stride without pooling is a spec contradiction, not silence.
+        with pytest.raises(ValueError, match="pool_stride"):
+            validate_topology(self._topo(pool=0, pool_stride=2))
+
+    def test_bad_conv_stride_raises(self):
+        with pytest.raises(ValueError, match="stride"):
+            validate_topology(self._topo(stride=0))
+
+    def test_oversized_pool_window_raises(self):
+        """A pool window larger than the conv output raises at compile
+        time instead of silently emitting an empty frame."""
+        # 12x12 input, VALID k=3 -> 10x10 conv out; 11x11 pool impossible.
+        with pytest.raises(ValueError, match="too small"):
+            validate_topology(self._topo(pool=11))
+
+    def test_empty_conv_output_raises(self):
+        topo = CNNTopology(
+            name="bad", input_hw=4, input_channels=1,
+            conv_layers=(
+                ConvLayerSpec(n_out=2, kernel=7, padding="VALID", pool=0),
+            ),
+            fc_dims=(), n_classes=2,
+        )
+        with pytest.raises(ValueError, match="empty"):
+            validate_topology(topo)
 
     def test_cnn_apply_validates_too(self):
         """The model entry point inherits compile-time validation."""
@@ -121,7 +151,7 @@ class TestValidation:
     def test_emit_conv_stage_validates(self):
         import types
 
-        spec = types.SimpleNamespace(padding="SAME", act="relu", pool=7)
+        spec = types.SimpleNamespace(padding="SAME", act="relu", pool=-2)
         with pytest.raises(ValueError, match="pool"):
             emit_conv_stage((spec,))
 
@@ -173,7 +203,16 @@ class TestEndToEndEquivalence:
     """CompiledDHM logits vs the hand-composed cnn_apply_reference, for all
     three paper topologies."""
 
-    @pytest.mark.parametrize("name", sorted(PAPER_TOPOLOGIES))
+    @pytest.mark.parametrize(
+        "name",
+        [
+            "lenet5",
+            # The CIFAR-sized interpret-mode runs dominate tier-1 wall
+            # time; the fast tier keeps the LeNet5 oracle coverage.
+            pytest.param("cifar10", marks=pytest.mark.slow),
+            pytest.param("svhn", marks=pytest.mark.slow),
+        ],
+    )
     def test_fp32_oracle_backend_matches_reference(self, name):
         """fp32 plan through the Pallas-interpreter oracle backend."""
         topo = PAPER_TOPOLOGIES[name]
@@ -257,6 +296,91 @@ class TestEndToEndEquivalence:
         three = compile_dhm(topo, params, n_stages=3)(x)
         np.testing.assert_allclose(
             np.asarray(one), np.asarray(three), rtol=1e-5, atol=1e-6
+        )
+
+
+class TestGeneralizedTopologies:
+    """The non-paper topologies — cifar10_full (overlapping 3x3/stride-2
+    pool) and cifar10_strided (stride-2 downsampling convs) — lower
+    through compile_dhm on all three backends, matching the hand-composed
+    reference exactly."""
+
+    @pytest.mark.parametrize("name", sorted(EXTRA_TOPOLOGIES))
+    @pytest.mark.parametrize("backend", ["ref", "pallas"])
+    def test_fp32_matches_reference(self, name, backend):
+        topo = EXTRA_TOPOLOGIES[name]
+        params, x = _mk_inputs(topo)
+        plan = compile_dhm(topo, params, backend=backend)
+        ref = cnn_apply_reference(params, topo, x)
+        np.testing.assert_allclose(
+            np.asarray(plan(x)), np.asarray(ref), rtol=1e-4, atol=1e-4
+        )
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("name", sorted(EXTRA_TOPOLOGIES))
+    def test_fp32_oracle_backend_matches_reference(self, name):
+        """The exact Pallas kernel program (interpreter oracle) handles the
+        generalized layer vocabulary end to end."""
+        topo = EXTRA_TOPOLOGIES[name]
+        params, x = _mk_inputs(topo, batch=1)
+        plan = compile_dhm(topo, params, backend="pallas_interpret")
+        ref = cnn_apply_reference(params, topo, x)
+        np.testing.assert_allclose(
+            np.asarray(plan(x)), np.asarray(ref), rtol=1e-4, atol=1e-5
+        )
+
+    @pytest.mark.parametrize("name", sorted(EXTRA_TOPOLOGIES))
+    def test_quantized_plan_matches_fake_quant_reference(self, name):
+        """Weights + in-kernel feature-stream quantization through the
+        generalized epilogue (overlapping pool / strided conv)."""
+        topo = EXTRA_TOPOLOGIES[name]
+        params, x = _mk_inputs(topo)
+        plan = compile_dhm(
+            topo, params, quant=QuantSpec(weight_bits=6, act_bits=6),
+            backend="pallas",
+        )
+        ref = cnn_apply_reference(params, topo, x, weight_bits=6, act_bits=6)
+        np.testing.assert_allclose(
+            np.asarray(plan(x)), np.asarray(ref), rtol=1e-4, atol=1e-4
+        )
+
+    def test_block_w_does_not_change_logits(self):
+        """Width blocking is a pure tiling decision: a plan compiled with
+        a small block_w (column halo exercised) produces the same numbers
+        as the unblocked plan, through the kernel oracle."""
+        topo = CNNTopology(
+            name="wide", input_hw=(10, 26), input_channels=2,
+            conv_layers=(
+                ConvLayerSpec(n_out=4, kernel=3, padding="SAME", pool=3,
+                              pool_stride=2, act="relu"),
+            ),
+            fc_dims=(), n_classes=2,
+        )
+        params, x = _mk_inputs(topo, batch=1)
+        full = compile_dhm(topo, params, backend="pallas_interpret")(x)
+        blocked = compile_dhm(
+            topo, params, backend="pallas_interpret", block_w=4
+        )(x)
+        np.testing.assert_array_equal(np.asarray(full), np.asarray(blocked))
+
+    def test_rectangular_input_plan(self):
+        """(H, W) input frames lower end to end (no square assumption left
+        on the compiler path)."""
+        topo = CNNTopology(
+            name="rect", input_hw=(14, 18), input_channels=2,
+            conv_layers=(
+                ConvLayerSpec(n_out=4, kernel=3, padding="SAME", pool=3,
+                              pool_stride=2, act="relu"),
+                ConvLayerSpec(n_out=6, kernel=3, padding="SAME", stride=2,
+                              pool=0, act="relu"),
+            ),
+            fc_dims=(8,), n_classes=3,
+        )
+        params, x = _mk_inputs(topo)
+        plan = compile_dhm(topo, params, backend="pallas")
+        ref = cnn_apply_reference(params, topo, x)
+        np.testing.assert_allclose(
+            np.asarray(plan(x)), np.asarray(ref), rtol=1e-4, atol=1e-4
         )
 
 

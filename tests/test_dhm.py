@@ -56,6 +56,59 @@ class TestGraph:
         assert g.count(ActorKind.BLOCK) == 4
         assert g.total_flops() == 40.0
 
+    def test_pool_actor_general_window(self):
+        """Pool actors model window != stride correctly (cifar10_full:
+        3x3/stride-2): output dims follow the VALID sliding rule — NOT
+        h_out // window — and the streaming pool buffers (window - 1)
+        conv-output lines."""
+        from repro.models.cnn import CIFAR10_FULL
+
+        bits = 6
+        g = cnn_to_dpn(CIFAR10_FULL, bits=bits)
+        # Layer 1: conv out 32x32, 3x3/2 pool -> 15x15.
+        p1 = g.actor("pool1_n0")
+        assert p1.line_buffer_bits == (3 - 1) * 32 * bits
+        assert p1.stream_bytes == 15 * 15 * bits / 8.0
+        # Layer 2 consumes the POOLED 15-wide frame: its window actors
+        # buffer 15-pixel lines, its engines work on the 15x15 conv out.
+        w2 = g.actor("win2_c0")
+        assert w2.line_buffer_bits == (5 - 1) * 15 * bits
+        e2 = g.actor("conv2_n0_c0")
+        assert e2.flops == 2.0 * 5 * 5 * 15 * 15
+        # Layer 3: conv out 7x7, pool -> 3x3 (the old h_out // pool rule
+        # would have claimed 7 // 3 = 2).
+        p3 = g.actor("pool3_n0")
+        assert p3.stream_bytes == 3 * 3 * bits / 8.0
+
+    def test_strided_conv_dpn(self):
+        """Strided convs shrink the engine payloads (conv output dims
+        already reflect the stride) and the window buffers keep the full
+        input line width."""
+        from repro.models.cnn import CIFAR10_STRIDED
+
+        bits = 6
+        g = cnn_to_dpn(CIFAR10_STRIDED, bits=bits)
+        e1 = g.actor("conv1_n0_c0")
+        assert e1.flops == 2.0 * 5 * 5 * 16 * 16  # 32 -> 16 via stride 2
+        w1 = g.actor("win1_c0")
+        assert w1.line_buffer_bits == (5 - 1) * 32 * bits  # input lines
+
+    def test_rectangular_frame_dpn(self):
+        """(H, W) frames expand without any square assumption: stream
+        bytes use H_p * W_p, not H_p**2."""
+        from repro.models.cnn import CNNTopology, ConvLayerSpec
+
+        topo = CNNTopology(
+            name="rect", input_hw=(12, 20), input_channels=1,
+            conv_layers=(
+                ConvLayerSpec(n_out=2, kernel=3, padding="SAME", pool=2),
+            ),
+            fc_dims=(), n_classes=2,
+        )
+        g = cnn_to_dpn(topo, bits=8)
+        p = g.actor("pool1_n0")
+        assert p.stream_bytes == (12 // 2) * (20 // 2) * 8 / 8.0
+
 
 class TestResources:
     def test_table2_dsp_strategy_overflows(self):

@@ -325,6 +325,100 @@ class TestStreamConvFused:
         np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
 
 
+class TestStreamConvGeneralizedProperty:
+    """Randomized (seeded — the suite must stay deterministic) property
+    test over the generalized layer vocabulary: conv stride ∈ {1, 2},
+    pool ∈ {none, 2x2/2, 3x3/2}, odd/even H != W, and block_w column
+    splits. All three backends — the Pallas-interpreter oracle, the ref
+    composition, and the compiled default (the XLA fallback on CPU) —
+    must agree BIT-EXACTLY with the epilogue quantization on: the
+    in-kernel round/clip collapses accumulation-order noise onto the same
+    fixed-point lattice on every backend."""
+
+    # none, classic window==stride, overlapping 3x3/2, and the
+    # window < stride sub-sampling case the contract also covers.
+    POOLS = ((0, None), (2, None), (3, 2), (2, 3))
+
+    @pytest.mark.parametrize("seed", range(12))
+    def test_backends_agree_bit_exact(self, seed):
+        rng = np.random.default_rng(seed)
+        stride = int(rng.choice([1, 2]))
+        pool, pool_stride = self.POOLS[int(rng.integers(len(self.POOLS)))]
+        k = int(rng.choice([3, 5]))
+        padding = ["VALID", "SAME"][int(rng.integers(2))]
+        # Sizes guaranteeing conv output >= 4 in both dims (>= any pool
+        # window), with independent odd/even H and W.
+        base = k + 3 * stride if padding == "VALID" else 4 * stride
+        h = base + int(rng.integers(0, 7))
+        w = base + int(rng.integers(0, 7))
+        c = int(rng.integers(1, 4))
+        n = int(rng.integers(1, 7))
+        block_w = int(rng.choice([0, 3, 5]))
+        block_r = int(rng.choice([2, 4, 8]))
+        x = jnp.asarray(rng.normal(size=(2, h, w, c)), jnp.float32)
+        wt = jnp.asarray(rng.normal(size=(k, k, c, n)) * 0.2, jnp.float32)
+        b = jnp.asarray(rng.normal(size=(n,)) * 0.1, jnp.float32)
+        kw = dict(
+            padding=padding, stride=stride, act="relu", pool=pool,
+            pool_stride=pool_stride, act_bits=5,
+        )
+        outs = {
+            backend: np.asarray(
+                stream_conv_block(
+                    x, wt, b, backend=backend, block_r=block_r,
+                    block_w=block_w, **kw,
+                )
+            )
+            for backend in ("pallas_interpret", "ref", "pallas")
+        }
+        case = (
+            f"seed={seed} k={k} s={stride} pool={pool}/{pool_stride} "
+            f"{padding} {h}x{w}x{c}->{n} block_r={block_r} block_w={block_w}"
+        )
+        assert outs["ref"].shape == outs["pallas_interpret"].shape, case
+        np.testing.assert_array_equal(
+            outs["pallas_interpret"], outs["ref"], err_msg=case
+        )
+        np.testing.assert_array_equal(
+            outs["pallas_interpret"], outs["pallas"], err_msg=case
+        )
+
+    def test_xla_fallback_path_directly(self):
+        """The XLA fallback entry point itself (not just via the wrapper
+        dispatch) handles stride + overlapping pool + quantization."""
+        from repro.kernels.stream_conv.xla import stream_conv_fused_xla
+
+        rng = np.random.default_rng(99)
+        x = jnp.asarray(rng.normal(size=(2, 13, 17, 3)), jnp.float32)
+        wt = jnp.asarray(rng.normal(size=(3, 3, 3, 5)) * 0.2, jnp.float32)
+        b = jnp.asarray(rng.normal(size=(5,)) * 0.1, jnp.float32)
+        out = stream_conv_fused_xla(
+            x, wt.reshape(9, 3, 5), b, k=3, stride=2, act="relu", pool=3,
+            pool_stride=2, act_bits=5,
+        )
+        ref = stream_conv_block_ref(
+            x, wt, b, padding="VALID", stride=2, act="relu", pool=3,
+            pool_stride=2, act_bits=5,
+        )
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    def test_strided_conv2d_matches_lax(self):
+        """Bare strided conv (no epilogue) vs lax.conv, SAME and VALID."""
+        rng = np.random.default_rng(7)
+        x = jnp.asarray(rng.normal(size=(1, 11, 15, 2)), jnp.float32)
+        wt = jnp.asarray(rng.normal(size=(5, 5, 2, 4)) * 0.2, jnp.float32)
+        for padding in ("VALID", "SAME"):
+            out = stream_conv2d(
+                x, wt, padding=padding, stride=2, backend="pallas_interpret"
+            )
+            ref = jax.lax.conv_general_dilated(
+                x, wt, (2, 2), padding,
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            )
+            assert out.shape == ref.shape
+            np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+
+
 class TestStreamConvStructure:
     """Structural guarantees of the rewritten kernel: ONE matmul per row
     block, no K^2 per-tap dot loop, no hidden lax.conv."""
