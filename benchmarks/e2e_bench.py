@@ -4,11 +4,21 @@ For each benchmarked topology — the three paper nets plus the generalized
 non-paper ones (cifar10_full: overlapping 3x3/stride-2 pool;
 cifar10_strided: stride-2 downsampling convs) — lower a full plan through
 ``compile_dhm`` (the single lowering path everything routes through)
-twice — fp32 and at the selected bit-width (weights + in-kernel
-feature-stream quantization) — and measure frames/sec of the whole plan:
-fused conv stages + FC head. The rows land in ``BENCH_kernels.json``
-alongside the kernel micro-benchmarks, so the end-to-end throughput
-trajectory is recorded per PR, not just the isolated kernel times.
+twice per quantization variant:
+
+- the **fused** plan (default VMEM budget): the feature extractor runs as
+  cross-layer fusion groups — one fused pyramid kernel per group, with
+  inter-layer feature slabs kept on-chip;
+- the **per-layer** plan (``vmem_budget=0``): today's pre-fusion baseline,
+  one kernel call per conv layer with every intermediate feature map
+  round-tripping through memory.
+
+Both execute through the plan's cached end-to-end jitted closure
+(``CompiledDHM.__call__``), so the comparison isolates the fusion
+decision, and both rows land in ``BENCH_kernels.json`` — the fused row
+carries ``fusion_speedup`` vs its per-layer twin. After timing, the
+benchmark asserts the plan never retraced across reps (the jit cache
+holds exactly one entry).
 """
 from __future__ import annotations
 
@@ -45,6 +55,18 @@ def _time(fn, *args, reps=10, passes=3):
     return best
 
 
+def _measure_plan(plan, x):
+    """us/call through the plan's cached jitted closure, asserting the
+    closure never retraces across reps."""
+    us = _time(plan, x)
+    fwd = plan.jitted_forward()
+    n_traces = fwd._cache_size()
+    assert n_traces == 1, (
+        f"plan retraced across reps: jit cache holds {n_traces} entries"
+    )
+    return us
+
+
 def run() -> list:
     rows = []
     for name in (
@@ -64,14 +86,28 @@ def run() -> list:
         )
         for label, quant in variants:
             plan = compile_dhm(topo, params, quant=quant)
-            fwd = jax.jit(lambda xb, p=plan: p(xb))
-            us = _time(fwd, x)
+            plan_pl = compile_dhm(topo, params, quant=quant, vmem_budget=0)
+            us_pl = _measure_plan(plan_pl, x)
+            us = _measure_plan(plan, x)
             fps = BATCH / (us * 1e-6)
+            fps_pl = BATCH / (us_pl * 1e-6)
             gops = topo.feature_extractor_ops() * fps / 1e9
+            speedup = us_pl / us
             qdesc = (
                 "fp32"
                 if label == "fp32"
                 else f"w{bits}b + in-kernel act{bits}b stream quant"
+            )
+            gdesc = "+".join(
+                str(len(g.layers)) for g in plan.fusion_groups
+            )
+            # DPN boundary streams of the fused interior layer edges: the
+            # inter-layer pixel traffic that no longer crosses external
+            # memory (DPN layer i+1 is conv layer i; layer 0 the source).
+            onchip = sum(
+                plan.graph.boundary_stream_bytes(li + 1)
+                for g in plan.fusion_groups
+                for li in g.layers[:-1]
             )
             rows.append(
                 {
@@ -79,10 +115,27 @@ def run() -> list:
                     "us_per_call": us,
                     "path": f"e2e_{label}",
                     "frames_per_s": fps,
+                    "fusion_speedup": speedup,
                     "derived": (
                         f"{fps:.0f} frames/s ({gops:.2f} effective Gop/s) "
                         f"for the full compiled plan (batch={BATCH}, "
-                        f"{qdesc}, fused stages + FC head)"
+                        f"{qdesc}, fused groups [{gdesc} layers/kernel] + "
+                        f"FC head, one jitted closure): x{speedup:.2f} vs "
+                        f"per-layer stages, {onchip / 1024:.0f} KiB/frame "
+                        f"of inter-layer streams stay on-chip"
+                    ),
+                }
+            )
+            rows.append(
+                {
+                    "name": f"e2e/{name}_{label}_perlayer_plan",
+                    "us_per_call": us_pl,
+                    "path": f"e2e_{label}_perlayer",
+                    "frames_per_s": fps_pl,
+                    "derived": (
+                        f"{fps_pl:.0f} frames/s pre-fusion baseline "
+                        f"(vmem_budget=0: one kernel call per conv layer, "
+                        f"intermediates round-trip through memory)"
                     ),
                 }
             )

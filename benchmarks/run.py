@@ -4,16 +4,44 @@ Prints ``name,us_per_call,derived`` CSV and writes the kernel rows to
 ``BENCH_kernels.json`` (machine-readable, one file per run: schema
 ``{"benchmark", "jax_backend", "rows": [{name, us_per_call, derived, and
 per-row extras such as path/speedup_vs_seed}]}``) so the perf trajectory
-of the Pallas kernels is recorded across PRs. Invoke as
-``PYTHONPATH=src python -m benchmarks.run`` (add ``--full`` to run the
-slow full Fig. 3 sweep for all three CNNs and the full roofline dump).
+of the Pallas kernels is recorded across PRs. ``BENCH_kernels.json`` is a
+snapshot (overwritten per run); every run additionally APPENDS its record
+to ``BENCH_history.jsonl`` — one JSON line per run with the git SHA and a
+UTC timestamp — so the cross-PR perf trajectory survives instead of being
+clobbered. Invoke as ``PYTHONPATH=src python -m benchmarks.run`` (add
+``--full`` to run the slow full Fig. 3 sweep for all three CNNs and the
+full roofline dump).
 """
 from __future__ import annotations
 
 import argparse
 import csv
+import datetime
 import json
+import subprocess
 import sys
+
+
+def _git_sha() -> str:
+    """Current commit SHA (with a -dirty suffix for uncommitted changes);
+    'unknown' outside a git checkout. The benchmark artifacts themselves
+    (BENCH*) are excluded from the dirty check — the run rewrites them
+    before this stamp, and a record must not call a clean code state
+    dirty just because it recorded itself."""
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            capture_output=True, text=True, check=True, timeout=10,
+        ).stdout.strip()
+        dirty = subprocess.run(
+            ["git", "status", "--porcelain", "--", ".",
+             ":(exclude)BENCH_kernels.json", ":(exclude)BENCH.csv",
+             ":(exclude)BENCH_history.jsonl"],
+            capture_output=True, text=True, check=True, timeout=10,
+        ).stdout.strip()
+        return sha + ("-dirty" if dirty else "")
+    except Exception:  # noqa: BLE001 — not a git checkout / no git binary
+        return "unknown"
 
 
 def main() -> None:
@@ -51,17 +79,31 @@ def main() -> None:
     # the end-to-end compiled plans).
     import jax
 
+    record = {
+        "benchmark": "kernels",
+        "jax_backend": jax.default_backend(),
+        "rows": kernel_rows,
+    }
     with open("BENCH_kernels.json", "w") as f:
-        json.dump(
-            {
-                "benchmark": "kernels",
-                "jax_backend": jax.default_backend(),
-                "rows": kernel_rows,
-            },
-            f,
-            indent=2,
-        )
+        json.dump(record, f, indent=2)
     print("# wrote BENCH_kernels.json", file=sys.stderr)
+
+    # Append this run to the cross-PR trajectory (BENCH_kernels.json is a
+    # snapshot; the history is what plots perf over time).
+    with open("BENCH_history.jsonl", "a") as f:
+        f.write(
+            json.dumps(
+                {
+                    "git_sha": _git_sha(),
+                    "timestamp": datetime.datetime.now(
+                        datetime.timezone.utc
+                    ).isoformat(timespec="seconds"),
+                    **record,
+                }
+            )
+            + "\n"
+        )
+    print("# appended BENCH_history.jsonl", file=sys.stderr)
 
     # Roofline summary rows (from the dry-run artifacts, if present).
     try:

@@ -5,7 +5,12 @@
 #            oracle subprocess/e2e tests that dominate wall time)
 #   --full:  the whole tier-1 suite (what CI's nightly / the driver runs:
 #            PYTHONPATH=src python -m pytest -x -q)
-# Leaves BENCH_kernels.json and BENCH.csv in the repo root.
+# Leaves BENCH_kernels.json and BENCH.csv in the repo root and appends the
+# run to BENCH_history.jsonl (the cross-PR perf trajectory). The perf
+# guard compares the fused e2e rows against benchmarks/bench_baseline.json:
+# each row must reach SMOKE_PERF_FLOOR x baseline frames/s (default 0.35 —
+# a low floor because CI runners and dev boxes differ widely); set
+# SMOKE_PERF_FLOOR=0 to skip the guard.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -19,12 +24,17 @@ else
 fi
 python -m pytest "${PYTEST_ARGS[@]}"
 
+HISTORY_LINES_BEFORE=0
+[[ -f BENCH_history.jsonl ]] && HISTORY_LINES_BEFORE=$(wc -l < BENCH_history.jsonl)
+export HISTORY_LINES_BEFORE
+
 echo "== benchmarks (non-full) =="
 python -m benchmarks.run | tee BENCH.csv
 
 echo "== kernel perf record =="
 python - <<'EOF'
 import json
+import os
 import sys
 
 try:
@@ -34,29 +44,90 @@ except FileNotFoundError:
              "write the kernel perf record")
 
 rows = {r["name"]: r for r in rec.get("rows", [])}
+nets = ("lenet5", "cifar10", "svhn", "cifar10_full", "cifar10_strided")
 expected = [
     "kernel/stream_conv_cifar_c1_seed_interpret",
     "kernel/stream_conv_cifar_c1_fused",
+    "kernel/stream_conv_pyramid_cifar_stack",
 ] + [
     f"e2e/{net}_{variant}_plan"
-    for net in ("lenet5", "cifar10", "svhn", "cifar10_full",
-                "cifar10_strided")
-    for variant in ("fp32", "quant")
+    for net in nets
+    for variant in ("fp32", "quant", "fp32_perlayer", "quant_perlayer")
 ]
 missing = [n for n in expected if n not in rows]
 if missing:
     sys.exit(f"FATAL: BENCH_kernels.json is missing expected rows: {missing}\n"
              f"present: {sorted(rows)}")
 paths = {r.get("path") for r in rec["rows"]}
-assert {"seed", "fused"} <= paths, f"missing kernel paths in record: {paths}"
+assert {"seed", "fused", "fused_group"} <= paths, \
+    f"missing kernel paths in record: {paths}"
 
 fused = rows["kernel/stream_conv_cifar_c1_fused"]
 print(f"fused stream conv: {fused['us_per_call']:.0f} us/call, "
       f"x{fused['speedup_vs_seed']:.1f} vs seed interpret path")
-for net in ("lenet5", "cifar10", "svhn", "cifar10_full", "cifar10_strided"):
+for net in nets:
     fp = rows[f"e2e/{net}_fp32_plan"]
     q = rows[f"e2e/{net}_quant_plan"]
-    print(f"e2e {net}: fp32 {fp['frames_per_s']:.0f} frames/s, "
-          f"quant {q['frames_per_s']:.0f} frames/s")
+    print(f"e2e {net}: fp32 {fp['frames_per_s']:.0f} frames/s "
+          f"(x{fp.get('fusion_speedup', 0):.2f} vs per-layer), "
+          f"quant {q['frames_per_s']:.0f} frames/s "
+          f"(x{q.get('fusion_speedup', 0):.2f} vs per-layer)")
+
+# -- history append sanity (the cross-PR trajectory must actually grow) --
+before = int(os.environ.get("HISTORY_LINES_BEFORE", "0"))
+try:
+    lines = open("BENCH_history.jsonl").read().splitlines()
+except FileNotFoundError:
+    sys.exit("FATAL: BENCH_history.jsonl missing — benchmarks.run did not "
+             "append the trajectory record")
+if len(lines) <= before:
+    sys.exit(f"FATAL: BENCH_history.jsonl did not grow ({before} -> "
+             f"{len(lines)} lines) — the run was not appended")
+last = json.loads(lines[-1])
+for field in ("git_sha", "timestamp", "jax_backend", "rows"):
+    if field not in last:
+        sys.exit(f"FATAL: BENCH_history.jsonl last record misses {field!r}")
+hist_names = {r["name"] for r in last["rows"]}
+if not set(expected) <= hist_names:
+    sys.exit("FATAL: BENCH_history.jsonl last record misses expected rows: "
+             f"{sorted(set(expected) - hist_names)}")
+print(f"history: {len(lines)} runs recorded "
+      f"(last: {last['git_sha'][:12]} @ {last['timestamp']})")
+
+# -- perf-regression guard: fused e2e rows vs the committed baseline.
+# SMOKE_PERF_FLOOR is the fraction of baseline throughput each fused row
+# must reach (0.35 = fail below 35% of baseline; 0 disables the guard).
+floor_frac = float(os.environ.get("SMOKE_PERF_FLOOR", "0.35"))
+if floor_frac > 0:
+    try:
+        base = json.load(open("benchmarks/bench_baseline.json"))
+    except FileNotFoundError:
+        sys.exit("FATAL: benchmarks/bench_baseline.json missing — commit a "
+                 "baseline (see benchmarks/run.py) or set SMOKE_PERF_FLOOR=0")
+    if base.get("jax_backend") != rec["jax_backend"]:
+        print(f"perf guard skipped: baseline recorded on "
+              f"{base.get('jax_backend')!r}, this run is "
+              f"{rec['jax_backend']!r} — absolute frames/s are not "
+              f"comparable across substrates")
+    else:
+        failures = []
+        for name, base_fps in base.get("e2e_frames_per_s", {}).items():
+            row = rows.get(name)
+            if row is None:
+                failures.append(f"{name}: row missing from this run")
+                continue
+            floor = base_fps * floor_frac
+            if row["frames_per_s"] < floor:
+                failures.append(
+                    f"{name}: {row['frames_per_s']:.0f} frames/s < "
+                    f"{floor:.0f} (baseline {base_fps:.0f} x floor "
+                    f"{floor_frac})"
+                )
+        if failures:
+            sys.exit("FATAL: perf regression vs "
+                     "benchmarks/bench_baseline.json "
+                     f"(floor {floor_frac}):\n  " + "\n  ".join(failures))
+        print(f"perf guard: {len(base.get('e2e_frames_per_s', {}))} fused "
+              f"e2e rows above {floor_frac} x baseline")
 EOF
 echo "SMOKE OK"

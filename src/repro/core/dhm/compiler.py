@@ -22,8 +22,15 @@ Lowering stages:
    the exact min-max DP mapper, costed from the actor FLOP payloads — the
    critical-actor balancing the FPGA gets from its clock, solved here as a
    linear-partition problem.
-4. **Emit** per-stage fused-kernel closures (``stream_conv_block`` actor
-   chains) with the quantization *baked into the plan*: weights are
+4. **Fuse** each stage's layer run into maximal cross-layer fusion groups
+   under a VMEM budget (``repro.core.dhm.fusion``): a group of consecutive
+   conv layers is streamed through ONE fused pyramid kernel with all
+   inter-layer feature slabs on-chip — the paper's no-external-memory
+   dataflow property, recovered across layer boundaries. Groups that
+   don't fit the budget fall back to single-layer kernel calls.
+5. **Emit** per-stage fused-kernel closures (``stream_conv_pyramid`` /
+   ``stream_conv_block`` actor chains) with the quantization *baked into
+   the plan*: weights are
    fixed-point fake-quantized / pow2-projected once at compile time, and
    the feature-stream quantization runs inside the fused kernel epilogue
    (``act_bits``), never as a separate pass over HBM. The FC head lowers
@@ -44,6 +51,11 @@ from typing import Callable, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core.dhm.fusion import (
+    DEFAULT_VMEM_BUDGET,
+    FusionGroup,
+    plan_fusion_groups,
+)
 from repro.core.dhm.graph import DataflowGraph, cnn_to_dpn
 from repro.core.dhm.mapping import StageAssignment, partition_stages
 from repro.kernels.backends import DEFAULT_BACKEND, validate_backend
@@ -191,18 +203,27 @@ def emit_conv_stage(
     block_w: int = 0,
     block_c: int = 0,
     block_n: int = 0,
+    groups: Optional[Sequence] = None,
 ) -> Callable:
-    """Emit one pipeline-stage body: a chain of fused conv actor blocks.
+    """Emit one pipeline-stage body: a chain of fused conv actor chains.
 
     ``specs`` is a sequence of conv-layer specs (anything with ``padding``,
     ``act``, ``pool`` attributes — e.g. ``ConvLayerSpec``; the generalized
     ``stride``/``pool_stride`` fields default to 1/window when absent).
+    ``groups`` partitions the stage's layers into fusion groups — a
+    sequence of ``(local_layer_indices, block_rows)`` pairs covering the
+    stage contiguously. A multi-layer group lowers through ONE
+    ``stream_conv_pyramid`` call (inter-layer slabs VMEM-resident);
+    singleton groups lower through today's single-layer
+    ``stream_conv_block`` (with its channel/width blocking knobs).
+    ``groups=None`` means all-singleton — the pre-fusion stage body.
+
     The returned ``stage_fn(params, x)`` runs conv -> bias -> act (-> pool
-    -> stream quant) per layer, each as a single fused kernel call.
-    ``params`` is a list with one ``{"w": (K, K, C, N), "b": (N,)}`` dict
-    per layer (a bare dict is accepted for single-layer stages).
+    -> stream quant) per layer. ``params`` is a list with one
+    ``{"w": (K, K, C, N), "b": (N,)}`` dict per layer (a bare dict is
+    accepted for single-layer stages).
     """
-    from repro.kernels.stream_conv import stream_conv_block
+    from repro.kernels.stream_conv import stream_conv_block, stream_conv_pyramid
 
     specs = tuple(specs)
     if not specs:
@@ -215,6 +236,16 @@ def emit_conv_stage(
     resolved = validate_backend(
         DEFAULT_BACKEND if backend is None else backend
     )
+    if groups is None:
+        group_plan = tuple(((li,), 0) for li in range(len(specs)))
+    else:
+        group_plan = tuple((tuple(g), int(br)) for g, br in groups)
+        covered = [li for g, _ in group_plan for li in g]
+        if covered != list(range(len(specs))):
+            raise ValueError(
+                f"fusion groups {group_plan} do not cover stage layers "
+                f"0..{len(specs) - 1} contiguously"
+            )
 
     def stage_fn(params, x):
         layer_params = [params] if isinstance(params, dict) else list(params)
@@ -223,19 +254,31 @@ def emit_conv_stage(
                 f"stage has {len(specs)} layers but got "
                 f"{len(layer_params)} param dicts"
             )
-        for kw, p in zip(layer_kw, layer_params):
-            x = stream_conv_block(
-                x,
-                p["w"],
-                p["b"],
-                act_bits=act_bits,
-                backend=resolved,
-                block_r=block_r,
-                block_w=block_w,
-                block_c=block_c,
-                block_n=block_n,
-                **kw,
-            )
+        for g, block_rows in group_plan:
+            if len(g) == 1:
+                p = layer_params[g[0]]
+                x = stream_conv_block(
+                    x,
+                    p["w"],
+                    p["b"],
+                    act_bits=act_bits,
+                    backend=resolved,
+                    block_r=block_r,
+                    block_w=block_w,
+                    block_c=block_c,
+                    block_n=block_n,
+                    **layer_kw[g[0]],
+                )
+            else:
+                x = stream_conv_pyramid(
+                    x,
+                    [layer_params[li]["w"] for li in g],
+                    [layer_params[li]["b"] for li in g],
+                    layers=[specs[li] for li in g],
+                    act_bits=act_bits,
+                    block_rows=block_rows,
+                    backend=resolved,
+                )
         return x
 
     return stage_fn
@@ -337,14 +380,15 @@ def _emit_head(fc_params, quant: QuantSpec, backend: str) -> Callable:
 
 @dataclasses.dataclass(frozen=True)
 class CompiledStage:
-    """One pipeline stage: a contiguous run of conv layers fused into a
-    single actor-chain closure."""
+    """One pipeline stage: a contiguous run of conv layers lowered as a
+    chain of fusion groups (each group one fused kernel invocation)."""
 
     index: int
     conv_layers: tuple  # conv-layer indices owned by this stage
     specs: tuple  # the ConvLayerSpec per owned layer
     fn: Callable  # (params_list, x) -> y
     cost_flops: float  # summed actor payloads (the mapper's stage cost)
+    groups: tuple = ()  # FusionGroup per kernel invocation in this stage
 
 
 @dataclasses.dataclass(frozen=True)
@@ -361,10 +405,16 @@ class CompiledDHM:
     stages: tuple
     conv_params: tuple  # per conv layer {"w", "b"}, quantization baked
     head_fn: Callable
+    vmem_budget: int = DEFAULT_VMEM_BUDGET
 
     @property
     def n_stages(self) -> int:
         return len(self.stages)
+
+    @property
+    def fusion_groups(self) -> tuple:
+        """Every FusionGroup of the plan, in execution order."""
+        return tuple(g for st in self.stages for g in st.groups)
 
     def stage_params(self, stage: int) -> list:
         return [self.conv_params[i] for i in self.stages[stage].conv_layers]
@@ -375,9 +425,32 @@ class CompiledDHM:
             x = st.fn(self.stage_params(st.index), x)
         return x
 
+    def jitted_forward(self, *, donate: bool = False) -> Callable:
+        """The plan's cached end-to-end jitted closure (conv stages + FC
+        head as ONE compiled computation — no per-stage Python re-entry,
+        no eager head ops). Built once per plan and reused across calls,
+        so repeated inference never retraces.
+
+        ``donate=True`` returns a variant that donates the input buffer
+        to the computation (XLA may reuse its memory for intermediates) —
+        for serving loops that hand off ownership; the caller's array is
+        invalidated, so the default keeps the input alive.
+        """
+        cache = getattr(self, "_fwd_cache", None)
+        if cache is None:
+            cache = {}
+            object.__setattr__(self, "_fwd_cache", cache)
+        if donate not in cache:
+            cache[donate] = jax.jit(
+                lambda xb: self.head_fn(self.features(xb)),
+                donate_argnums=(0,) if donate else (),
+            )
+        return cache[donate]
+
     def __call__(self, x: jax.Array) -> jax.Array:
-        """x: (B, H, W, C) NHWC -> logits (B, n_classes)."""
-        return self.head_fn(self.features(x))
+        """x: (B, H, W, C) NHWC -> logits (B, n_classes). Runs the cached
+        end-to-end jitted closure (``jitted_forward``)."""
+        return self.jitted_forward()(x)
 
     # -- spatial (mesh) execution ------------------------------------------
 
@@ -426,6 +499,7 @@ def compile_dhm(
     block_w: int = 0,
     block_c: int = 0,
     block_n: int = 0,
+    vmem_budget: Optional[int] = None,
 ) -> CompiledDHM:
     """Lower a CNNTopology + params to an executable DHM plan.
 
@@ -440,6 +514,18 @@ def compile_dhm(
         (1 = the whole feature extractor as one sequential plan).
       backend: kernel backend enum (``repro.kernels.backends``); None means
         the compiled default.
+      vmem_budget: per-block VMEM byte budget of the cross-layer fusion
+        planner (``repro.core.dhm.fusion``). Within each stage the planner
+        walks the DPN's conv layers and emits maximal contiguous fusion
+        groups whose costed working set (weights + composed-halo feature
+        slabs + tap operands) fits the budget; each multi-layer group runs
+        as ONE fused pyramid kernel with inter-layer slabs VMEM-resident —
+        the paper's no-external-memory dataflow across layer boundaries.
+        ``None`` means :data:`~repro.core.dhm.fusion.DEFAULT_VMEM_BUDGET`
+        (~one TPU core's VMEM; under it every paper topology's feature
+        extractor fuses into a single group); ``0`` disables fusion, which
+        reproduces the per-layer-stage plan exactly (each layer one
+        ``stream_conv_block`` call with the ``block_*`` knobs).
     """
     validate_topology(topo)
     resolved = validate_backend(DEFAULT_BACKEND if backend is None else backend)
@@ -447,6 +533,13 @@ def compile_dhm(
     if not 1 <= n_stages <= n_conv:
         raise ValueError(
             f"n_stages must be in [1, {n_conv}] for {topo.name}, got {n_stages}"
+        )
+    resolved_budget = (
+        DEFAULT_VMEM_BUDGET if vmem_budget is None else vmem_budget
+    )
+    if resolved_budget < 0:
+        raise ValueError(
+            f"vmem_budget must be >= 0 (0 disables fusion), got {vmem_budget}"
         )
 
     graph = _cached_dpn(topo, quant.stream_bits)
@@ -457,6 +550,11 @@ def compile_dhm(
     for s in range(n_stages):
         idxs = tuple(assignment.layers_of_stage(s))
         specs = tuple(topo.conv_layers[i] for i in idxs)
+        groups = plan_fusion_groups(topo, idxs, vmem_budget=resolved_budget)
+        local_groups = tuple(
+            (tuple(li - idxs[0] for li in g.layers), g.block_rows)
+            for g in groups
+        )
         stages.append(
             CompiledStage(
                 index=s,
@@ -470,8 +568,10 @@ def compile_dhm(
                     block_w=block_w,
                     block_c=block_c,
                     block_n=block_n,
+                    groups=local_groups,
                 ),
                 cost_flops=assignment.stage_costs[s],
+                groups=groups,
             )
         )
 
@@ -485,4 +585,5 @@ def compile_dhm(
         stages=tuple(stages),
         conv_params=conv_params,
         head_fn=head_fn,
+        vmem_budget=resolved_budget,
     )

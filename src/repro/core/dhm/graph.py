@@ -86,6 +86,46 @@ class DataflowGraph:
             by_layer.setdefault(a.layer, []).append(a)
         return [by_layer[k] for k in sorted(by_layer)]
 
+    def layer_payloads(self) -> list:
+        """Aggregate actor payloads per topological layer: one dict of
+        {flops, param_bytes, stream_bytes, stream_bytes_by_kind,
+        line_buffer_bits, multipliers} per layer. The benchmarks use this
+        to report what cross-layer fusion keeps on-chip: a conv layer's
+        *boundary* stream (the frame its terminal pool — or activation,
+        when unpooled — actors emit) is exactly the inter-layer traffic
+        that no longer crosses external memory once the layer fuses with
+        its consumer."""
+        by_layer: dict = {}
+        for a in self.actors:
+            d = by_layer.setdefault(
+                a.layer,
+                {
+                    "flops": 0.0,
+                    "param_bytes": 0.0,
+                    "stream_bytes": 0.0,
+                    "stream_bytes_by_kind": {},
+                    "line_buffer_bits": 0,
+                    "multipliers": 0,
+                },
+            )
+            d["flops"] += a.flops
+            d["param_bytes"] += a.param_bytes
+            d["stream_bytes"] += a.stream_bytes
+            by_kind = d["stream_bytes_by_kind"]
+            by_kind[a.kind.value] = by_kind.get(a.kind.value, 0.0) + a.stream_bytes
+            d["line_buffer_bits"] += a.line_buffer_bits
+            d["multipliers"] += a.multipliers
+        return [by_layer[k] for k in sorted(by_layer)]
+
+    def boundary_stream_bytes(self, layer: int) -> float:
+        """Bytes/frame of the named topological layer's output stream —
+        the pool actors' streams when the layer pools, else the
+        activation actors' (the frame handed to the next layer)."""
+        by_kind = self.layer_payloads()[layer]["stream_bytes_by_kind"]
+        if ActorKind.POOL.value in by_kind:
+            return by_kind[ActorKind.POOL.value]
+        return by_kind.get(ActorKind.ACTIVATION.value, 0.0)
+
     def validate(self) -> None:
         names = {a.name for a in self.actors}
         if len(names) != len(self.actors):

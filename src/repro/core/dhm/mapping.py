@@ -84,6 +84,35 @@ def partition_stages(costs: Sequence[float], n_stages: int) -> StageAssignment:
     )
 
 
+def partition_greedy_budget(n: int, fits) -> tuple:
+    """Maximal contiguous left-to-right partition of ``n`` layers under a
+    hard per-run feasibility bound.
+
+    ``fits(i, j)`` says whether the run [i, j) is feasible as one group.
+    Each run is grown while feasible and closed at the first infeasible
+    extension; singleton runs are always allowed (they fall back to the
+    caller's per-layer path). This is the dual of ``partition_stages``:
+    maximal groups under a hard bound (the fusion planner's VMEM budget)
+    instead of balanced groups minimizing the max cost. Greedy is optimal
+    for "fewest groups" here because feasibility is monotone in the run
+    length (a sub-run of a feasible run is feasible).
+
+    Returns a tuple of (start, end) half-open index pairs covering
+    [0, n).
+    """
+    if n < 0:
+        raise ValueError(f"n must be >= 0, got {n}")
+    runs = []
+    i = 0
+    while i < n:
+        j = i + 1
+        while j < n and fits(i, j + 1):
+            j += 1
+        runs.append((i, j))
+        i = j
+    return tuple(runs)
+
+
 @dataclasses.dataclass(frozen=True)
 class BalanceReport:
     assignment: StageAssignment

@@ -18,7 +18,12 @@ The stage body must be shape-homogeneous (same activation shape in/out),
 which holds for transformer stacks and for the CNN topologies once grouped
 into stages by the mapper. ``make_conv_stage`` builds such a body from the
 fused streaming-conv kernel (conv+bias+act in one kernel call), so each
-pipeline stage is itself a fused DHM actor chain.
+pipeline stage is itself a fused DHM actor chain. Stage bodies emitted by
+the compiler (``emit_conv_stage``) may additionally fuse a stage's layer
+run into cross-layer pyramid groups under the VMEM budget — the stage
+then executes as one (or a few) ``stream_conv_pyramid`` kernel calls
+instead of one call per layer, and only stage boundaries remain
+activation-streaming edges over ICI.
 """
 from __future__ import annotations
 

@@ -62,6 +62,7 @@ from repro.kernels.stream_conv.epilogue import (
     pool_out_dim,
     validate_epilogue,
 )
+from repro.kernels.stream_conv.halo import group_geometry
 
 
 def _kernel_body(
@@ -279,3 +280,169 @@ def stream_conv_fused_pallas(
         interpret=interpret,
     )(*inputs)
     return out[:, :h_keep, :w_keep, :n]
+
+
+# ---------------------------------------------------------------------------
+# Cross-layer fused pyramid: several conv->bias->act->pool layers per
+# pallas_call, inter-layer slabs VMEM-resident.
+
+
+def _assemble_taps(slab, k: int, s: int, conv_rows: int, conv_cols: int):
+    """Two-step tap assembly: column shifts first (k slices of the slab),
+    then row shifts of the column-assembled operand — 2k strided views
+    instead of k*k, same (rows*cols, k*k*C) matmul operand. Pure VPU data
+    movement; the contraction stays ONE matmul per layer per block."""
+    z = jnp.stack(
+        [
+            jax.lax.slice_in_dim(
+                slab, kj, kj + (conv_cols - 1) * s + 1, stride=s, axis=1
+            )
+            for kj in range(k)
+        ],
+        axis=2,
+    )  # (rows, conv_cols, k, C)
+    patches = jnp.stack(
+        [
+            jax.lax.slice_in_dim(
+                z, ki, ki + (conv_rows - 1) * s + 1, stride=s, axis=0
+            )
+            for ki in range(k)
+        ],
+        axis=2,
+    )  # (conv_rows, conv_cols, ki, kj, C)
+    c = slab.shape[-1]
+    return patches.reshape(conv_rows * conv_cols, k * k * c)
+
+
+def _pyramid_kernel(*refs, geom, act_bits, out_dtype):
+    """Kernel body: stream one row block of the final output through the
+    whole fusion group. refs = (x_ref, w_ref0, b_ref0, w_ref1, b_ref1, ...,
+    o_ref). Every inter-layer slab lives in VMEM for the block's lifetime;
+    nothing is written back until the last layer's pooled rows."""
+    x_ref, o_ref = refs[0], refs[-1]
+    wb = refs[1:-1]
+    rb = pl.program_id(1)
+
+    g0 = geom.layers[0]
+    start0 = g0.in_mult * rb + g0.in_off + geom.input_row_shift
+    slab = pl.load(
+        x_ref,
+        (
+            pl.dslice(0, 1),
+            pl.dslice(start0, g0.in_slab_rows),
+            slice(None),
+            slice(None),
+        ),
+    )[0].astype(jnp.float32)
+
+    for i, g in enumerate(geom.layers):
+        if i > 0:
+            # The slab is the previous layer's output over an affine row
+            # interval that may reach outside the frame: rows outside
+            # [0, in_rows) are exactly this layer's SAME zero padding
+            # (VALID layers never read them — they only feed rows that
+            # are discarded downstream).
+            rows = (
+                jax.lax.broadcasted_iota(jnp.int32, slab.shape, 0)
+                + g.in_mult * rb + g.in_off
+            )
+            slab = jnp.where((rows >= 0) & (rows < g.in_rows), slab, 0.0)
+            lc, rc = g.pads[1]
+            if lc or rc:
+                slab = jnp.pad(slab, ((0, 0), (lc, rc), (0, 0)))
+        operand = _assemble_taps(
+            slab, g.k, g.stride, g.conv_slab_rows, g.conv_cols
+        )
+        w_flat = wb[2 * i][...].reshape(g.k * g.k * g.in_ch, g.n_out)
+        # ONE MXU matmul per layer per block.
+        y = jnp.dot(
+            operand,
+            w_flat.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        ).reshape(g.conv_slab_rows, g.conv_cols, g.n_out)
+        slab = apply_epilogue(
+            y, wb[2 * i + 1][...], act=g.act, pool=g.pw,
+            pool_stride=g.ps, act_bits=act_bits, pool_first=True,
+        )
+    o_ref[0] = slab.astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "layers", "act_bits", "block_rows", "out_dtype", "interpret"
+    ),
+)
+def stream_conv_pyramid_pallas(
+    x: jax.Array,  # (B, H, W, C0), unpadded
+    weights: tuple,  # per layer (K, K, C, N) HWIO
+    biases: tuple,  # per layer (N,)
+    *,
+    layers: tuple,  # PyramidLayer per layer
+    act_bits: int | None = None,
+    block_rows: int = 0,  # final-output rows per block; 0 = whole frame
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """Cross-layer fused conv pyramid: the whole group is ONE pallas_call.
+
+    Grid = (B, n_row_blocks); each cell streams one block of the *final*
+    output rows through every layer of the group — conv (one matmul per
+    layer), bias, pool, act, stream quant — with all inter-layer feature
+    slabs VMEM-resident. The block's input halo is the composed per-layer
+    requirement (``halo.group_geometry``); SAME padding of intermediate
+    layers is realized by masking slab rows outside the valid frame, which
+    is exactly the zero padding those rows carry. Returns the group output
+    (B, H', W', N_last).
+    """
+    b, h, w, c = x.shape
+    kernels = tuple(wt.shape[0] for wt in weights)
+    n_outs = tuple(wt.shape[3] for wt in weights)
+    geom = group_geometry(
+        h, w, c, layers, kernels, n_outs, block_rows=block_rows
+    )
+    g0 = geom.layers[0]
+    lc, rc = geom.in_pad_cols
+    xp = jnp.pad(
+        x,
+        (
+            (0, 0),
+            (geom.in_pad_top, geom.in_pad_rows_total - h - geom.in_pad_top),
+            (lc, rc),
+            (0, 0),
+        ),
+    )
+    rows_tot, cols_tot = xp.shape[1], xp.shape[2]
+
+    grid = (b, geom.n_row_blocks)
+    in_specs = [
+        pl.BlockSpec((1, rows_tot, cols_tot, c), lambda bb, rb: (bb, 0, 0, 0))
+    ]
+    inputs = [xp]
+    for g, wt, bs in zip(geom.layers, weights, biases):
+        in_specs.append(
+            pl.BlockSpec(
+                (g.k, g.k, g.in_ch, g.n_out), lambda bb, rb: (0, 0, 0, 0)
+            )
+        )
+        in_specs.append(pl.BlockSpec((g.n_out,), lambda bb, rb: (0,)))
+        inputs += [wt, bs]
+
+    n_last = n_outs[-1]
+    out = pl.pallas_call(
+        functools.partial(
+            _pyramid_kernel, geom=geom, act_bits=act_bits, out_dtype=out_dtype
+        ),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(
+            (1, geom.block_rows, geom.out_cols, n_last),
+            lambda bb, rb: (bb, rb, 0, 0),
+        ),
+        out_shape=jax.ShapeDtypeStruct(
+            (b, geom.n_row_blocks * geom.block_rows, geom.out_cols, n_last),
+            out_dtype,
+        ),
+        interpret=interpret,
+    )(*inputs)
+    return out[:, : geom.out_rows]

@@ -114,7 +114,7 @@ def _maxpool_window(y, window: int, stride: int):
 
 def apply_epilogue(
     y, bias, *, act: str, pool: int, pool_stride: int | None = None,
-    act_bits: int | None = None, ste: bool = False,
+    act_bits: int | None = None, ste: bool = False, pool_first: bool = False,
 ):
     """y: (..., H, W, N) f32; bias: (N,). Returns the block after
     bias + activation + optional pool x pool / pool_stride max-pool (VALID
@@ -127,15 +127,25 @@ def apply_epilogue(
     fused path keeps training. The Pallas kernel body keeps the raw
     round/clip (``ste=False``): it is forward-only anyway, and the kernel
     program must stay plain jnp ops.
+
+    ``pool_first=True`` swaps the act/pool actors: bias -> max-pool ->
+    activation -> quant, which is the composition order of
+    ``cnn_apply_reference``. Because max-pool commutes with the monotone
+    activations the two orders agree; pooling first shrinks the
+    activation work by the pool factor, so the cross-layer fused pyramid
+    uses it (the single-layer actor chain keeps the paper's
+    conv -> act -> pool order).
     """
     validate_epilogue(act, pool, pool_stride, act_bits)
     pw, ps = normalize_pool(pool, pool_stride)
     y = y + bias.astype(jnp.float32)
+    if pool_first and pw:
+        y = _maxpool_window(y, pw, ps)
     if act == "relu":
         y = jnp.maximum(y, 0.0)
     elif act == "tanh":
         y = jnp.tanh(y)
-    if pw:
+    if not pool_first and pw:
         y = _maxpool_window(y, pw, ps)
     if act_bits is not None:
         spec = stream_quant_spec(act_bits)

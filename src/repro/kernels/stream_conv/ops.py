@@ -30,9 +30,19 @@ from repro.kernels.backends import (
     compiled_pallas_available,
     validate_backend,
 )
-from repro.kernels.stream_conv.conv import stream_conv_fused_pallas
-from repro.kernels.stream_conv.ref import stream_conv_block_ref
-from repro.kernels.stream_conv.xla import stream_conv_fused_xla
+from repro.kernels.stream_conv.conv import (
+    stream_conv_fused_pallas,
+    stream_conv_pyramid_pallas,
+)
+from repro.kernels.stream_conv.halo import as_pyramid_layers
+from repro.kernels.stream_conv.ref import (
+    stream_conv_block_ref,
+    stream_conv_pyramid_ref,
+)
+from repro.kernels.stream_conv.xla import (
+    stream_conv_fused_xla,
+    stream_conv_pyramid_xla,
+)
 
 
 def _pad_same(x: jax.Array, k: int, stride: int = 1) -> jax.Array:
@@ -165,4 +175,63 @@ def stream_conv_block(
         pool_stride=pool_stride, act_bits=act_bits,
         out_dtype=out_dtype, backend=backend,
         block_r=block_r, block_w=block_w, block_c=block_c, block_n=block_n,
+    )
+
+
+def stream_conv_pyramid(
+    x: jax.Array,  # (B, H, W, C0)
+    weights,  # sequence of (K, K, C, N) HWIO, one per layer
+    biases,  # sequence of (N,), one per layer
+    *,
+    layers,  # sequence of layer specs (padding/stride/act/pool[/pool_stride])
+    act_bits: int | None = None,
+    block_rows: int = 0,
+    out_dtype=jnp.float32,
+    backend: str = DEFAULT_BACKEND,
+) -> jax.Array:
+    """Cross-layer fused conv pyramid: a whole fusion group of consecutive
+    conv -> bias -> act -> pool layers as ONE kernel invocation, with all
+    inter-layer feature slabs kept on-chip (VMEM scratch on the Pallas
+    path) — the paper's no-external-memory dataflow property extended
+    across layer boundaries.
+
+    ``layers`` is a sequence of duck-typed layer specs (``ConvLayerSpec``
+    or anything with ``padding``/``act``/``pool`` and the optional
+    generalized fields); ``weights``/``biases`` are the matching per-layer
+    tensors. ``block_rows`` sets the final-output rows streamed per block
+    on the Pallas path (0 = whole frame; the input halo per block is the
+    composed per-layer requirement from ``halo.group_geometry``). The
+    ``pallas`` backend lowers through Mosaic on TPU and through the
+    one-closure XLA rendering elsewhere; ``pallas_interpret`` runs the
+    exact multi-layer kernel program as the oracle; ``ref`` is the
+    unfused per-layer chain.
+    """
+    validate_backend(backend)
+    weights = tuple(weights)
+    biases = tuple(biases)
+    layers = tuple(layers)
+    if not weights or len(weights) != len(biases) or len(weights) != len(layers):
+        raise ValueError(
+            f"pyramid needs matching layers/weights/biases, got "
+            f"{len(layers)}/{len(weights)}/{len(biases)}"
+        )
+    for li, w in enumerate(weights):
+        if w.ndim != 4 or w.shape[0] != w.shape[1]:
+            raise ValueError(
+                f"pyramid layer {li}: only square HWIO kernels, got {w.shape}"
+            )
+    pyr = as_pyramid_layers(layers)
+    if backend == "ref":
+        return stream_conv_pyramid_ref(
+            x, weights, biases, layers=pyr, act_bits=act_bits
+        ).astype(out_dtype)
+    if backend == "pallas" and not compiled_pallas_available():
+        return stream_conv_pyramid_xla(
+            x, weights, biases, layers=pyr, act_bits=act_bits,
+            out_dtype=out_dtype,
+        )
+    return stream_conv_pyramid_pallas(
+        x, weights, biases, layers=pyr, act_bits=act_bits,
+        block_rows=block_rows, out_dtype=out_dtype,
+        interpret=(backend == "pallas_interpret"),
     )

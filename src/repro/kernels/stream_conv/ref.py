@@ -76,3 +76,23 @@ def stream_conv_block_ref(
     if act_bits is not None:
         y = fake_quant_ste(y, FixedPointSpec(bits=act_bits, frac_bits=act_bits - 2))
     return y
+
+
+def stream_conv_pyramid_ref(
+    x: jax.Array,
+    weights,  # per layer (K, K, C, N)
+    biases,  # per layer (N,)
+    *,
+    layers,  # PyramidLayer per layer (padding/stride/act/pool/pool_stride)
+    act_bits: int | None = None,
+) -> jax.Array:
+    """Reference rendering of a fusion group: the plain per-layer
+    ``stream_conv_block_ref`` chain. Fusion is a scheduling decision, not
+    a semantic one — the group's math is exactly the layer composition."""
+    for layer, w, b in zip(layers, weights, biases):
+        x = stream_conv_block_ref(
+            x, w, b, padding=layer.padding, stride=layer.stride,
+            act=layer.act, pool=layer.pool, pool_stride=layer.pool_stride,
+            act_bits=act_bits,
+        )
+    return x

@@ -127,3 +127,100 @@ def stream_conv_fused_xla(
         blocks = jax.lax.map(block_fn, jnp.arange(n_rb))  # (n_rb, B, ...)
         y = jnp.moveaxis(blocks, 0, 1).reshape(b, n_rb * r_o, w_keep, n)
     return y[:, :h_keep].astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Cross-layer fused pyramid: the whole fusion group as ONE XLA closure.
+
+
+def _assemble_taps_xla(xp, k: int, s: int, conv_r: int, conv_c: int):
+    """Two-step tap assembly on a (B, H, W, C) frame: the Pallas kernel's
+    rank-3 ``_assemble_taps`` vmapped over the batch, so the strided-shift
+    index arithmetic and the (ki, kj, C) flattening order (which must
+    match the HWIO weight reshape exactly) live in ONE place."""
+    from repro.kernels.stream_conv.conv import _assemble_taps
+
+    patches = jax.vmap(
+        lambda f: _assemble_taps(f, k, s, conv_r, conv_c)
+    )(xp)  # (B, conv_r*conv_c, k*k*C)
+    b = xp.shape[0]
+    c = xp.shape[-1]
+    return patches.reshape(b * conv_r * conv_c, k * k * c)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("layers", "act_bits", "out_dtype")
+)
+def stream_conv_pyramid_xla(
+    x: jax.Array,  # (B, H, W, C0), unpadded
+    weights: tuple,  # per layer (K, K, C, N) HWIO
+    biases: tuple,  # per layer (N,)
+    *,
+    layers: tuple,  # PyramidLayer per layer
+    act_bits: int | None = None,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """XLA rendering of the fused pyramid — the compiled fallback where
+    Mosaic is unavailable. The whole group is one fused XLA graph (this
+    function is one jit cache entry): per layer, two-step tap assembly
+    feeds a single matmul, then the shared bias -> pool -> act -> quant
+    epilogue (``pool_first`` — the ``cnn_apply_reference`` composition
+    order, saving the pool factor of activation work). Intermediate
+    feature maps stay whole-frame (CPU memory, not VMEM, is the
+    constraint here); if a layer's patch operand would exceed the im2col
+    byte budget, the closure degrades to the row-blocked per-layer path
+    so memory stays bounded.
+    """
+    from repro.kernels.stream_conv.halo import same_pads
+
+    big = any(
+        x.shape[0] * g_h * g_w * k * k * c * 4 > _BLOCK_BYTES_BUDGET
+        for (g_h, g_w, k, c) in _pyramid_conv_dims(x.shape, weights, layers)
+    )
+    for layer, w_t, b_t in zip(layers, weights, biases):
+        k = w_t.shape[0]
+        s = layer.stride
+        if layer.padding == "SAME":
+            ph = same_pads(x.shape[1], s, k)
+            pw_ = same_pads(x.shape[2], s, k)
+            x = jnp.pad(x, ((0, 0), ph, pw_, (0, 0)))
+        if big:
+            # Bounded-memory fallback: same grouping contract (one jitted
+            # closure), row-blocked per-layer kernels inside.
+            x = stream_conv_fused_xla(
+                x, w_t.reshape(k * k, w_t.shape[2], w_t.shape[3]), b_t,
+                k=k, stride=s, act=layer.act, pool=layer.pool,
+                pool_stride=layer.pool_stride, act_bits=act_bits,
+                out_dtype=jnp.float32,
+            )
+            continue
+        b, h, w, c = x.shape
+        conv_r, conv_c = (h - k) // s + 1, (w - k) // s + 1
+        operand = _assemble_taps_xla(x, k, s, conv_r, conv_c)
+        y = jnp.dot(
+            operand.astype(jnp.float32),
+            w_t.reshape(k * k * c, -1).astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        ).reshape(b, conv_r, conv_c, -1)
+        # ste=True: the XLA rendering is the differentiable fused path.
+        x = apply_epilogue(
+            y, b_t, act=layer.act, pool=layer.pool,
+            pool_stride=layer.pool_stride, act_bits=act_bits,
+            ste=True, pool_first=True,
+        )
+    return x.astype(out_dtype)
+
+
+def _pyramid_conv_dims(x_shape, weights, layers):
+    """Per-layer (conv_rows, conv_cols, k, C) for the pyramid's memory
+    guard, read from the shared geometry model (``halo.group_geometry``)
+    so the byte guard can never diverge from what the renderers compute."""
+    from repro.kernels.stream_conv.halo import group_geometry
+
+    _, h, w, c = x_shape
+    geom = group_geometry(
+        h, w, c, layers,
+        tuple(w_t.shape[0] for w_t in weights),
+        tuple(w_t.shape[3] for w_t in weights),
+    )
+    return [(g.conv_rows, g.conv_cols, g.k, g.in_ch) for g in geom.layers]

@@ -304,6 +304,7 @@ def cnn_apply(
     act_bits: int | None = None,
     pow2_weights: bool = False,
     conv_backend: str | None = None,
+    vmem_budget: int | None = None,
 ) -> jax.Array:
     """Forward pass. x: (B, H, W, C) NHWC. Returns logits (B, n_classes).
 
@@ -320,6 +321,9 @@ def cnn_apply(
     ``conv_backend`` (a ``repro.kernels.backends`` name) selects the kernel
     backend for every conv stage; None means the ``ref`` composition
     (lax.conv — the fast path for training, with well-tuned gradients).
+    ``vmem_budget`` is the compiler's cross-layer fusion budget in bytes
+    (None = the default, which fuses every paper topology's feature
+    extractor into one kernel group; 0 = per-layer stages).
     """
     from repro.core.dhm.compiler import QuantSpec, compile_dhm
 
@@ -332,8 +336,13 @@ def cnn_apply(
             pow2_weights=pow2_weights,
         ),
         backend=conv_backend if conv_backend is not None else "ref",
+        vmem_budget=vmem_budget,
     )
-    return plan(x)
+    # Run the stage/head closures directly rather than plan.__call__:
+    # eager model-level calls build a fresh plan per invocation, so the
+    # plan-level cached jit would retrace every call — the stage bodies
+    # are module-level jitted kernels with process-wide caches instead.
+    return plan.head_fn(plan.features(x))
 
 
 def cnn_apply_reference(
