@@ -19,9 +19,23 @@ decision, and both rows land in ``BENCH_kernels.json`` — the fused row
 carries ``fusion_speedup`` vs its per-layer twin. After timing, the
 benchmark asserts the plan never retraced across reps (the jit cache
 holds exactly one entry).
+
+A third family of rows (``path: e2e_pipelined``) measures the SPATIAL
+pipeline: every topology served through the ``Engine`` on a multi-device
+``(stage, data)`` host-platform mesh (heterogeneous stages over boxed ICI
+edges, GPipe schedule). Host-platform device counts must be forced before
+JAX initializes, so these rows are measured in a subprocess
+(``python -m benchmarks.e2e_bench --pipelined-json``) with
+``--xla_force_host_platform_device_count=8``; each row is checked against
+the single-device plan before it is recorded.
 """
 from __future__ import annotations
 
+import json
+import os
+import pathlib
+import subprocess
+import sys
 import time
 
 import jax
@@ -65,6 +79,102 @@ def _measure_plan(plan, x):
         f"plan retraced across reps: jit cache holds {n_traces} entries"
     )
     return us
+
+
+def _pipelined_rows_here() -> list:
+    """Measure the pipelined serving rows IN THIS PROCESS (requires a
+    multi-device backend — the subprocess entry below forces 8 host
+    devices). Each topology runs through the Engine on a (stage, data)
+    mesh and is checked against the single-device plan before timing."""
+    import numpy as np
+
+    from repro.core.dhm.engine import Engine
+
+    n_dev = len(jax.devices())
+    rows = []
+    for name in (
+        "lenet5", "cifar10", "svhn", "cifar10_full", "cifar10_strided"
+    ):
+        topo = ALL_TOPOLOGIES[name]
+        bits = PAPER_BITS[name]
+        n_stages = min(3, len(topo.conv_layers))
+        data = 2
+        if n_stages * data > n_dev:
+            raise RuntimeError(
+                f"pipelined bench needs {n_stages * data} devices, "
+                f"have {n_dev}"
+            )
+        params = init_cnn(jax.random.PRNGKey(0), topo)
+        h_in, w_in = topo.input_shape
+        mesh = jax.make_mesh((n_stages, data), ("stage", "data"))
+        mb, M = 8, 4
+        group = mb * M
+        x = jax.random.normal(
+            jax.random.PRNGKey(1), (group, h_in, w_in, topo.input_channels)
+        )
+        for label, quant in (
+            ("fp32", QuantSpec()),
+            ("quant", QuantSpec(weight_bits=bits, act_bits=bits)),
+        ):
+            plan = compile_dhm(topo, params, quant=quant, n_stages=n_stages)
+            eng = Engine(
+                plan, microbatch=mb, mesh=mesh, n_microbatches=M,
+                data_axis="data",
+            )
+            got = eng.infer(x)
+            ref = plan(x)
+            assert np.allclose(
+                np.asarray(got), np.asarray(ref), rtol=1e-4, atol=1e-4
+            ), f"{name}/{label}: pipelined logits diverge from single-device"
+            us_single = _measure_plan(plan, x)
+            us = _time(eng.infer, x, reps=5, passes=2)
+            fps = group / (us * 1e-6)
+            fps_single = group / (us_single * 1e-6)
+            rows.append(
+                {
+                    "name": f"e2e/{name}_{label}_pipelined_plan",
+                    "us_per_call": us,
+                    "path": "e2e_pipelined",
+                    "frames_per_s": fps,
+                    "pipeline_speedup": fps / fps_single,
+                    "derived": (
+                        f"{fps:.0f} frames/s through the serving Engine on "
+                        f"a ({n_stages} stage x {data} data) "
+                        f"{jax.default_backend()} mesh ({M}x{mb}-frame "
+                        f"groups, heterogeneous stages over boxed ICI "
+                        f"edges): x{fps / fps_single:.2f} vs the "
+                        f"single-device plan ({fps_single:.0f} frames/s), "
+                        f"logits verified equal"
+                    ),
+                }
+            )
+    return rows
+
+
+def run_pipelined() -> list:
+    """The ``path: e2e_pipelined`` rows, measured in a subprocess with 8
+    forced host-platform devices (the flag must be set before JAX
+    initializes, and the main benchmark process may be single-device)."""
+    repo_root = pathlib.Path(__file__).resolve().parents[1]
+    env = {
+        **os.environ,
+        "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+        "JAX_PLATFORMS": "cpu",
+        "PYTHONPATH": str(repo_root / "src")
+        + (os.pathsep + os.environ["PYTHONPATH"]
+           if os.environ.get("PYTHONPATH") else ""),
+    }
+    res = subprocess.run(
+        [sys.executable, "-m", "benchmarks.e2e_bench", "--pipelined-json"],
+        capture_output=True, text=True, env=env, cwd=str(repo_root),
+        timeout=1800,
+    )
+    if res.returncode != 0:
+        raise RuntimeError(
+            "pipelined benchmark subprocess failed:\n" + res.stderr[-3000:]
+        )
+    # The rows are the last stdout line (JAX may log above them).
+    return json.loads(res.stdout.strip().splitlines()[-1])
 
 
 def run() -> list:
@@ -139,9 +249,15 @@ def run() -> list:
                     ),
                 }
             )
+    rows += run_pipelined()
     return rows
 
 
 if __name__ == "__main__":
-    for r in run():
-        print(r["name"], "|", f"{r['us_per_call']:.1f}us", "|", r["derived"])
+    if "--pipelined-json" in sys.argv:
+        # Subprocess entry: this process was launched with 8 forced host
+        # devices; emit the pipelined rows as one JSON line on stdout.
+        print(json.dumps(_pipelined_rows_here()))
+    else:
+        for r in run():
+            print(r["name"], "|", f"{r['us_per_call']:.1f}us", "|", r["derived"])

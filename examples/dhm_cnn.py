@@ -27,7 +27,7 @@ from repro.core.dhm import (
     estimate_resources,
 )
 from repro.core.dhm.resources import ParamClassFractions
-from repro.models.cnn import CNNTopology, ConvLayerSpec, LENET5, cnn_apply_reference
+from repro.models.cnn import LENET5, cnn_apply_reference
 from repro.paper.analysis import classify_model
 from repro.paper.train_cnn import get_trained_cnn
 
@@ -115,34 +115,48 @@ def main():
     print(f"  cifar10_full (3x3/stride-2 overlapping pool, conv dims "
           f"{shapes}): quantized plan matches reference={ok}")
 
-    print("\n== 5. Same plan, spatial pipeline on 4 virtual devices ==")
-    # A homogeneous 4-conv-layer topology (SAME, pool=0, C == N) so every
-    # compiled stage is shape-identical; the SAME compiled plan then runs
-    # on a mesh — each stage gets a private device group (DHM: private
-    # resources per actor) and µbatches stream over ICI.
-    pipe_topo = CNNTopology(
-        name="pipe4", input_hw=8, input_channels=4,
-        conv_layers=tuple(
-            ConvLayerSpec(n_out=4, kernel=3, padding="SAME", pool=0,
-                          act="tanh")
-            for _ in range(4)
-        ),
-        fc_dims=(), n_classes=2,
+    print("\n== 5. THE SAME LeNet5 plan, spatial pipeline on a mesh ==")
+    # The quantized LeNet5 plan from step 4 — heterogeneous stages
+    # (28x28x1 -> 12x12x20 -> 4x4x50) — streams through the spatial
+    # pipeline directly: each stage gets a private device group (DHM:
+    # private resources per actor), activations flow over boxed ICI edges
+    # sized from the compiler's per-stage StageIOSpec, and a 2D
+    # (stage, data) mesh adds data-parallel batch sharding on top.
+    for st in plan.stages:
+        print(f"  stage {st.index}: {st.io.in_shape} -> {st.io.out_shape}")
+    mesh = jax.make_mesh((2, 2), ("stage", "data"))
+    mbs = jnp.asarray(
+        np.random.default_rng(1).normal(size=(6, 4, 28, 28, 1)), jnp.float32
     )
-    from repro.models.cnn import init_cnn
-
-    pipe_plan = compile_dhm(
-        pipe_topo, init_cnn(jax.random.PRNGKey(0), pipe_topo), n_stages=4
-    )
-    mesh = jax.make_mesh((4,), ("stage",))
-    mbs = jax.random.normal(jax.random.PRNGKey(1), (8, 2, 8, 8, 4))
     t0 = time.time()
-    out = pipe_plan.run_pipelined(mbs, mesh=mesh)
-    seq = pipe_plan.features(mbs.reshape(-1, 8, 8, 4)).reshape(mbs.shape)
+    out = plan.run_pipelined(mbs, mesh=mesh, data_axis="data")
+    seq = jnp.stack([plan.features(mbs[i]) for i in range(6)])
     ok = np.allclose(np.asarray(out), np.asarray(seq), atol=1e-5)
-    print(f"  4-stage compiled pipeline: matches single-device plan={ok} "
-          f"({time.time()-t0:.2f}s, bubble={pipe_plan.n_stages-1}"
-          f"/{8+3} ticks)")
+    print(f"  2-stage heterogeneous pipeline on (2 stage x 2 data): "
+          f"matches single-device plan={ok} ({time.time()-t0:.2f}s, "
+          f"bubble={plan.n_stages-1}/{6+1} ticks)")
+
+    print("\n== 6. Serving engine: µbatch queue over the same plan ==")
+    # The Engine is the serving front end: requests queue up, get packed
+    # into fixed micro-batches, and run through the plan's DONATED jitted
+    # closure (double-buffered under async dispatch); stats track
+    # per-request latency and engine throughput.
+    from repro.core.dhm import Engine
+
+    eng = Engine(plan, microbatch=8)
+    reqs = [
+        eng.submit(jnp.asarray(
+            np.random.default_rng(10 + i).normal(
+                size=(np.random.default_rng(20 + i).integers(1, 6),
+                      28, 28, 1)
+            ), jnp.float32,
+        ))
+        for i in range(5)
+    ]
+    eng.flush()
+    total = sum(r.result().shape[0] for r in reqs)
+    print(f"  served {len(reqs)} requests ({total} frames); "
+          f"{eng.stats().summary()}")
     print("OK")
 
 

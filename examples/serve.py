@@ -14,51 +14,13 @@ import jax.numpy as jnp
 
 from repro.configs import get_arch
 from repro.models import transformer as T
-from repro.models.layers import pack_linear_pow2
+from repro.models.layers import pack_params_pow2
 
-
-def quantize_stack_pow2(params: dict) -> dict:
-    """Pack every linear in the stack to pow2 codes (serving format)."""
-
-    def walk(node):
-        if isinstance(node, dict):
-            if "w" in node and getattr(node["w"], "ndim", 0) >= 2:
-                return pack_linear_pow2_nd(node)
-            return {k: walk(v) for k, v in node.items()}
-        if isinstance(node, list):
-            return [walk(v) for v in node]
-        return node
-
-    def pack_linear_pow2_nd(p):
-        w = p["w"]
-        if w.ndim == 2:
-            return pack_linear_pow2(p)
-        # Stacked (scan) weights: per-layer quantization via vmap so every
-        # layer keeps its own per-channel scales. Odd layer widths get a
-        # zero pad column for packing (quantize_weights-style); the stored
-        # scale keeps the true width so the decode path slices it back.
-        from repro.core.quant.packing import pack_codes_u4
-        from repro.core.quant.pow2 import pow2_codes
-
-        lead = w.shape[:-2]
-        n = w.shape[-1]
-        if n % 2:
-            w = jnp.pad(w, [(0, 0)] * (w.ndim - 1) + [(0, 1)])
-        w2 = w.reshape((-1,) + w.shape[-2:])
-        codes, scale = jax.vmap(
-            lambda wi: pow2_codes(wi, channel_axis=1)
-        )(w2)  # codes (L,K,N_even), scale (L,1,N_even)
-        out = {
-            "codes": pack_codes_u4(codes).reshape(
-                lead + (w.shape[-2], w.shape[-1] // 2)
-            ),
-            "scale": scale[..., :n].reshape(lead + (1, n)),
-        }
-        if "b" in p:
-            out["b"] = p["b"]
-        return out
-
-    return walk(params)
+# Pack every linear in the stack to pow2 codes (serving format). Stacked
+# scan-layer weights are handled inside pack_linear_pow2 (per-layer
+# scales via vmap, odd widths zero-padded) — the packing logic lives in
+# repro.models.layers, shared with the single-linear path.
+quantize_stack_pow2 = pack_params_pow2
 
 
 def main():

@@ -52,7 +52,10 @@ expected = [
 ] + [
     f"e2e/{net}_{variant}_plan"
     for net in nets
-    for variant in ("fp32", "quant", "fp32_perlayer", "quant_perlayer")
+    for variant in (
+        "fp32", "quant", "fp32_perlayer", "quant_perlayer",
+        "fp32_pipelined", "quant_pipelined",
+    )
 ]
 missing = [n for n in expected if n not in rows]
 if missing:
@@ -68,10 +71,13 @@ print(f"fused stream conv: {fused['us_per_call']:.0f} us/call, "
 for net in nets:
     fp = rows[f"e2e/{net}_fp32_plan"]
     q = rows[f"e2e/{net}_quant_plan"]
+    pp = rows[f"e2e/{net}_fp32_pipelined_plan"]
     print(f"e2e {net}: fp32 {fp['frames_per_s']:.0f} frames/s "
           f"(x{fp.get('fusion_speedup', 0):.2f} vs per-layer), "
           f"quant {q['frames_per_s']:.0f} frames/s "
-          f"(x{q.get('fusion_speedup', 0):.2f} vs per-layer)")
+          f"(x{q.get('fusion_speedup', 0):.2f} vs per-layer), "
+          f"pipelined {pp['frames_per_s']:.0f} frames/s on a host mesh "
+          f"(x{pp.get('pipeline_speedup', 0):.2f} vs single device)")
 
 # -- history append sanity (the cross-PR trajectory must actually grow) --
 before = int(os.environ.get("HISTORY_LINES_BEFORE", "0"))

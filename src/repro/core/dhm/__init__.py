@@ -19,6 +19,13 @@ as a compiler pipeline:
   pipeline stage bodies, examples, e2e benchmarks — routes through it.
 - ``pipeline``: the streaming pipelined executor (shard_map + ppermute);
   runs a CompiledDHM's stages on disjoint device groups, GPipe schedule.
+  Heterogeneous stage geometries (pool/stride shrink, channel growth)
+  flow through boxed ICI buffers sized from the per-edge ``StageIOSpec``
+  the compiler emits; a 2D ``(stage, data)`` mesh adds batch sharding.
+- ``engine``: where compiled plans execute — the eager/jitted forward
+  paths, the mesh executor entry (``run_pipelined``), and the
+  micro-batched serving ``Engine`` (request queue, double-buffered
+  donated closures, warmup, latency/throughput stats).
 - ``resources``: the FPGA resource model for the three multiplier
   strategies (paper Tables 2 & 3).
 - ``throughput``: the streaming-throughput model (paper Table 4).
@@ -31,6 +38,8 @@ from repro.core.dhm.compiler import (
     emit_conv_stage,
     validate_topology,
 )
+from repro.core.dhm.engine import Engine, EngineStats, run_pipelined
+from repro.core.dhm.pipeline import PipelineConfig, StageIOSpec, pipeline_forward
 from repro.core.dhm.graph import (
     Actor,
     ActorKind,
@@ -55,7 +64,13 @@ __all__ = [
     "CompiledDHM",
     "CompiledStage",
     "DataflowGraph",
+    "Engine",
+    "EngineStats",
+    "PipelineConfig",
     "QuantSpec",
+    "StageIOSpec",
+    "pipeline_forward",
+    "run_pipelined",
     "cnn_to_dpn",
     "compile_dhm",
     "emit_conv_stage",

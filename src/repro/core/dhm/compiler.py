@@ -37,10 +37,14 @@ Lowering stages:
    through the packed ``pow2_matmul`` kernel when ``quant.pow2_weights``
    (with straight-through gradients, so pow2 QAT still trains).
 
-The resulting :class:`CompiledDHM` executes single-device (sequential fused
-stages — the default path under ``cnn_apply``) or spatially on a mesh via
-``pipeline_forward`` (``run_pipelined``), where each stage owns a private
-device group exactly as each DHM actor owns private silicon.
+The resulting :class:`CompiledDHM` is a *plan*; execution lives in
+``repro.core.dhm.engine``: single-device (sequential fused stages — the
+default path under ``cnn_apply``), spatially on a mesh via
+``pipeline_forward`` (``run_pipelined`` — heterogeneous stage shapes flow
+through per-edge :class:`~repro.core.dhm.pipeline.StageIOSpec` geometry
+emitted here), or behind the micro-batched serving ``Engine``. Each stage
+owns a private device group exactly as each DHM actor owns private
+silicon.
 """
 from __future__ import annotations
 
@@ -58,6 +62,7 @@ from repro.core.dhm.fusion import (
 )
 from repro.core.dhm.graph import DataflowGraph, cnn_to_dpn
 from repro.core.dhm.mapping import StageAssignment, partition_stages
+from repro.core.dhm.pipeline import StageIOSpec
 from repro.kernels.backends import DEFAULT_BACKEND, validate_backend
 from repro.kernels.stream_conv.epilogue import ACTS, normalize_pool
 
@@ -389,6 +394,7 @@ class CompiledStage:
     fn: Callable  # (params_list, x) -> y
     cost_flops: float  # summed actor payloads (the mapper's stage cost)
     groups: tuple = ()  # FusionGroup per kernel invocation in this stage
+    io: Optional[StageIOSpec] = None  # (H, W, C) activation edge geometry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -426,26 +432,13 @@ class CompiledDHM:
         return x
 
     def jitted_forward(self, *, donate: bool = False) -> Callable:
-        """The plan's cached end-to-end jitted closure (conv stages + FC
-        head as ONE compiled computation — no per-stage Python re-entry,
-        no eager head ops). Built once per plan and reused across calls,
-        so repeated inference never retraces.
+        """The plan's cached end-to-end jitted closure (see
+        ``repro.core.dhm.engine.plan_jitted_forward``, where execution
+        lives). ``donate=True`` donates the input buffer — the serving
+        ``Engine``'s double-buffered path."""
+        from repro.core.dhm.engine import plan_jitted_forward
 
-        ``donate=True`` returns a variant that donates the input buffer
-        to the computation (XLA may reuse its memory for intermediates) —
-        for serving loops that hand off ownership; the caller's array is
-        invalidated, so the default keeps the input alive.
-        """
-        cache = getattr(self, "_fwd_cache", None)
-        if cache is None:
-            cache = {}
-            object.__setattr__(self, "_fwd_cache", cache)
-        if donate not in cache:
-            cache[donate] = jax.jit(
-                lambda xb: self.head_fn(self.features(xb)),
-                donate_argnums=(0,) if donate else (),
-            )
-        return cache[donate]
+        return plan_jitted_forward(self, donate=donate)
 
     def __call__(self, x: jax.Array) -> jax.Array:
         """x: (B, H, W, C) NHWC -> logits (B, n_classes). Runs the cached
@@ -454,37 +447,26 @@ class CompiledDHM:
 
     # -- spatial (mesh) execution ------------------------------------------
 
-    def pipeline_stage_fn(self):
-        """The shared stage body + stacked per-stage params for
-        ``pipeline_forward``. Requires homogeneous stages (identical layer
-        specs and param shapes per stage), which is what the streaming
-        executor requires of its stage bodies anyway."""
-        from repro.core.dhm.pipeline import stack_stage_params
+    def pipeline_spec(self):
+        """Per-stage closures + params + per-edge activation geometry
+        (:class:`StageIOSpec`) for the heterogeneous streaming executor.
+        Stages may freely pool/stride down and grow channels between
+        boundaries — the executor boxes the ICI buffers to the max edge
+        shape and each stage computes on its exact geometry."""
+        from repro.core.dhm.engine import pipeline_spec
 
-        first = self.stages[0].specs
-        for st in self.stages[1:]:
-            if st.specs != first:
-                raise ValueError(
-                    "pipelined execution needs homogeneous stages (same "
-                    f"conv specs per stage); stage 0 has {first} but stage "
-                    f"{st.index} has {st.specs}"
-                )
-        stacked = stack_stage_params(
-            [self.stage_params(s) for s in range(self.n_stages)]
-        )
-        return self.stages[0].fn, stacked
+        return pipeline_spec(self)
 
-    def run_pipelined(self, microbatches, *, mesh, cfg=None):
+    def run_pipelined(self, microbatches, *, mesh, cfg=None, data_axis=None):
         """Stream (M, mb, H, W, C) µbatches through the conv stages on a
-        mesh (one device group per stage). Returns the feature stream;
-        apply ``head_fn`` after re-flattening for logits."""
-        from repro.core.dhm.pipeline import PipelineConfig, pipeline_forward
+        mesh (one device group per stage; with ``data_axis`` the µbatch
+        dim is additionally batch-sharded on a 2D ``(stage, data)`` mesh).
+        Returns the feature stream; apply ``head_fn`` after re-flattening
+        for logits."""
+        from repro.core.dhm.engine import run_pipelined
 
-        if cfg is None:
-            cfg = PipelineConfig(self.n_stages, microbatches.shape[0])
-        stage_fn, stacked = self.pipeline_stage_fn()
-        return pipeline_forward(
-            stage_fn, stacked, microbatches, mesh=mesh, cfg=cfg
+        return run_pipelined(
+            self, microbatches, mesh=mesh, cfg=cfg, data_axis=data_axis
         )
 
 
@@ -547,9 +529,16 @@ def compile_dhm(
 
     conv_params = _bake_conv_params(params["conv"], quant)
     stages = []
+    h, w = topo.input_shape
+    c = topo.input_channels
     for s in range(n_stages):
         idxs = tuple(assignment.layers_of_stage(s))
         specs = tuple(topo.conv_layers[i] for i in idxs)
+        in_shape = (h, w, c)
+        for spec in specs:
+            h, w = spec.out_hw(h, w)
+            c = spec.n_out
+        io = StageIOSpec(in_shape=in_shape, out_shape=(h, w, c))
         groups = plan_fusion_groups(topo, idxs, vmem_budget=resolved_budget)
         local_groups = tuple(
             (tuple(li - idxs[0] for li in g.layers), g.block_rows)
@@ -572,6 +561,7 @@ def compile_dhm(
                 ),
                 cost_flops=assignment.stage_costs[s],
                 groups=groups,
+                io=io,
             )
         )
 

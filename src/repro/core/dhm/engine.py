@@ -1,0 +1,351 @@
+"""Execution + serving subsystem for compiled DHM plans.
+
+``compiler.py`` is the *lowering* pass (topology -> DPN -> stages -> fused
+kernel closures); this module is where compiled plans *execute*:
+
+- :func:`forward` — the eager stage/head composition (``cnn_apply``'s
+  path: a fresh per-call plan must not retrace a per-plan jit, so eval
+  loops keep the process-wide kernel caches).
+- :func:`plan_jitted_forward` — the plan's cached end-to-end jitted
+  closure (conv stages + FC head as ONE compiled computation); the
+  ``donate=True`` variant transfers input-buffer ownership to XLA for
+  serving loops.
+- :func:`pipeline_spec` / :func:`run_pipelined` — spatial execution on a
+  mesh: per-stage closures + per-edge :class:`StageIOSpec` geometry feed
+  the heterogeneous GPipe executor (``pipeline.pipeline_forward``), with
+  optional data-parallel batch sharding on a 2D ``(stage, data)`` mesh.
+- :class:`Engine` — the serving front end every consumer routes through:
+  a micro-batch request queue, double-buffered donated jitted closures,
+  warmup, and per-request latency / engine throughput stats. Runs either
+  single-device (sequential fused stages) or pipelined on a mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Plan execution (extracted from compiler.py — the compiler lowers, the
+# engine runs).
+
+
+def forward(plan, x: jax.Array) -> jax.Array:
+    """Eager single-device forward: sequential fused stages + FC head.
+    x: (B, H, W, C) NHWC -> logits (B, n_classes)."""
+    return plan.head_fn(plan.features(x))
+
+
+def plan_jitted_forward(plan, *, donate: bool = False) -> Callable:
+    """The plan's cached end-to-end jitted closure (conv stages + FC head
+    as ONE compiled computation — no per-stage Python re-entry, no eager
+    head ops). Built once per plan and reused across calls, so repeated
+    inference never retraces.
+
+    ``donate=True`` returns a variant that donates the input buffer to the
+    computation (XLA may reuse its memory for intermediates) — for serving
+    loops that hand off ownership; the caller's array is invalidated, so
+    the default keeps the input alive.
+    """
+    cache = getattr(plan, "_fwd_cache", None)
+    if cache is None:
+        cache = {}
+        object.__setattr__(plan, "_fwd_cache", cache)
+    if donate not in cache:
+        cache[donate] = jax.jit(
+            lambda xb: plan.head_fn(plan.features(xb)),
+            donate_argnums=(0,) if donate else (),
+        )
+    return cache[donate]
+
+
+def pipeline_spec(plan):
+    """The heterogeneous pipeline description of a compiled plan: per-stage
+    closures, per-stage params, and the per-edge activation geometry
+    (:class:`~repro.core.dhm.pipeline.StageIOSpec` per stage, computed by
+    the compiler from the topology)."""
+    return (
+        [st.fn for st in plan.stages],
+        [plan.stage_params(s) for s in range(plan.n_stages)],
+        tuple(st.io for st in plan.stages),
+    )
+
+
+def build_plan_pipeline(plan, *, mesh, cfg, microbatch=None):
+    """Build the plan's spatial-pipeline runner once (params boxed,
+    stacked and made resident per stage device group) — the repeated-
+    serving path the ``Engine`` jits with the leaves passed as
+    arguments."""
+    from repro.core.dhm.pipeline import build_pipeline
+
+    stage_fns, stage_params, io_specs = pipeline_spec(plan)
+    return build_pipeline(
+        stage_fns, stage_params, mesh=mesh, cfg=cfg, io_specs=io_specs,
+        microbatch=microbatch,
+    )
+
+
+def run_pipelined(plan, microbatches, *, mesh, cfg=None, data_axis=None):
+    """Stream (M, mb, H, W, C) µbatches through the plan's conv stages on
+    a mesh (one device group per stage; heterogeneous stage shapes flow
+    through boxed ICI buffers). Returns the feature stream; apply
+    ``plan.head_fn`` after re-flattening for logits."""
+    from repro.core.dhm.pipeline import PipelineConfig
+
+    if cfg is None:
+        cfg = PipelineConfig(
+            plan.n_stages, microbatches.shape[0], data_axis=data_axis
+        )
+    runner = build_plan_pipeline(
+        plan, mesh=mesh, cfg=cfg, microbatch=microbatches.shape[1]
+    )
+    return runner(microbatches)
+
+
+# ---------------------------------------------------------------------------
+# The serving engine.
+
+
+@dataclasses.dataclass
+class Request:
+    """One submitted inference request (a batch of frames)."""
+
+    index: int
+    n_frames: int
+    submitted_at: float
+    _engine: "Engine"
+    _result: Optional[jax.Array] = None
+    done_at: Optional[float] = None
+
+    @property
+    def done(self) -> bool:
+        return self._result is not None
+
+    @property
+    def latency_s(self) -> float:
+        if self.done_at is None:
+            raise RuntimeError("request not finished; call result() first")
+        return self.done_at - self.submitted_at
+
+    def result(self) -> jax.Array:
+        """Logits for this request's frames (flushes the queue if the
+        request has not been scheduled yet)."""
+        if self._result is None:
+            self._engine.flush()
+        if self._result is None:
+            raise RuntimeError(
+                f"request {self.index} was not completed by flush() — it "
+                "was likely dropped by an earlier flush failure; resubmit"
+            )
+        return self._result
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineStats:
+    """Aggregate serving statistics since engine construction."""
+
+    n_requests: int
+    n_frames: int
+    n_batches: int  # jitted-closure invocations (incl. padding batches)
+    busy_s: float  # wall time spent inside flush()
+    mean_latency_s: float
+    max_latency_s: float
+
+    @property
+    def frames_per_s(self) -> float:
+        return self.n_frames / self.busy_s if self.busy_s > 0 else 0.0
+
+    def summary(self) -> str:
+        return (
+            f"{self.n_requests} requests / {self.n_frames} frames in "
+            f"{self.n_batches} micro-batches: {self.frames_per_s:.0f} "
+            f"frames/s, latency mean {self.mean_latency_s * 1e3:.2f} ms "
+            f"max {self.max_latency_s * 1e3:.2f} ms"
+        )
+
+
+class Engine:
+    """Micro-batched serving engine around a :class:`CompiledDHM` plan.
+
+    Requests (frames or frame batches) enter a queue via :meth:`submit`;
+    :meth:`flush` packs the queue into fixed-size micro-batches (tail
+    padded with zero frames, outputs sliced back per request) and runs
+    them through the plan's **donated** jitted closure. Two staging slots
+    alternate per micro-batch (double buffering): slot k+1 is staged while
+    slot k's computation is still in flight under JAX's async dispatch,
+    and donation lets XLA reuse each staged buffer for intermediates.
+
+    With ``mesh`` set, micro-batches are grouped ``n_microbatches`` at a
+    time and streamed through the spatial pipeline
+    (:func:`run_pipelined` — heterogeneous stages over boxed ICI edges,
+    optional ``data_axis`` batch sharding), then through the FC head, as
+    one jitted closure.
+    """
+
+    def __init__(
+        self,
+        plan,
+        *,
+        microbatch: int = 8,
+        mesh=None,
+        n_microbatches: int = 4,
+        data_axis: Optional[str] = None,
+        stage_axis: str = "stage",
+        donate: bool = True,
+        warmup: bool = True,
+    ):
+        if microbatch < 1:
+            raise ValueError(f"microbatch must be >= 1, got {microbatch}")
+        self.plan = plan
+        self.microbatch = microbatch
+        self.mesh = mesh
+        self.n_microbatches = n_microbatches
+        self.donate = donate
+        h, w = plan.topo.input_shape
+        self._frame_shape = (h, w, plan.topo.input_channels)
+        self._queue: list = []
+        self._requests = 0
+        self._frames = 0
+        self._batches = 0
+        self._busy_s = 0.0
+        # Running latency aggregates (a serving engine lives long — no
+        # per-request history kept).
+        self._lat_n = 0
+        self._lat_sum = 0.0
+        self._lat_max = 0.0
+
+        if mesh is None:
+            self._fwd = plan_jitted_forward(plan, donate=donate)
+        else:
+            from repro.core.dhm.pipeline import PipelineConfig
+
+            if n_microbatches < 1:
+                raise ValueError(
+                    f"n_microbatches must be >= 1, got {n_microbatches}"
+                )
+            cfg = PipelineConfig(
+                plan.n_stages, n_microbatches, stage_axis=stage_axis,
+                data_axis=data_axis,
+            )
+            # Box + stack + make the per-stage params resident ONCE, here
+            # (eagerly — stacking inside the jit trace would hand
+            # shard_map a mis-partitioned operand on 2D meshes); the
+            # jitted closure then takes the resident leaves as arguments.
+            runner = build_plan_pipeline(
+                plan, mesh=mesh, cfg=cfg, microbatch=microbatch
+            )
+            self._runner = runner
+
+            def _pipe_fwd(leaves, frames):
+                mbs = frames.reshape(
+                    (n_microbatches, microbatch) + frames.shape[1:]
+                )
+                feats = runner.apply(leaves, mbs)
+                flat = feats.reshape(
+                    (n_microbatches * microbatch,) + feats.shape[2:]
+                )
+                return plan.head_fn(flat)
+
+            pipe_jit = jax.jit(
+                _pipe_fwd, donate_argnums=(1,) if donate else ()
+            )
+            self._fwd = lambda frames: pipe_jit(runner.stacked_leaves, frames)
+        # Frames one jitted-closure invocation consumes.
+        self.group = (
+            microbatch if mesh is None else microbatch * n_microbatches
+        )
+        if warmup:
+            self._fwd(self._stage(jnp.zeros((self.group,) + self._frame_shape)))
+
+    # -- request queue -----------------------------------------------------
+
+    def submit(self, x: jax.Array) -> Request:
+        """Enqueue a frame ((H, W, C)) or batch of frames ((B, H, W, C));
+        returns a :class:`Request` whose ``result()`` yields its logits."""
+        x = jnp.asarray(x)
+        if x.shape == self._frame_shape:
+            x = x[None]
+        if x.ndim != 4 or tuple(x.shape[1:]) != self._frame_shape:
+            raise ValueError(
+                f"expected frames of shape {self._frame_shape} (optionally "
+                f"batched), got {tuple(x.shape)}"
+            )
+        req = Request(
+            index=self._requests,
+            n_frames=x.shape[0],
+            submitted_at=time.perf_counter(),
+            _engine=self,
+        )
+        self._requests += 1
+        self._queue.append((req, x))
+        return req
+
+    def _stage(self, batch: jax.Array) -> jax.Array:
+        """Stage a packed micro-batch into a fresh buffer the closure can
+        consume. The copy is what makes donation safe (the caller's arrays
+        stay valid); because the closure is dispatched asynchronously, the
+        flush loop stages batch k+1 while batch k's donated buffer is
+        still being computed on — the double-buffered serving path."""
+        return jnp.array(batch, copy=True)
+
+    def flush(self) -> None:
+        """Drain the queue: pack pending frames into ``group``-sized
+        micro-batches (zero-padded tail), run each through the donated
+        closure, and scatter the logits back to their requests."""
+        if not self._queue:
+            return
+        t0 = time.perf_counter()
+        pending, self._queue = self._queue, []
+        try:
+            frames = jnp.concatenate([x for _, x in pending], axis=0)
+            n = frames.shape[0]
+            pad = -n % self.group
+            if pad:
+                frames = jnp.concatenate(
+                    [frames,
+                     jnp.zeros((pad,) + self._frame_shape, frames.dtype)]
+                )
+            outs = []
+            for start in range(0, frames.shape[0], self.group):
+                staged = self._stage(frames[start : start + self.group])
+                outs.append(self._fwd(staged))
+                self._batches += 1
+            logits = jnp.concatenate(outs, axis=0)[:n]
+            logits.block_until_ready()
+        except Exception:
+            # Put the batch back so the requests are not silently lost;
+            # a retry flush (or result()) sees them again.
+            self._queue = pending + self._queue
+            raise
+        done = time.perf_counter()
+        off = 0
+        for req, _ in pending:
+            req._result = logits[off : off + req.n_frames]
+            req.done_at = done
+            off += req.n_frames
+            lat = req.done_at - req.submitted_at
+            self._lat_n += 1
+            self._lat_sum += lat
+            self._lat_max = max(self._lat_max, lat)
+        self._frames += n
+        self._busy_s += done - t0
+
+    def infer(self, x: jax.Array) -> jax.Array:
+        """Convenience: submit + flush + result."""
+        req = self.submit(x)
+        self.flush()
+        return req.result()
+
+    def stats(self) -> EngineStats:
+        return EngineStats(
+            n_requests=self._requests,
+            n_frames=self._frames,
+            n_batches=self._batches,
+            busy_s=self._busy_s,
+            mean_latency_s=self._lat_sum / self._lat_n if self._lat_n else 0.0,
+            max_latency_s=self._lat_max,
+        )

@@ -1,35 +1,44 @@
 """Streaming pipelined executor: the TPU incarnation of DHM's "all actors
-always firing" model.
+always firing" model, for *heterogeneous* stage geometries.
 
 Stages are assigned to disjoint device groups along a mesh axis
 (``stage``). Each device group keeps its stage's parameters resident
 (private resources, as in DHM) and processes a stream of µbatches; the
 activation stream flows stage -> stage+1 over ICI via
-``jax.lax.ppermute`` — the edge of the dataflow graph become a physical
+``jax.lax.ppermute`` — the edge of the dataflow graph becomes a physical
 link, never touching host or "external" memory.
 
-Schedule: GPipe fill/steady/drain. For M µbatches and S stages the loop runs
-T = M + S - 1 ticks; at tick t stage s processes µbatch (t - s) when
+Schedule: GPipe fill/steady/drain. For M µbatches and S stages the loop
+runs T = M + S - 1 ticks; at tick t stage s processes µbatch (t - s) when
 0 <= t - s < M. All stages fire every tick (fill/drain ticks process
 garbage that is masked out) — matching the paper's fully-pipelined,
 always-firing actors.
 
-The stage body must be shape-homogeneous (same activation shape in/out),
-which holds for transformer stacks and for the CNN topologies once grouped
-into stages by the mapper. ``make_conv_stage`` builds such a body from the
-fused streaming-conv kernel (conv+bias+act in one kernel call), so each
-pipeline stage is itself a fused DHM actor chain. Stage bodies emitted by
-the compiler (``emit_conv_stage``) may additionally fuse a stage's layer
-run into cross-layer pyramid groups under the VMEM budget — the stage
-then executes as one (or a few) ``stream_conv_pyramid`` kernel calls
-instead of one call per layer, and only stage boundaries remain
-activation-streaming edges over ICI.
+Real CNN topologies pool/stride down and grow channels between stages, so
+stage bodies are NOT shape-homogeneous. The executor therefore runs on
+**boxed** buffers: every per-edge activation shape (a :class:`StageIOSpec`
+per stage, emitted by the compiler which knows the full geometry) is
+embedded in one max-shape box; a stage slices its true input shape out of
+the box, computes on exact shapes, and zero-pads its output back into the
+box before the ``ppermute``. Since each device executes one stage, the
+per-stage bodies are selected with ``lax.switch`` on the device's stage
+index — one SPMD program, S different actor chains. Parameters are boxed
+the same way (leaf-wise pad-to-max, stacked on a leading stage axis) so
+each device group holds exactly its own stage's weights.
+
+A 2D ``(stage, data)`` mesh composes data-parallel batch sharding with the
+spatial pipeline: the µbatch dimension is sharded along ``data_axis`` and
+each data column runs an independent pipeline over its batch shard.
+
+Stage bodies emitted by the compiler (``emit_conv_stage``) fuse a stage's
+layer run into cross-layer pyramid groups under the VMEM budget — the
+stage then executes as one (or a few) ``stream_conv_pyramid`` kernel calls
+and only stage boundaries remain activation-streaming edges over ICI.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Callable
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -37,55 +46,288 @@ from jax.sharding import PartitionSpec as P
 
 
 @dataclasses.dataclass(frozen=True)
+class StageIOSpec:
+    """Static activation geometry of one pipeline stage: the per-µbatch
+    element shape entering and leaving the stage (without the µbatch
+    dimension — e.g. ``(H, W, C)`` for conv stages). Consecutive stages
+    must chain: ``io[s].out_shape == io[s + 1].in_shape``."""
+
+    in_shape: tuple
+    out_shape: tuple
+
+    def __post_init__(self):
+        for name in ("in_shape", "out_shape"):
+            shp = getattr(self, name)
+            if not all(isinstance(d, int) and d >= 1 for d in shp):
+                raise ValueError(
+                    f"StageIOSpec.{name} must be positive ints, got {shp!r}"
+                )
+
+
+@dataclasses.dataclass(frozen=True)
 class PipelineConfig:
     n_stages: int
     n_microbatches: int
     stage_axis: str = "stage"
+    data_axis: Optional[str] = None  # optional batch-sharding mesh axis
 
     def __post_init__(self):
         if self.n_microbatches < 1 or self.n_stages < 1:
             raise ValueError("n_stages and n_microbatches must be >= 1")
+        if self.data_axis is not None and self.data_axis == self.stage_axis:
+            raise ValueError("data_axis must differ from stage_axis")
 
 
-def pipeline_forward(
-    stage_fn: Callable,
-    stage_params,
-    microbatches: jax.Array,
+# ---------------------------------------------------------------------------
+# Boxing: embed heterogeneous shapes in one max-shape buffer.
+
+
+def _aligned(shape: tuple, rank: int) -> tuple:
+    """Rank-align a shape by prepending singleton dims."""
+    return (1,) * (rank - len(shape)) + tuple(shape)
+
+
+def _box_of(shapes: Sequence[tuple]) -> tuple:
+    """The elementwise-max box that embeds every (rank-aligned) shape."""
+    rank = max(len(s) for s in shapes)
+    return tuple(max(dims) for dims in zip(*(_aligned(s, rank) for s in shapes)))
+
+
+def _fit(a: jax.Array, box: tuple) -> jax.Array:
+    """Zero-pad ``a`` (rank-aligned) into the box shape."""
+    a = a.reshape(_aligned(a.shape, len(box)))
+    return jnp.pad(a, [(0, b - d) for d, b in zip(a.shape, box)])
+
+
+def _unfit(a_box: jax.Array, shape: tuple) -> jax.Array:
+    """Slice the true ``shape`` back out of a boxed array (inverse of
+    :func:`_fit` — exact, no numerics touched)."""
+    idx = tuple(slice(0, d) for d in _aligned(shape, a_box.ndim))
+    return a_box[idx].reshape(shape)
+
+
+def _box_stage_params(per_stage_params: Sequence):
+    """Box heterogeneous per-stage param pytrees into stackable leaves.
+
+    Returns ``(stacked, meta)`` where ``stacked`` is a list of
+    ``(S, *box)`` arrays (leaf slot i of every stage, padded to the slot's
+    max shape; stages with fewer leaves contribute zeros) and ``meta``
+    carries the static per-stage treedefs / leaf shapes / dtypes needed to
+    reconstruct each stage's exact params inside its branch.
+    """
+    flat = [jax.tree_util.tree_flatten(p) for p in per_stage_params]
+    leaves = [[jnp.asarray(x) for x in l] for l, _ in flat]
+    treedefs = [td for _, td in flat]
+    n_slots = max(len(l) for l in leaves)
+    boxes, box_dtypes = [], []
+    for i in range(n_slots):
+        slot = [l[i] for l in leaves if len(l) > i]
+        boxes.append(_box_of([x.shape for x in slot]))
+        box_dtypes.append(jnp.result_type(*[x.dtype for x in slot]))
+    stacked = []
+    for i in range(n_slots):
+        stacked.append(
+            jnp.stack(
+                [
+                    _fit(l[i].astype(box_dtypes[i]), boxes[i])
+                    if len(l) > i
+                    else jnp.zeros(boxes[i], box_dtypes[i])
+                    for l in leaves
+                ]
+            )
+        )
+    meta = {
+        "treedefs": treedefs,
+        "shapes": [[x.shape for x in l] for l in leaves],
+        "dtypes": [[x.dtype for x in l] for l in leaves],
+    }
+    return stacked, meta
+
+
+def derive_io_specs(
+    stage_fns: Sequence[Callable], per_stage_params: Sequence, in_shape: tuple
+) -> tuple:
+    """Chain ``jax.eval_shape`` through the stage bodies to recover every
+    boundary's activation geometry (used when the caller has no compiler
+    plan to emit :class:`StageIOSpec` from)."""
+    specs = []
+    shape = tuple(in_shape)
+    for fn, params in zip(stage_fns, per_stage_params):
+        out = jax.eval_shape(
+            fn, params, jax.ShapeDtypeStruct((1,) + shape, jnp.float32)
+        )
+        specs.append(StageIOSpec(in_shape=shape, out_shape=tuple(out.shape[1:])))
+        shape = tuple(out.shape[1:])
+    return tuple(specs)
+
+
+def _validate_io_chain(io_specs: Sequence[StageIOSpec]):
+    for s in range(len(io_specs) - 1):
+        if tuple(io_specs[s].out_shape) != tuple(io_specs[s + 1].in_shape):
+            raise ValueError(
+                f"stage {s} output {tuple(io_specs[s].out_shape)} does not "
+                f"chain into stage {s + 1} input "
+                f"{tuple(io_specs[s + 1].in_shape)}"
+            )
+
+
+# ---------------------------------------------------------------------------
+# The executor.
+
+
+def _shard_map(fn, mesh, in_specs, out_specs):
+    # jax.shard_map only exists on newer jax; fall back to the experimental
+    # home (same API modulo the check_rep/check_vma rename).
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(
+        fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=False,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelinedRunner:
+    """A built spatial pipeline: the shard_map'd GPipe executor plus the
+    boxed per-stage parameter leaves, stacked ONCE at build time (eagerly
+    — never inside an enclosing ``jit`` trace, where a 2D-mesh shard_map
+    operand produced by a traced ``stack`` is mis-partitioned on
+    jax 0.4.37) and laid out so each stage's device group holds exactly
+    its own weights (DHM's private resources).
+
+    ``runner(microbatches)`` runs the resident leaves; ``runner.apply``
+    is the pure ``(leaves, microbatches) -> outputs`` function for
+    composing under ``jit`` with the leaves passed as arguments (the
+    serving ``Engine``'s path).
+    """
+
+    cfg: PipelineConfig
+    io_specs: tuple
+    stacked_leaves: list  # (S, *box) per leaf slot, sharded P(stage_axis)
+    _apply: Callable
+
+    def apply(self, leaves, microbatches: jax.Array) -> jax.Array:
+        """Pure executor: (stacked leaves, (M, mb, *elem) µbatches) ->
+        (M, mb, *out_elem) final-stage outputs."""
+        return self._apply(leaves, microbatches)
+
+    def __call__(self, microbatches: jax.Array) -> jax.Array:
+        return self._apply(self.stacked_leaves, microbatches)
+
+
+def build_pipeline(
+    stage_fns: Sequence[Callable],
+    stage_params: Sequence,
     *,
     mesh: jax.sharding.Mesh,
     cfg: PipelineConfig,
-):
-    """Run the µbatch stream through the spatial pipeline.
+    io_specs: Optional[Sequence[StageIOSpec]] = None,
+    microbatch: Optional[int] = None,
+    dtype=jnp.float32,
+) -> PipelinedRunner:
+    """Build the heterogeneous spatial pipeline once: validate the edge
+    geometry, box + stack the per-stage params (eagerly), and close the
+    shard_map'd fill/steady/drain executor over the static metadata.
 
     Args:
-      stage_fn: (params_for_one_stage, x) -> y with y.shape == x.shape.
-      stage_params: pytree whose leaves are stacked on a leading axis of
-        size ``n_stages``; sharded so stage s's slice lives on stage-s
-        devices.
-      microbatches: (M, mb, ...) stacked µbatch inputs.
-      mesh: mesh containing ``cfg.stage_axis``.
-
-    Returns:
-      (M, mb, ...) outputs of the final stage.
+      stage_fns: S per-stage callables ``(params_s, x) -> y``; shapes may
+        differ per boundary (pool/stride shrink, channel growth).
+      stage_params: per-stage param pytrees (structure and leaf shapes
+        may differ per stage).
+      mesh: mesh containing ``cfg.stage_axis`` (and ``cfg.data_axis``).
+      io_specs: per-stage :class:`StageIOSpec` (the compiler emits these
+        from the topology's geometry; :func:`derive_io_specs` recovers
+        them from the stage bodies when no plan is at hand). Required.
+      microbatch: µbatch size (for the data-axis divisibility check at
+        build time; otherwise checked at call time).
+      dtype: dtype of the boxed activation stream.
     """
     S, M = cfg.n_stages, cfg.n_microbatches
     ax = cfg.stage_axis
-    if microbatches.shape[0] != M:
-        raise ValueError(
-            f"expected {M} microbatches, got {microbatches.shape[0]}"
-        )
     if mesh.shape[ax] != S:
         raise ValueError(
             f"mesh axis {ax!r} has {mesh.shape[ax]} devices, need {S}"
         )
+    D = 1
+    if cfg.data_axis is not None:
+        D = mesh.shape[cfg.data_axis]
+        if microbatch is not None and microbatch % D:
+            raise ValueError(
+                f"µbatch size {microbatch} not divisible by data axis "
+                f"{cfg.data_axis!r} ({D} devices)"
+            )
+    stage_fns = list(stage_fns)
+    if len(stage_fns) != S:
+        raise ValueError(f"got {len(stage_fns)} stage fns for {S} stages")
+    stage_params = list(stage_params)
+    if len(stage_params) != S:
+        raise ValueError(
+            f"got {len(stage_params)} per-stage param trees for {S} stages"
+        )
 
-    def _per_stage(params, mb_stream):
-        # Inside shard_map: params leaves have leading dim 1 (this stage's
-        # slice); mb_stream is the full (M, mb, ...) stream, replicated.
-        params = jax.tree_util.tree_map(lambda p: p[0], params)
+    if io_specs is None:
+        raise ValueError(
+            "build_pipeline needs io_specs (or use pipeline_forward, which "
+            "derives them from the µbatch stream)"
+        )
+    io_specs = tuple(io_specs)
+    if len(io_specs) != S:
+        raise ValueError(f"got {len(io_specs)} io specs for {S} stages")
+    _validate_io_chain(io_specs)
+
+    # One box embeds every edge shape of the pipeline: stages slice their
+    # true input out, compute on exact shapes, and pad back in.
+    elem_box = _box_of(
+        [io.in_shape for io in io_specs] + [io.out_shape for io in io_specs]
+    )
+    elem_shape = tuple(io_specs[0].in_shape)
+    out_elem = tuple(io_specs[-1].out_shape)
+    box_dtype = dtype
+
+    stacked_leaves, meta = _box_stage_params(stage_params)
+    # Each stage's device group keeps its own (boxed) weights resident.
+    sharding = jax.sharding.NamedSharding(mesh, P(ax))
+    stacked_leaves = [jax.device_put(l, sharding) for l in stacked_leaves]
+
+    def _per_stage(leaves, mb_stream):
+        # Inside shard_map: each boxed leaf has leading dim 1 (this stage's
+        # slice); mb_stream is this data column's (M, mb_local, *elem).
+        local = [l[0] for l in leaves]
+        mb_local = mb_stream.shape[1]
+        box = (mb_local,) + elem_box
         stage_id = jax.lax.axis_index(ax)
-        zero = jnp.zeros_like(mb_stream[0])
-        out_buf = jnp.zeros_like(mb_stream)
+
+        def make_branch(s):
+            shapes_s = meta["shapes"][s]
+            dtypes_s = meta["dtypes"][s]
+
+            def branch(operand):
+                x_box, lv_box = operand
+                lv = [
+                    _unfit(lv_box[i], shapes_s[i]).astype(dtypes_s[i])
+                    for i in range(len(shapes_s))
+                ]
+                params = jax.tree_util.tree_unflatten(meta["treedefs"][s], lv)
+                x = _unfit(x_box, (mb_local,) + tuple(io_specs[s].in_shape))
+                y = stage_fns[s](params, x)
+                want = (mb_local,) + tuple(io_specs[s].out_shape)
+                if tuple(y.shape) != want:
+                    raise ValueError(
+                        f"stage {s} produced {tuple(y.shape)}, but its "
+                        f"StageIOSpec promises {want}"
+                    )
+                return _fit(y.astype(box_dtype), box)
+
+            return branch
+
+        branches = [make_branch(s) for s in range(S)]
+        zero = jnp.zeros(box, box_dtype)
+        out_buf = jnp.zeros((M,) + box, box_dtype)
 
         def tick(carry, t):
             buf, out_buf = carry
@@ -94,26 +336,29 @@ def pipeline_forward(
             x0 = jax.lax.dynamic_index_in_dim(
                 mb_stream, inject, axis=0, keepdims=False
             )
-            x = jnp.where(stage_id == 0, x0, buf)
-            y = stage_fn(params, x)
+            x = jnp.where(stage_id == 0, _fit(x0.astype(box_dtype), box), buf)
+            y = jax.lax.switch(stage_id, branches, (x, local))
             # µbatch index this stage just processed; valid window check.
             mb_idx = t - stage_id
             valid_out = jnp.logical_and(
                 stage_id == S - 1,
                 jnp.logical_and(mb_idx >= 0, mb_idx < M),
             )
+            slot = jnp.clip(mb_idx, 0, M - 1)
             out_buf = jax.lax.dynamic_update_index_in_dim(
                 out_buf,
-                jnp.where(valid_out, y, jax.lax.dynamic_index_in_dim(
-                    out_buf, jnp.clip(mb_idx, 0, M - 1), axis=0, keepdims=False
-                )),
-                jnp.clip(mb_idx, 0, M - 1),
+                jnp.where(
+                    valid_out,
+                    y,
+                    jax.lax.dynamic_index_in_dim(
+                        out_buf, slot, axis=0, keepdims=False
+                    ),
+                ),
+                slot,
                 axis=0,
             )
             # Stream the activation to the next stage (edge = physical link).
-            nxt = jax.lax.ppermute(
-                y, ax, [(i, i + 1) for i in range(S - 1)]
-            )
+            nxt = jax.lax.ppermute(y, ax, [(i, i + 1) for i in range(S - 1)])
             return (nxt, out_buf), None
 
         (_, out_buf), _ = jax.lax.scan(
@@ -122,36 +367,107 @@ def pipeline_forward(
         # Leading singleton stage axis so out_specs can shard it.
         return out_buf[None]
 
+    dax = cfg.data_axis
     in_specs = (
-        jax.tree_util.tree_map(lambda _: P(ax), stage_params),
-        P(),  # µbatch stream replicated (only stage 0 reads it)
+        [P(ax) for _ in stacked_leaves],
+        P(None, dax) if dax else P(),  # µbatch stream (only stage 0 reads it)
     )
-    # jax.shard_map only exists on newer jax; fall back to the experimental
-    # home (same API modulo the check_rep/check_vma rename).
-    if hasattr(jax, "shard_map"):
-        shmap = jax.shard_map(
-            _per_stage,
-            mesh=mesh,
-            in_specs=in_specs,
-            out_specs=P(ax),
-            check_vma=False,
-        )
-    else:
-        from jax.experimental.shard_map import shard_map as _shard_map
+    out_specs = P(ax, None, dax) if dax else P(ax)
+    shmap = _shard_map(_per_stage, mesh, in_specs, out_specs)
 
-        shmap = _shard_map(
-            _per_stage,
-            mesh=mesh,
-            in_specs=in_specs,
-            out_specs=P(ax),
-            check_rep=False,
+    def _apply(leaves, microbatches):
+        if microbatches.shape[0] != M:
+            raise ValueError(
+                f"expected {M} microbatches, got {microbatches.shape[0]}"
+            )
+        if tuple(microbatches.shape[2:]) != elem_shape:
+            raise ValueError(
+                f"µbatch element shape {tuple(microbatches.shape[2:])} does "
+                f"not match stage 0 input {elem_shape}"
+            )
+        mb = microbatches.shape[1]
+        if mb % D:
+            raise ValueError(
+                f"µbatch size {mb} not divisible by data axis "
+                f"{cfg.data_axis!r} ({D} devices)"
+            )
+        stacked = shmap(leaves, microbatches)  # (S, M, mb, *elem_box)
+        final = stacked[-1]  # only stage S-1 wrote valid outputs
+        # Slice the true final-edge shape back out of the box (exact).
+        idx = (slice(None), slice(None)) + tuple(
+            slice(0, d) for d in _aligned(out_elem, len(elem_box))
         )
-    stacked = shmap(stage_params, microbatches)  # (S, M, mb, ...)
-    return stacked[-1]
+        return final[idx].reshape((M, mb) + out_elem)
+
+    return PipelinedRunner(
+        cfg=cfg, io_specs=io_specs, stacked_leaves=stacked_leaves,
+        _apply=_apply,
+    )
+
+
+def pipeline_forward(
+    stage_fn,
+    stage_params,
+    microbatches: jax.Array,
+    *,
+    mesh: jax.sharding.Mesh,
+    cfg: PipelineConfig,
+    io_specs: Optional[Sequence[StageIOSpec]] = None,
+):
+    """Run the µbatch stream through the spatial pipeline (one-shot sugar
+    over :func:`build_pipeline` — for repeated serving build the runner
+    once, or use the ``Engine``).
+
+    Args:
+      stage_fn: either a sequence of S per-stage callables
+        ``(params_s, x) -> y`` (heterogeneous stages — shapes may differ
+        per boundary), or a single callable shared by every stage (the
+        homogeneous sugar).
+      stage_params: a list of per-stage param pytrees (one per stage; the
+        pytrees may differ in structure and leaf shapes). With a single
+        shared ``stage_fn``, a pytree whose leaves are stacked on a
+        leading axis of size ``n_stages`` is also accepted.
+      microbatches: (M, mb, *elem) stacked µbatch inputs. With
+        ``cfg.data_axis`` set, the ``mb`` dimension is sharded along that
+        mesh axis (each data column pipelines its own batch shard).
+      mesh: mesh containing ``cfg.stage_axis`` (and ``cfg.data_axis``).
+      io_specs: per-stage :class:`StageIOSpec` (the compiler emits these
+        from the topology's geometry); derived via ``jax.eval_shape``
+        chaining when omitted.
+
+    Returns:
+      (M, mb, *out_elem) outputs of the final stage.
+    """
+    S = cfg.n_stages
+    if callable(stage_fn):
+        stage_fns = [stage_fn] * S
+        if not isinstance(stage_params, (list, tuple)):
+            # Homogeneous sugar: leaves stacked on a leading stage axis.
+            stage_params = [
+                jax.tree_util.tree_map(lambda l, s=s: l[s], stage_params)
+                for s in range(S)
+            ]
+    else:
+        stage_fns = list(stage_fn)
+    if io_specs is None:
+        io_specs = derive_io_specs(
+            stage_fns, stage_params, tuple(microbatches.shape[2:])
+        )
+    runner = build_pipeline(
+        stage_fns,
+        stage_params,
+        mesh=mesh,
+        cfg=cfg,
+        io_specs=io_specs,
+        microbatch=microbatches.shape[1],
+        dtype=microbatches.dtype,
+    )
+    return runner(microbatches)
 
 
 def stack_stage_params(per_stage_params: list):
-    """Stack a list of per-stage param pytrees along a new leading axis."""
+    """Stack a list of per-stage param pytrees along a new leading axis
+    (homogeneous-stage sugar for :func:`pipeline_forward`)."""
     return jax.tree_util.tree_map(
         lambda *xs: jnp.stack(xs, axis=0), *per_stage_params
     )
@@ -166,24 +482,32 @@ def make_conv_stage(
     stride: int = 1,
     act_bits: int | None = None,
     backend: str | None = None,
+    n_out: int = 0,
+    kernel: int = 0,
 ):
     """Build a single-layer pipeline stage body — a compiler-emitted DHM
     actor chain (conv -> bias -> activation (-> pool -> stream quant)) as
     one fused kernel call on ``params = {"w": (K, K, C, N), "b": (N,)}``.
 
-    Thin veneer over :func:`repro.core.dhm.compiler.emit_conv_stage`, so
-    the pipeline stage bodies and the single-device plans share ONE
-    lowering path (act/pool/padding/stride are validated at build time
-    there). With SAME padding, ``stride=1``, ``pool=0`` and C == N the
-    stage is shape-homogeneous, which is what ``pipeline_forward``
-    requires.
+    Thin veneer over :func:`repro.core.dhm.compiler.emit_conv_stage`: the
+    layer description goes through the same validated ``ConvLayerSpec``
+    dataclass as ``compile_dhm`` topologies, so the pipeline stage bodies
+    and the single-device plans share ONE lowering path (act / pool /
+    padding / stride are validated at build time there). ``n_out`` and
+    ``kernel`` describe the expected parameter geometry; they default to 0
+    ("any") because the emitted stage body takes its shapes from the
+    params at call time.
     """
-    import types
-
     from repro.core.dhm.compiler import emit_conv_stage
+    from repro.models.cnn import ConvLayerSpec
 
-    spec = types.SimpleNamespace(
-        padding=padding, act=act, pool=pool, pool_stride=pool_stride,
+    spec = ConvLayerSpec(
+        n_out=n_out,
+        kernel=kernel,
+        padding=padding,
+        pool=pool,
+        act=act,
         stride=stride,
+        pool_stride=pool_stride,
     )
     return emit_conv_stage((spec,), backend=backend, act_bits=act_bits)

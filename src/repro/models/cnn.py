@@ -326,6 +326,7 @@ def cnn_apply(
     extractor into one kernel group; 0 = per-layer stages).
     """
     from repro.core.dhm.compiler import QuantSpec, compile_dhm
+    from repro.core.dhm.engine import forward as engine_forward
 
     plan = compile_dhm(
         topo,
@@ -338,11 +339,11 @@ def cnn_apply(
         backend=conv_backend if conv_backend is not None else "ref",
         vmem_budget=vmem_budget,
     )
-    # Run the stage/head closures directly rather than plan.__call__:
+    # Run through the engine's EAGER path rather than plan.__call__:
     # eager model-level calls build a fresh plan per invocation, so the
     # plan-level cached jit would retrace every call — the stage bodies
     # are module-level jitted kernels with process-wide caches instead.
-    return plan.head_fn(plan.features(x))
+    return engine_forward(plan, x)
 
 
 def cnn_apply_reference(

@@ -111,19 +111,48 @@ def pack_linear_pow2(p: dict) -> dict:
     Odd output widths are packed with a zero pad column (zero codes decode
     to 0.0); the stored scale keeps the true width so ``linear`` can slice
     the decoded weights back.
+
+    Stacked (scan-layer) weights of shape ``(*lead, K, N)`` are packed
+    per layer via ``vmap`` so every layer keeps its own per-channel
+    scales; the stored scale then has shape ``(*lead, 1, N)`` so a
+    scanned per-layer slice broadcasts as ``(1, N)``.
     """
     from repro.core.quant.packing import pack_codes_u4
     from repro.core.quant.pow2 import pow2_codes
 
     w = p["w"]
-    n = w.shape[1]
+    n = w.shape[-1]
     if n % 2:
-        w = jnp.pad(w, ((0, 0), (0, 1)))
-    codes, scale = pow2_codes(w, channel_axis=1)
-    out = {"codes": pack_codes_u4(codes), "scale": scale.reshape(-1)[:n]}
+        w = jnp.pad(w, [(0, 0)] * (w.ndim - 1) + [(0, 1)])
+    if w.ndim == 2:
+        codes, scale = pow2_codes(w, channel_axis=1)
+        out = {"codes": pack_codes_u4(codes), "scale": scale.reshape(-1)[:n]}
+    else:
+        lead = w.shape[:-2]
+        w2 = w.reshape((-1,) + w.shape[-2:])
+        codes, scale = jax.vmap(lambda wi: pow2_codes(wi, channel_axis=1))(w2)
+        out = {
+            "codes": pack_codes_u4(codes).reshape(
+                lead + (w.shape[-2], w.shape[-1] // 2)
+            ),
+            "scale": scale[..., :n].reshape(lead + (1, n)),
+        }
     if "b" in p:
         out["b"] = p["b"]
     return out
+
+
+def pack_params_pow2(params):
+    """Walk a param pytree and pack every linear (any dict with a >= 2D
+    ``w``) to the pow2 serving format — the whole-stack constant
+    specialization the paper's tactic becomes at serving time."""
+    if isinstance(params, dict):
+        if "w" in params and getattr(params["w"], "ndim", 0) >= 2:
+            return pack_linear_pow2(params)
+        return {k: pack_params_pow2(v) for k, v in params.items()}
+    if isinstance(params, list):
+        return [pack_params_pow2(v) for v in params]
+    return params
 
 
 # ---------------------------------------------------------------------------

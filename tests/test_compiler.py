@@ -502,36 +502,41 @@ class TestStructureCompilerPath:
 PIPELINE_PLAN_SUBPROCESS = r"""
 import jax, jax.numpy as jnp, numpy as np
 from repro.core.dhm.compiler import compile_dhm
-from repro.models.cnn import CNNTopology, ConvLayerSpec, init_cnn
-topo = CNNTopology(
-    name='pipe4', input_hw=8, input_channels=4,
-    conv_layers=tuple(
-        ConvLayerSpec(n_out=4, kernel=3, padding='SAME', pool=0, act='tanh')
-        for _ in range(4)
-    ),
-    fc_dims=(), n_classes=2,
-)
-plan = compile_dhm(topo, init_cnn(jax.random.PRNGKey(0), topo), n_stages=4)
-mesh = jax.make_mesh((4,), ('stage',))
-mbs = jax.random.normal(jax.random.PRNGKey(1), (6, 2, 8, 8, 4))
-out = plan.run_pipelined(mbs, mesh=mesh)
-seq = plan.features(mbs.reshape(-1, 8, 8, 4)).reshape(mbs.shape)
-assert np.allclose(np.asarray(out), np.asarray(seq), atol=1e-5), 'plan mismatch'
+from repro.models.cnn import LENET5, init_cnn
+
+# LeNet5 with 2 stages is genuinely heterogeneous (28x28x1 -> 12x12x20 ->
+# 4x4x50): the old executor refused it; the boxed executor streams it
+# bit-exact vs the single-device plan at the same batch grain.
+plan = compile_dhm(LENET5, init_cnn(jax.random.PRNGKey(0), LENET5), n_stages=2)
+mbs = jax.random.normal(jax.random.PRNGKey(1), (4, 2, 28, 28, 1))
+seq = jnp.stack([plan.features(mbs[i]) for i in range(4)])
+out = plan.run_pipelined(mbs, mesh=jax.make_mesh((2,), ('stage',)))
+assert (np.asarray(out) == np.asarray(seq)).all(), 'stage-mesh plan mismatch'
+# 2D (stage, data) mesh: batch sharding composes with the stage pipeline.
+mesh2 = jax.make_mesh((2, 2), ('stage', 'data'))
+out2 = plan.run_pipelined(mbs, mesh=mesh2, data_axis='data')
+assert np.allclose(np.asarray(out2), np.asarray(seq), atol=1e-5), '2D mismatch'
 print('OK')
 """
 
 
 class TestPipelinedPlan:
-    def test_heterogeneous_stages_refuse_pipelining(self):
+    def test_heterogeneous_stages_emit_pipeline_spec(self):
+        """Heterogeneous stages pipeline now: the plan emits per-stage
+        closures + chaining StageIOSpec geometry instead of raising."""
         params, _ = _mk_inputs(LENET5)
         plan = compile_dhm(LENET5, params, n_stages=2)
-        with pytest.raises(ValueError, match="homogeneous"):
-            plan.pipeline_stage_fn()
+        fns, stage_params, io = plan.pipeline_spec()
+        assert len(fns) == 2 and len(stage_params) == 2
+        assert io[0].in_shape == (28, 28, 1)
+        assert io[0].out_shape == io[1].in_shape == (12, 12, 20)
+        assert io[1].out_shape == (4, 4, 50)
 
     @pytest.mark.slow
     def test_pipelined_plan_matches_single_device_4dev(self):
-        """The compiled staged plan on a 4-device mesh == the same plan run
-        sequentially on one device (subprocess with forced host devices)."""
+        """The compiled heterogeneous staged plan on a forced-host-device
+        mesh == the same plan run sequentially on one device (subprocess
+        with forced host devices)."""
         repo_root = pathlib.Path(__file__).resolve().parents[1]
         res = subprocess.run(
             [sys.executable, "-c", PIPELINE_PLAN_SUBPROCESS],

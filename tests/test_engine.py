@@ -1,0 +1,203 @@
+"""Tests for the serving engine (single-device fast tier): the request
+queue / micro-batching, double-buffered donated closures, warmup, stats,
+and the execution paths extracted from the compiler (eager forward,
+cached jitted forward, pipeline_spec / StageIOSpec emission)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dhm.compiler import QuantSpec, compile_dhm
+from repro.core.dhm.engine import Engine, forward, plan_jitted_forward
+from repro.core.dhm.pipeline import StageIOSpec, derive_io_specs
+from repro.models.cnn import ALL_TOPOLOGIES, LENET5, init_cnn
+
+
+def _plan(name="lenet5", n_stages=1, **quant_kw):
+    topo = ALL_TOPOLOGIES[name]
+    params = init_cnn(jax.random.PRNGKey(0), topo)
+    quant = QuantSpec(**quant_kw) if quant_kw else QuantSpec()
+    return topo, compile_dhm(topo, params, quant=quant, n_stages=n_stages)
+
+
+def _frames(topo, n, seed=1):
+    h, w = topo.input_shape
+    return jax.random.normal(
+        jax.random.PRNGKey(seed), (n, h, w, topo.input_channels)
+    )
+
+
+class TestStageIO:
+    def test_compiled_stages_carry_chaining_io(self):
+        """The compiler emits a StageIOSpec per stage that chains
+        edge-to-edge and ends at the topology's feature shape."""
+        topo, plan = _plan("cifar10", n_stages=3)
+        h, w = topo.input_shape
+        assert plan.stages[0].io.in_shape == (h, w, topo.input_channels)
+        for a, b in zip(plan.stages[:-1], plan.stages[1:]):
+            assert a.io.out_shape == b.io.in_shape
+        assert plan.stages[-1].io.out_shape == topo.feature_shape()
+
+    def test_heterogeneous_stages_have_pipeline_spec(self):
+        """Heterogeneous stages (different specs per stage) now emit a
+        pipeline spec instead of refusing — the old homogeneity
+        restriction is gone."""
+        _, plan = _plan("lenet5", n_stages=2)
+        fns, params, io = plan.pipeline_spec()
+        assert len(fns) == len(params) == len(io) == 2
+        assert io[0].out_shape == io[1].in_shape
+        assert io[0].in_shape != io[1].in_shape  # genuinely heterogeneous
+
+    def test_derive_io_specs_matches_compiler(self):
+        """eval_shape chaining over the emitted stage bodies recovers the
+        same geometry the compiler computed from the topology."""
+        topo, plan = _plan("cifar10_full", n_stages=3)
+        fns, params, io = plan.pipeline_spec()
+        derived = derive_io_specs(fns, params, io[0].in_shape)
+        assert tuple(derived) == tuple(io)
+
+    def test_bad_io_spec_raises(self):
+        with pytest.raises(ValueError, match="positive ints"):
+            StageIOSpec(in_shape=(0, 4, 4), out_shape=(4, 4, 4))
+
+
+class TestEngineQueue:
+    def test_requests_match_plan(self):
+        """Queued requests of uneven sizes are packed into micro-batches
+        (zero-padded tail) and each gets exactly its own logits back."""
+        topo, plan = _plan("lenet5")
+        eng = Engine(plan, microbatch=4)
+        x = _frames(topo, 7)
+        r1, r2, r3 = eng.submit(x[:3]), eng.submit(x[3:6]), eng.submit(x[6])
+        eng.flush()
+        got = jnp.concatenate([r1.result(), r2.result(), r3.result()])
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(plan(x)), rtol=1e-4, atol=1e-5
+        )
+        assert r3.result().shape == (1, topo.n_classes)  # single frame
+
+    def test_result_triggers_flush(self):
+        topo, plan = _plan("lenet5")
+        eng = Engine(plan, microbatch=2)
+        req = eng.submit(_frames(topo, 2))
+        assert not req.done
+        out = req.result()  # implicit flush
+        assert req.done and out.shape == (2, topo.n_classes)
+        assert req.latency_s > 0
+
+    def test_no_retrace_across_flushes(self):
+        """The donated closure is built once; repeated flushes reuse it
+        (the jit cache holds exactly one entry)."""
+        topo, plan = _plan("lenet5")
+        eng = Engine(plan, microbatch=4)
+        for seed in range(3):
+            eng.infer(_frames(topo, 4, seed=seed))
+        assert plan_jitted_forward(plan, donate=True)._cache_size() == 1
+
+    def test_quantized_plan_serves(self):
+        topo, plan = _plan("lenet5", weight_bits=3, act_bits=3)
+        eng = Engine(plan, microbatch=2)
+        x = _frames(topo, 2)
+        np.testing.assert_allclose(
+            np.asarray(eng.infer(x)), np.asarray(plan(x)),
+            rtol=1e-4, atol=1e-5,
+        )
+
+    def test_stats(self):
+        topo, plan = _plan("lenet5")
+        eng = Engine(plan, microbatch=4)
+        eng.infer(_frames(topo, 6))
+        st = eng.stats()
+        assert st.n_requests == 1
+        assert st.n_frames == 6
+        assert st.n_batches == 2  # 6 frames -> two 4-frame µbatches
+        assert st.frames_per_s > 0
+        assert st.max_latency_s >= st.mean_latency_s > 0
+        assert "frames/s" in st.summary()
+
+    def test_flush_empty_queue_is_noop(self):
+        _, plan = _plan("lenet5")
+        eng = Engine(plan, microbatch=2)
+        eng.flush()
+        assert eng.stats().n_frames == 0
+
+    def test_bad_frame_shape_raises(self):
+        topo, plan = _plan("lenet5")
+        eng = Engine(plan, microbatch=2)
+        with pytest.raises(ValueError, match="expected frames"):
+            eng.submit(jnp.zeros((2, 14, 14, 1)))
+
+    def test_bad_microbatch_raises(self):
+        _, plan = _plan("lenet5")
+        with pytest.raises(ValueError, match="microbatch"):
+            Engine(plan, microbatch=0)
+
+    def test_undonated_engine(self):
+        topo, plan = _plan("lenet5")
+        eng = Engine(plan, microbatch=2, donate=False, warmup=False)
+        x = _frames(topo, 2)
+        out = eng.infer(x)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(plan(x)), rtol=1e-4, atol=1e-5
+        )
+
+
+class TestExtractedExecution:
+    def test_forward_is_cnn_apply_path(self):
+        """engine.forward == the eager stage/head composition cnn_apply
+        routes through (bitwise — same closures, same order)."""
+        topo, plan = _plan("lenet5")
+        x = _frames(topo, 2)
+        np.testing.assert_array_equal(
+            np.asarray(forward(plan, x)),
+            np.asarray(plan.head_fn(plan.features(x))),
+        )
+
+    def test_jitted_forward_cached_per_plan(self):
+        _, plan = _plan("lenet5")
+        assert plan.jitted_forward() is plan.jitted_forward()
+        assert plan.jitted_forward(donate=True) is not plan.jitted_forward()
+
+
+class TestPackedPow2Stacked:
+    """Satellite: the stacked-weight pow2 packing that used to live inline
+    in examples/serve.py is now models.layers.pack_linear_pow2 (odd widths
+    zero-padded, per-layer scales via vmap)."""
+
+    def test_stacked_pack_matches_per_layer(self):
+        from repro.core.quant.pow2 import project_pow2
+        from repro.models.layers import linear, pack_linear_pow2
+
+        k1, k2 = jax.random.split(jax.random.PRNGKey(5))
+        w = jax.random.normal(k1, (3, 10, 7))  # stacked, odd width
+        x = jax.random.normal(k2, (3, 4, 10))
+        packed = pack_linear_pow2({"w": w, "b": jnp.ones((7,))})
+        assert packed["codes"].shape == (3, 10, 4)  # ceil(8/2) per layer
+        assert packed["scale"].shape == (3, 1, 7)
+        for layer in range(3):
+            got = linear(
+                x[layer],
+                {
+                    "codes": packed["codes"][layer],
+                    "scale": packed["scale"][layer],
+                    "b": packed["b"],
+                },
+            )
+            ref = (
+                x[layer] @ project_pow2(w[layer], channel_axis=1)
+                + jnp.ones((7,))
+            )
+            np.testing.assert_allclose(
+                np.asarray(got), np.asarray(ref), rtol=1e-4, atol=1e-4
+            )
+
+    def test_pack_params_pow2_walks_trees(self):
+        from repro.models.layers import pack_params_pow2
+
+        params = {
+            "stack": [{"w": jnp.ones((4, 6)), "b": jnp.zeros((6,))}],
+            "norm": {"scale": jnp.ones((4,))},
+        }
+        out = pack_params_pow2(params)
+        assert "codes" in out["stack"][0] and "w" not in out["stack"][0]
+        assert out["norm"]["scale"].shape == (4,)  # non-linears untouched
