@@ -58,13 +58,16 @@ def _time(fn, *args, reps=10, passes=3):
     than scheduler noise on a shared machine. Every rep blocks on its own
     output: with only the last rep blocked, JAX's async dispatch overlaps
     host-side dispatch of rep i+1 with device execution of rep i and the
-    per-call latency under-reports."""
-    fn(*args).block_until_ready()  # compile
+    per-call latency under-reports. ``jax.block_until_ready`` (not the
+    array method) so callables that hand back host numpy — e.g. the
+    serving Engine, which packs and scatters batches host-side — time
+    the same way as device-array producers."""
+    jax.block_until_ready(fn(*args))  # compile
     best = float("inf")
     for _ in range(passes):
         t0 = time.time()
         for _ in range(reps):
-            fn(*args).block_until_ready()
+            jax.block_until_ready(fn(*args))
         best = min(best, (time.time() - t0) / reps * 1e6)
     return best
 

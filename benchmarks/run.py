@@ -54,6 +54,7 @@ def main() -> None:
         e2e_bench,
         fig3_bitwidth,
         kernel_bench,
+        serve_bench,
         table1_param_classes,
         table2_mult_strategies,
         table3_device_fit,
@@ -73,6 +74,9 @@ def main() -> None:
     # quantized plan) ride in the same record: the Table-4-style
     # throughput trajectory per PR.
     kernel_rows += e2e_bench.run()
+    # Serving-under-load rows (path: serve_load): p50/p99 latency and
+    # shed/error rates vs offered load through the fault-tolerant Engine.
+    kernel_rows += serve_bench.run()
     rows += kernel_rows
 
     # Machine-readable kernel perf record (seed path vs fused path, plus

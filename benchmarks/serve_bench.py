@@ -1,0 +1,146 @@
+"""Serving-under-load benchmark (``path: serve_load`` rows).
+
+The kernel and e2e benches measure the *compute* trajectory; this one
+measures the *serving* trajectory: the fault-tolerant ``Engine`` with its
+background flusher, deadline SLOs, and shed-oldest admission control
+under an open-loop load generator.
+
+Method: first measure the engine's capacity (frames/s through one
+group-sized dispatch of the compiled plan). Then, for each offered-load
+factor (0.5x, 1.0x, 2.0x capacity), submit a fixed number of single-frame
+requests at a constant paced inter-arrival, each carrying a deadline SLO,
+against an engine with a bounded shedding queue. Per level we record
+client-side p50/p99 latency over completed requests, the achieved
+throughput, and the shed / deadline-exceeded / error rates — the numbers
+that tell whether admission control actually bounds latency at overload
+instead of letting the queue grow without limit.
+
+Every request must complete (logits or a structured error) — the bench
+asserts it, so a hang regression fails the benchmark run, not just the
+chaos suite.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.dhm.compiler import compile_dhm
+from repro.core.dhm.engine import Engine
+from repro.models.cnn import ALL_TOPOLOGIES, init_cnn
+
+TOPO_NAME = "lenet5"
+MICROBATCH = 8
+N_REQUESTS = 160
+LOAD_FACTORS = (0.5, 1.0, 2.0)
+MAX_QUEUE = 32  # requests; shed-oldest beyond this
+
+
+def _percentile(xs, q):
+    return float(np.percentile(np.asarray(xs), q)) if xs else float("nan")
+
+
+def _capacity_rps(plan, frame_shape) -> float:
+    """Requests/s (single-frame requests) the engine can clear: one
+    group-sized dispatch serves ``group`` requests, so capacity is
+    group / dispatch latency."""
+    eng = Engine(plan, microbatch=MICROBATCH)
+    x = jax.random.normal(
+        jax.random.PRNGKey(1), (eng.group,) + frame_shape
+    )
+    eng.infer(x)  # warm
+    t0 = time.perf_counter()
+    reps = 5
+    for _ in range(reps):
+        eng.infer(x)
+    dt = (time.perf_counter() - t0) / reps
+    return eng.group / dt
+
+
+def _run_level(plan, frame_shape, offered_rps: float, deadline_ms: float):
+    """Open-loop constant-rate load against a fresh auto-flushing engine;
+    returns (requests, wall_s, stats)."""
+    # Host-side frames: the generator must be able to outrun the engine
+    # at overload, so per-submit cost stays off the device.
+    frames = np.asarray(
+        jax.random.normal(jax.random.PRNGKey(2), (N_REQUESTS,) + frame_shape)
+    )
+    inter = 1.0 / offered_rps
+    with Engine(
+        plan,
+        microbatch=MICROBATCH,
+        auto_flush=True,
+        flush_interval_ms=2.0,
+        max_queue=MAX_QUEUE,
+        admission="shed_oldest",
+        default_deadline_ms=deadline_ms,
+    ) as eng:
+        reqs = []
+        t0 = time.perf_counter()
+        for i in range(N_REQUESTS):
+            target = t0 + i * inter
+            delay = target - time.perf_counter()
+            if delay > 0:
+                time.sleep(delay)
+            reqs.append(eng.submit(frames[i]))
+        for r in reqs:
+            if not r.done:
+                r._event.wait(30.0)
+        wall = time.perf_counter() - t0
+    # Engine stopped and drained: every request must have completed.
+    assert all(r.done for r in reqs), "serve_bench: request left pending"
+    return reqs, wall, eng.stats()
+
+
+def run() -> list:
+    topo = ALL_TOPOLOGIES[TOPO_NAME]
+    params = init_cnn(jax.random.PRNGKey(0), topo)
+    plan = compile_dhm(topo, params)
+    h, w = topo.input_shape
+    frame_shape = (h, w, topo.input_channels)
+
+    capacity = _capacity_rps(plan, frame_shape)
+    # SLO: a few dispatch periods of headroom at capacity.
+    deadline_ms = max(25.0, 6.0 * MICROBATCH / capacity * 1e3)
+
+    rows = []
+    for factor in LOAD_FACTORS:
+        offered = capacity * factor
+        reqs, wall, st = _run_level(plan, frame_shape, offered, deadline_ms)
+        lats_ms = [r.latency_s * 1e3 for r in reqs if r.ok]
+        p50 = _percentile(lats_ms, 50)
+        p99 = _percentile(lats_ms, 99)
+        shed_rate = st.n_shed / st.n_requests
+        ddl_rate = st.n_deadline_exceeded / st.n_requests
+        err_rate = st.n_errors / st.n_requests
+        achieved = st.n_ok / wall
+        rows.append(
+            {
+                "name": f"serve/{TOPO_NAME}_load_x{factor:g}",
+                "us_per_call": p99 * 1e3,  # p99 latency, us
+                "path": "serve_load",
+                "offered_rps": offered,
+                "achieved_rps": achieved,
+                "p50_ms": p50,
+                "p99_ms": p99,
+                "shed_rate": shed_rate,
+                "deadline_exceeded_rate": ddl_rate,
+                "error_rate": err_rate,
+                "derived": (
+                    f"offered {offered:.0f} req/s ({factor:g}x capacity "
+                    f"{capacity:.0f}): served {achieved:.0f} req/s, latency "
+                    f"p50 {p50:.2f} ms p99 {p99:.2f} ms (SLO "
+                    f"{deadline_ms:.0f} ms), shed {shed_rate:.1%}, "
+                    f"deadline-exceeded {ddl_rate:.1%}, errors "
+                    f"{err_rate:.1%} over {st.n_requests} single-frame "
+                    f"requests (queue<={MAX_QUEUE}, shed_oldest)"
+                ),
+            }
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r["name"], "|", f"{r['us_per_call']:.1f}us", "|", r["derived"])

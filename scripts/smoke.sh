@@ -62,8 +62,27 @@ if missing:
     sys.exit(f"FATAL: BENCH_kernels.json is missing expected rows: {missing}\n"
              f"present: {sorted(rows)}")
 paths = {r.get("path") for r in rec["rows"]}
-assert {"seed", "fused", "fused_group"} <= paths, \
+assert {"seed", "fused", "fused_group", "serve_load"} <= paths, \
     f"missing kernel paths in record: {paths}"
+
+# -- serving-under-load rows: p50/p99 + shed rate vs offered load must be
+# recorded (the fault-tolerant Engine's serving trajectory).
+serve_rows = [r for r in rec["rows"] if r.get("path") == "serve_load"]
+expected_serve = [
+    f"serve/lenet5_load_x{f:g}" for f in (0.5, 1.0, 2.0)
+]
+missing_serve = [n for n in expected_serve if n not in rows]
+if missing_serve:
+    sys.exit(f"FATAL: BENCH_kernels.json misses serve_load rows: "
+             f"{missing_serve}")
+for r in serve_rows:
+    for field in ("p50_ms", "p99_ms", "shed_rate", "offered_rps"):
+        if field not in r:
+            sys.exit(f"FATAL: serve_load row {r['name']} misses {field!r}")
+    print(f"serve {r['name']}: offered {r['offered_rps']:.0f} req/s -> "
+          f"p50 {r['p50_ms']:.2f} ms p99 {r['p99_ms']:.2f} ms, "
+          f"shed {r['shed_rate']:.1%}")
+expected += expected_serve
 
 fused = rows["kernel/stream_conv_cifar_c1_fused"]
 print(f"fused stream conv: {fused['us_per_call']:.0f} us/call, "

@@ -24,8 +24,12 @@ as a compiler pipeline:
   the compiler emits; a 2D ``(stage, data)`` mesh adds batch sharding.
 - ``engine``: where compiled plans execute — the eager/jitted forward
   paths, the mesh executor entry (``run_pipelined``), and the
-  micro-batched serving ``Engine`` (request queue, double-buffered
-  donated closures, warmup, latency/throughput stats).
+  fault-tolerant serving ``Engine`` (continuous batching with deadline
+  SLOs, bounded-queue admission control, watchdog + retry + a graceful
+  degradation ladder, structured per-request errors).
+- ``faults``: deterministic, seed-driven fault injection (delayed flush,
+  dispatch errors, stalled collectives, NaN activations, device loss)
+  wired through ``Engine(fault_plan=...)`` for the chaos suite.
 - ``resources``: the FPGA resource model for the three multiplier
   strategies (paper Tables 2 & 3).
 - ``throughput``: the streaming-throughput model (paper Table 4).
@@ -33,13 +37,43 @@ as a compiler pipeline:
 from repro.core.dhm.compiler import (
     CompiledDHM,
     CompiledStage,
+    PlanCheckError,
     QuantSpec,
+    check_plan,
     compile_dhm,
     emit_conv_stage,
     validate_topology,
 )
-from repro.core.dhm.engine import Engine, EngineStats, run_pipelined
-from repro.core.dhm.pipeline import PipelineConfig, StageIOSpec, pipeline_forward
+from repro.core.dhm.engine import (
+    BatchFailed,
+    DeadlineExceeded,
+    Engine,
+    EngineStats,
+    InvalidRequest,
+    LadderExhausted,
+    Rejected,
+    RequestError,
+    Shed,
+    run_pipelined,
+)
+from repro.core.dhm.faults import (
+    DelayedFlush,
+    DeviceLoss,
+    DispatchError,
+    FaultPlan,
+    InjectedDeviceLoss,
+    InjectedDispatchError,
+    InjectedFault,
+    NaNActivation,
+    StalledDispatch,
+)
+from repro.core.dhm.pipeline import (
+    CollectiveTimeout,
+    PipelineConfig,
+    StageIOSpec,
+    call_with_timeout,
+    pipeline_forward,
+)
 from repro.core.dhm.graph import (
     Actor,
     ActorKind,
@@ -61,14 +95,34 @@ from repro.core.dhm.mapping import StageAssignment, partition_stages, balance_re
 __all__ = [
     "Actor",
     "ActorKind",
+    "BatchFailed",
+    "CollectiveTimeout",
     "CompiledDHM",
     "CompiledStage",
     "DataflowGraph",
+    "DeadlineExceeded",
+    "DelayedFlush",
+    "DeviceLoss",
+    "DispatchError",
     "Engine",
     "EngineStats",
+    "FaultPlan",
+    "InjectedDeviceLoss",
+    "InjectedDispatchError",
+    "InjectedFault",
+    "InvalidRequest",
+    "LadderExhausted",
+    "NaNActivation",
     "PipelineConfig",
+    "PlanCheckError",
     "QuantSpec",
+    "Rejected",
+    "RequestError",
+    "Shed",
     "StageIOSpec",
+    "StalledDispatch",
+    "call_with_timeout",
+    "check_plan",
     "pipeline_forward",
     "run_pipelined",
     "cnn_to_dpn",

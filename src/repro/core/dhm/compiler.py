@@ -69,6 +69,11 @@ from repro.kernels.stream_conv.epilogue import ACTS, normalize_pool
 PADDINGS = ("SAME", "VALID")
 
 
+class PlanCheckError(ValueError):
+    """A compiled plan failed its self-check (non-finite baked parameters
+    or inconsistent stage IO geometry) — the plan is not fit to serve."""
+
+
 @dataclasses.dataclass(frozen=True)
 class QuantSpec:
     """The quantization contract baked into a compiled plan.
@@ -425,6 +430,11 @@ class CompiledDHM:
     def stage_params(self, stage: int) -> list:
         return [self.conv_params[i] for i in self.stages[stage].conv_layers]
 
+    def self_check(self) -> None:
+        """Health-probe the plan (see :func:`check_plan`); raises
+        :class:`PlanCheckError` when the plan is not fit to serve."""
+        check_plan(self)
+
     def features(self, x: jax.Array) -> jax.Array:
         """Run the conv stages sequentially (single-device execution)."""
         for st in self.stages:
@@ -468,6 +478,62 @@ class CompiledDHM:
         return run_pipelined(
             self, microbatches, mesh=mesh, cfg=cfg, data_axis=data_axis
         )
+
+
+def check_plan(plan: CompiledDHM) -> None:
+    """Self-check a compiled plan: every baked parameter is finite, and
+    the per-stage IO geometry is consistent (edges chain, and the emitted
+    stage bodies actually produce the shapes their :class:`StageIOSpec`
+    promises, via ``jax.eval_shape`` — no FLOPs spent).
+
+    Raises :class:`PlanCheckError` with the failing stage/tensor named.
+    This doubles as the serving engine's health probe: a rung of the
+    degradation ladder is only promoted into service after the plan it
+    runs passes this check.
+    """
+    for li, p in enumerate(plan.conv_params):
+        for k, v in p.items():
+            if not bool(jnp.isfinite(v).all()):
+                raise PlanCheckError(
+                    f"{plan.topo.name}: conv layer {li} parameter {k!r} "
+                    "contains non-finite values — the plan cannot serve"
+                )
+    ios = [st.io for st in plan.stages]
+    if any(io is None for io in ios):
+        raise PlanCheckError(
+            f"{plan.topo.name}: plan stages miss StageIOSpec geometry"
+        )
+    h, w = plan.topo.input_shape
+    if tuple(ios[0].in_shape) != (h, w, plan.topo.input_channels):
+        raise PlanCheckError(
+            f"{plan.topo.name}: stage 0 input {ios[0].in_shape} does not "
+            f"match the topology input {(h, w, plan.topo.input_channels)}"
+        )
+    for s in range(len(ios) - 1):
+        if tuple(ios[s].out_shape) != tuple(ios[s + 1].in_shape):
+            raise PlanCheckError(
+                f"{plan.topo.name}: stage {s} output {ios[s].out_shape} "
+                f"does not chain into stage {s + 1} input "
+                f"{ios[s + 1].in_shape}"
+            )
+    for st in plan.stages:
+        try:
+            out = jax.eval_shape(
+                st.fn,
+                plan.stage_params(st.index),
+                jax.ShapeDtypeStruct((1,) + tuple(st.io.in_shape), jnp.float32),
+            )
+        except Exception as e:  # noqa: BLE001 — surfaced as a check failure
+            raise PlanCheckError(
+                f"{plan.topo.name}: stage {st.index} body fails to trace "
+                f"on its declared input {st.io.in_shape}: {e}"
+            ) from e
+        if tuple(out.shape[1:]) != tuple(st.io.out_shape):
+            raise PlanCheckError(
+                f"{plan.topo.name}: stage {st.index} body produces "
+                f"{tuple(out.shape[1:])}, but its StageIOSpec promises "
+                f"{tuple(st.io.out_shape)}"
+            )
 
 
 def compile_dhm(

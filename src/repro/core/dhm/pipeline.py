@@ -38,11 +38,55 @@ and only stage boundaries remain activation-streaming edges over ICI.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+
+
+class CollectiveTimeout(RuntimeError):
+    """A dispatched step (typically the mesh collective runner) failed to
+    complete within its deadline — the runtime analogue of a wedged
+    ``ppermute``. The serving engine treats this as a rung-level failure
+    and demotes (mesh pipeline -> single device) instead of hanging."""
+
+
+def call_with_timeout(fn: Callable, *, timeout_s: Optional[float], what: str = "dispatch"):
+    """Run ``fn()`` (which must block until its result is ready) under a
+    watchdog: if it does not return within ``timeout_s``, raise
+    :class:`CollectiveTimeout` — the caller regains control even though
+    the wedged computation cannot be cancelled (the worker thread is
+    abandoned as a daemon and its eventual result discarded).
+
+    ``timeout_s=None`` (or <= 0) runs ``fn`` inline with no watchdog.
+    This is the timeout hook the serving engine wraps around every
+    dispatch — most importantly the collective runner, where a lost peer
+    stalls the whole mesh instead of raising.
+    """
+    if not timeout_s or timeout_s <= 0:
+        return fn()
+    box: dict = {}
+    done = threading.Event()
+
+    def _run():
+        try:
+            box["value"] = fn()
+        except BaseException as e:  # noqa: BLE001 — relayed to the caller
+            box["error"] = e
+        finally:
+            done.set()
+
+    t = threading.Thread(target=_run, daemon=True, name=f"watchdog-{what}")
+    t.start()
+    if not done.wait(timeout_s):
+        raise CollectiveTimeout(
+            f"{what} did not complete within {timeout_s:.3f}s"
+        )
+    if "error" in box:
+        raise box["error"]
+    return box["value"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -215,6 +259,22 @@ class PipelinedRunner:
         """Pure executor: (stacked leaves, (M, mb, *elem) µbatches) ->
         (M, mb, *out_elem) final-stage outputs."""
         return self._apply(leaves, microbatches)
+
+    def apply_with_timeout(
+        self, leaves, microbatches: jax.Array, *, timeout_s: Optional[float]
+    ) -> jax.Array:
+        """:meth:`apply` under the :func:`call_with_timeout` watchdog,
+        blocked until ready — raises :class:`CollectiveTimeout` instead of
+        hanging when the mesh collective wedges (the serving engine's
+        demotion hook)."""
+
+        def _run():
+            out = self._apply(leaves, microbatches)
+            return jax.block_until_ready(out)
+
+        return call_with_timeout(
+            _run, timeout_s=timeout_s, what="pipelined collective"
+        )
 
     def __call__(self, microbatches: jax.Array) -> jax.Array:
         return self._apply(self.stacked_leaves, microbatches)

@@ -1,14 +1,23 @@
 """Tests for the serving engine (single-device fast tier): the request
 queue / micro-batching, double-buffered donated closures, warmup, stats,
-and the execution paths extracted from the compiler (eager forward,
-cached jitted forward, pipeline_spec / StageIOSpec emission)."""
+deadline SLOs, admission control, and the execution paths extracted from
+the compiler (eager forward, cached jitted forward, pipeline_spec /
+StageIOSpec emission). Fault injection lives in test_faults.py."""
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core.dhm.compiler import QuantSpec, compile_dhm
-from repro.core.dhm.engine import Engine, forward, plan_jitted_forward
+from repro.core.dhm.engine import (
+    DeadlineExceeded,
+    Engine,
+    Shed,
+    forward,
+    plan_jitted_forward,
+)
 from repro.core.dhm.pipeline import StageIOSpec, derive_io_specs
 from repro.models.cnn import ALL_TOPOLOGIES, LENET5, init_cnn
 
@@ -140,6 +149,127 @@ class TestEngineQueue:
         np.testing.assert_allclose(
             np.asarray(out), np.asarray(plan(x)), rtol=1e-4, atol=1e-5
         )
+
+
+class TestDeadlines:
+    def test_background_flusher_dispatches_for_deadline(self):
+        """With a huge flush interval, only the request's deadline can
+        trigger dispatch — the flusher must wake for it."""
+        topo, plan = _plan("lenet5")
+        with Engine(
+            plan, microbatch=8, auto_flush=True, flush_interval_ms=5000.0
+        ) as eng:
+            req = eng.submit(_frames(topo, 1), deadline_ms=100.0)
+            out = req.result(timeout=10.0)
+        assert out.shape == (1, topo.n_classes)
+        assert req.ok and req.latency_s < 2.0  # nowhere near the interval
+
+    def test_background_flusher_dispatches_on_full_batch(self):
+        topo, plan = _plan("lenet5")
+        with Engine(
+            plan, microbatch=4, auto_flush=True, flush_interval_ms=5000.0
+        ) as eng:
+            req = eng.submit(_frames(topo, 4))  # fills the micro-batch
+            out = req.result(timeout=10.0)
+        assert out.shape == (4, topo.n_classes)
+        assert req.latency_s < 2.0
+
+    def test_expired_deadline_is_a_structured_error(self):
+        topo, plan = _plan("lenet5")
+        eng = Engine(plan, microbatch=2)
+        req = eng.submit(_frames(topo, 1), deadline_ms=0.001)
+        time.sleep(0.01)
+        with pytest.raises(DeadlineExceeded, match="deadline passed"):
+            req.result()
+        assert req.done and not req.ok
+        assert eng.stats().n_deadline_exceeded == 1
+
+    def test_default_deadline_applies(self):
+        topo, plan = _plan("lenet5")
+        eng = Engine(plan, microbatch=2, default_deadline_ms=50.0)
+        req = eng.submit(_frames(topo, 1))
+        assert req.deadline_at is not None
+        assert req.result().shape == (1, topo.n_classes)
+
+    def test_every_request_completes_under_load(self):
+        """Property: a random mix of sizes / deadlines through the
+        background flusher with a bounded shedding queue — every request
+        completes (never hangs), with logits or a structured error, and
+        the terminal-outcome counters partition the request count."""
+        topo, plan = _plan("lenet5")
+        rng = np.random.default_rng(0)
+        n_req = 30
+        with Engine(
+            plan, microbatch=4, auto_flush=True, flush_interval_ms=2.0,
+            max_queue=8, admission="shed_oldest",
+        ) as eng:
+            reqs = []
+            for i in range(n_req):
+                n = int(rng.integers(1, 5))
+                dl = (
+                    float(rng.uniform(5.0, 50.0))
+                    if rng.random() < 0.5 else None
+                )
+                reqs.append(eng.submit(_frames(topo, n, seed=i), deadline_ms=dl))
+        # stop() drained the queue: nothing may still be pending.
+        for r in reqs:
+            assert r.done
+            if r.ok:
+                out = r.result()
+                assert out.shape == (r.n_frames, topo.n_classes)
+                assert bool(jnp.isfinite(out).all())
+            else:
+                assert isinstance(r.error, (DeadlineExceeded, Shed))
+        st = eng.stats()
+        assert st.n_failed == st.n_invalid == st.n_rejected == 0
+        assert st.n_ok + st.n_shed + st.n_deadline_exceeded == n_req
+        assert st.n_ok > 0
+
+
+class TestAdmission:
+    def test_block_policy_drains_inline(self):
+        """Without a flusher, a blocked submitter drains the queue itself
+        — submission never deadlocks and every request is served."""
+        topo, plan = _plan("lenet5")
+        eng = Engine(plan, microbatch=2, max_queue=1, admission="block")
+        r1 = eng.submit(_frames(topo, 1))
+        r2 = eng.submit(_frames(topo, 1, seed=2))  # forces an inline flush
+        assert r1.done and r1.ok
+        assert r2.result().shape == (1, topo.n_classes)
+        assert eng.stats().n_ok == 2
+
+    def test_admission_policy_validated(self):
+        _, plan = _plan("lenet5")
+        with pytest.raises(ValueError, match="admission policy"):
+            Engine(plan, admission="drop_table")
+
+    def test_hyphenated_policy_normalized(self):
+        _, plan = _plan("lenet5")
+        eng = Engine(plan, microbatch=2, max_queue=1, admission="shed-oldest")
+        assert eng.admission == "shed_oldest"
+
+
+class TestFlushSemantics:
+    def test_double_flush_is_noop(self):
+        topo, plan = _plan("lenet5")
+        eng = Engine(plan, microbatch=2)
+        eng.infer(_frames(topo, 2))
+        n = eng.stats().n_batches
+        eng.flush()
+        eng.flush()
+        assert eng.stats().n_batches == n
+
+    def test_start_stop_idempotent(self):
+        topo, plan = _plan("lenet5")
+        eng = Engine(plan, microbatch=2)
+        eng.start()
+        eng.start()  # idempotent
+        req = eng.submit(_frames(topo, 2))
+        assert req.result(timeout=10.0).shape == (2, topo.n_classes)
+        eng.stop()
+        eng.stop()  # also idempotent
+        # After stop, the engine still serves synchronously.
+        assert eng.infer(_frames(topo, 2)).shape == (2, topo.n_classes)
 
 
 class TestExtractedExecution:
