@@ -10,7 +10,10 @@
 # guard compares the fused e2e rows against benchmarks/bench_baseline.json:
 # each row must reach SMOKE_PERF_FLOOR x baseline frames/s (default 0.35 —
 # a low floor because CI runners and dev boxes differ widely); set
-# SMOKE_PERF_FLOOR=0 to skip the guard.
+# SMOKE_PERF_FLOOR=0 to skip the guard. The mesh job gets its own floor:
+# SMOKE_PIPELINE_FLOOR (default 0.25, even more lenient — the pipelined
+# path runs on 8 *emulated* host devices, where scheduler noise is worse)
+# guards the e2e_pipelined rows the same way; 0 disables it.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -84,6 +87,33 @@ for r in serve_rows:
           f"shed {r['shed_rate']:.1%}")
 expected += expected_serve
 
+# -- pipelined rows: every e2e_pipelined row must carry its speedup vs
+# the single-device plan (the cross-PR gap trajectory) plus the autotuned
+# configuration that produced it, and the µbatch/grain crossover sweep
+# (path: pipeline_sweep — the autotuner's measurement source) must be on
+# record with full config fields.
+pipe_rows = [r for r in rec["rows"] if r.get("path") == "e2e_pipelined"]
+for r in pipe_rows:
+    for field in ("pipeline_speedup", "n_microbatches", "microbatch",
+                  "tuning_source", "edge_path"):
+        if field not in r:
+            sys.exit(f"FATAL: e2e_pipelined row {r['name']} misses "
+                     f"{field!r}")
+sweep_rows = [r for r in rec["rows"] if r.get("path") == "pipeline_sweep"]
+if not sweep_rows:
+    sys.exit("FATAL: no pipeline_sweep rows — the µbatch/grain crossover "
+             "sweep was not recorded")
+for r in sweep_rows:
+    for field in ("pipeline_speedup", "frames_per_s", "topology", "label",
+                  "n_microbatches", "microbatch", "overlap", "edge_mode"):
+        if field not in r:
+            sys.exit(f"FATAL: pipeline_sweep row {r['name']} misses "
+                     f"{field!r}")
+best_sweep = max(sweep_rows, key=lambda r: r["frames_per_s"])
+print(f"pipeline sweep: {len(sweep_rows)} points recorded, best "
+      f"{best_sweep['name']} at {best_sweep['frames_per_s']:.0f} frames/s "
+      f"(x{best_sweep['pipeline_speedup']:.2f} vs single device)")
+
 fused = rows["kernel/stream_conv_cifar_c1_fused"]
 print(f"fused stream conv: {fused['us_per_call']:.0f} us/call, "
       f"x{fused['speedup_vs_seed']:.1f} vs seed interpret path")
@@ -154,5 +184,33 @@ if floor_frac > 0:
                      f"(floor {floor_frac}):\n  " + "\n  ".join(failures))
         print(f"perf guard: {len(base.get('e2e_frames_per_s', {}))} fused "
               f"e2e rows above {floor_frac} x baseline")
+
+        # Mesh-job floor: the pipelined serving rows, separately tunable
+        # (and more lenient by default — 8 emulated host devices).
+        pipe_floor = float(os.environ.get("SMOKE_PIPELINE_FLOOR", "0.25"))
+        if pipe_floor > 0:
+            failures = []
+            for name, base_fps in base.get(
+                "pipelined_frames_per_s", {}
+            ).items():
+                row = rows.get(name)
+                if row is None:
+                    failures.append(f"{name}: row missing from this run")
+                    continue
+                floor = base_fps * pipe_floor
+                if row["frames_per_s"] < floor:
+                    failures.append(
+                        f"{name}: {row['frames_per_s']:.0f} frames/s < "
+                        f"{floor:.0f} (baseline {base_fps:.0f} x floor "
+                        f"{pipe_floor})"
+                    )
+            if failures:
+                sys.exit("FATAL: pipelined perf regression vs "
+                         "benchmarks/bench_baseline.json "
+                         f"(floor {pipe_floor}):\n  "
+                         + "\n  ".join(failures))
+            print(f"pipeline guard: "
+                  f"{len(base.get('pipelined_frames_per_s', {}))} "
+                  f"pipelined rows above {pipe_floor} x baseline")
 EOF
 echo "SMOKE OK"

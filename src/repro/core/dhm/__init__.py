@@ -20,8 +20,10 @@ as a compiler pipeline:
 - ``pipeline``: the streaming pipelined executor (shard_map + ppermute);
   runs a CompiledDHM's stages on disjoint device groups, GPipe schedule.
   Heterogeneous stage geometries (pool/stride shrink, channel growth)
-  flow through boxed ICI buffers sized from the per-edge ``StageIOSpec``
-  the compiler emits; a 2D ``(stage, data)`` mesh adds batch sharding.
+  stream over exact-shape ICI edge classes planned from the per-edge
+  ``StageIOSpec`` the compiler emits (``plan_edges``; max-shape boxing is
+  the fallback), optionally with double-buffered overlapped collectives;
+  a 2D ``(stage, data)`` mesh adds batch sharding.
 - ``engine``: where compiled plans execute — the eager/jitted forward
   paths, the mesh executor entry (``run_pipelined``), and the
   fault-tolerant serving ``Engine`` (continuous batching with deadline
@@ -32,7 +34,10 @@ as a compiler pipeline:
   wired through ``Engine(fault_plan=...)`` for the chaos suite.
 - ``resources``: the FPGA resource model for the three multiplier
   strategies (paper Tables 2 & 3).
-- ``throughput``: the streaming-throughput model (paper Table 4).
+- ``throughput``: the streaming-throughput model (paper Table 4) plus the
+  spatial-pipeline cost model and the measurement-driven µbatch autotuner
+  (``estimate_pipeline`` / ``fit_constants`` / ``autotune_pipeline``) that
+  picks n_microbatches / batch grain / overlap per (plan, device count).
 """
 from repro.core.dhm.compiler import (
     CompiledDHM,
@@ -69,10 +74,13 @@ from repro.core.dhm.faults import (
 )
 from repro.core.dhm.pipeline import (
     CollectiveTimeout,
+    EDGE_MODES,
+    EdgePlan,
     PipelineConfig,
     StageIOSpec,
     call_with_timeout,
     pipeline_forward,
+    plan_edges,
 )
 from repro.core.dhm.graph import (
     Actor,
@@ -89,7 +97,21 @@ from repro.core.dhm.resources import (
     ResourceReport,
     estimate_resources,
 )
-from repro.core.dhm.throughput import dhm_throughput_gops, ThroughputReport
+from repro.core.dhm.throughput import (
+    PipelineCostConstants,
+    PipelineEstimate,
+    PipelineTuning,
+    ThroughputReport,
+    autotune_pipeline,
+    candidate_grid,
+    dhm_throughput_gops,
+    estimate_pipeline,
+    fit_constants,
+    load_sweep_measurements,
+    pipeline_workload,
+    streaming_throughput,
+    sweep_sample,
+)
 from repro.core.dhm.mapping import StageAssignment, partition_stages, balance_report
 
 __all__ = [
@@ -113,7 +135,12 @@ __all__ = [
     "InvalidRequest",
     "LadderExhausted",
     "NaNActivation",
+    "EDGE_MODES",
+    "EdgePlan",
     "PipelineConfig",
+    "PipelineCostConstants",
+    "PipelineEstimate",
+    "PipelineTuning",
     "PlanCheckError",
     "QuantSpec",
     "Rejected",
@@ -141,4 +168,13 @@ __all__ = [
     "StageAssignment",
     "partition_stages",
     "balance_report",
+    "autotune_pipeline",
+    "candidate_grid",
+    "estimate_pipeline",
+    "fit_constants",
+    "load_sweep_measurements",
+    "pipeline_workload",
+    "plan_edges",
+    "streaming_throughput",
+    "sweep_sample",
 ]

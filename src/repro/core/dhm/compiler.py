@@ -461,22 +461,49 @@ class CompiledDHM:
         """Per-stage closures + params + per-edge activation geometry
         (:class:`StageIOSpec`) for the heterogeneous streaming executor.
         Stages may freely pool/stride down and grow channels between
-        boundaries — the executor boxes the ICI buffers to the max edge
-        shape and each stage computes on its exact geometry."""
+        boundaries — the executor groups the interior edges into
+        shape classes (see :meth:`edge_plan`) and each stage computes on
+        its exact geometry."""
         from repro.core.dhm.engine import pipeline_spec
 
         return pipeline_spec(self)
 
-    def run_pipelined(self, microbatches, *, mesh, cfg=None, data_axis=None):
+    def edge_plan(self, *, mode: str = "auto", max_classes: int = 4):
+        """How this plan's interior stage-boundary activations would
+        travel over ICI: the :class:`~repro.core.dhm.pipeline.EdgePlan`
+        (shape classes, per-class partial-permutation pairs, padding
+        fraction) the executor builds from the :class:`StageIOSpec`
+        chain. Inspect ``.mode`` to see whether the plan streams
+        exact-shape edges or falls back to the boxed max-shape buffer."""
+        from repro.core.dhm.pipeline import plan_edges
+
+        return plan_edges(
+            [st.io for st in self.stages], mode=mode, max_classes=max_classes
+        )
+
+    def edge_shapes(self) -> tuple:
+        """The exact per-interior-edge activation element shapes (stage
+        s -> s+1), straight off the :class:`StageIOSpec` chain."""
+        return tuple(
+            tuple(self.stages[s].io.out_shape)
+            for s in range(self.n_stages - 1)
+        )
+
+    def run_pipelined(
+        self, microbatches, *, mesh, cfg=None, data_axis=None,
+        overlap=False, edge_mode="auto",
+    ):
         """Stream (M, mb, H, W, C) µbatches through the conv stages on a
         mesh (one device group per stage; with ``data_axis`` the µbatch
-        dim is additionally batch-sharded on a 2D ``(stage, data)`` mesh).
-        Returns the feature stream; apply ``head_fn`` after re-flattening
-        for logits."""
+        dim is additionally batch-sharded on a 2D ``(stage, data)`` mesh;
+        ``overlap``/``edge_mode`` select the double-buffered schedule and
+        the ICI edge path). Returns the feature stream; apply ``head_fn``
+        after re-flattening for logits."""
         from repro.core.dhm.engine import run_pipelined
 
         return run_pipelined(
-            self, microbatches, mesh=mesh, cfg=cfg, data_axis=data_axis
+            self, microbatches, mesh=mesh, cfg=cfg, data_axis=data_axis,
+            overlap=overlap, edge_mode=edge_mode,
         )
 
 

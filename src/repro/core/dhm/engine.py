@@ -107,16 +107,22 @@ def build_plan_pipeline(plan, *, mesh, cfg, microbatch=None):
     )
 
 
-def run_pipelined(plan, microbatches, *, mesh, cfg=None, data_axis=None):
+def run_pipelined(
+    plan, microbatches, *, mesh, cfg=None, data_axis=None,
+    overlap=False, edge_mode="auto",
+):
     """Stream (M, mb, H, W, C) µbatches through the plan's conv stages on
     a mesh (one device group per stage; heterogeneous stage shapes flow
-    through boxed ICI buffers). Returns the feature stream; apply
-    ``plan.head_fn`` after re-flattening for logits."""
+    over exact-shape-class ICI edges — ``edge_mode="boxed"`` forces the
+    max-shape fallback, ``overlap=True`` double-buffers the edge slots).
+    Returns the feature stream; apply ``plan.head_fn`` after re-flattening
+    for logits."""
     from repro.core.dhm.pipeline import PipelineConfig
 
     if cfg is None:
         cfg = PipelineConfig(
-            plan.n_stages, microbatches.shape[0], data_axis=data_axis
+            plan.n_stages, microbatches.shape[0], data_axis=data_axis,
+            overlap=overlap, edge_mode=edge_mode,
         )
     runner = build_plan_pipeline(
         plan, mesh=mesh, cfg=cfg, microbatch=microbatches.shape[1]
@@ -353,9 +359,12 @@ class Engine:
         *,
         microbatch: int = 8,
         mesh=None,
-        n_microbatches: int = 4,
+        n_microbatches=4,  # int, or "auto" to run the µbatch autotuner
         data_axis: Optional[str] = None,
         stage_axis: str = "stage",
+        overlap: bool = False,
+        edge_mode: str = "auto",
+        tuning=None,  # a throughput.PipelineTuning overriding the knobs
         donate: bool = True,
         warmup: bool = True,
         # -- robustness knobs -------------------------------------------
@@ -374,6 +383,24 @@ class Engine:
         allow_degraded: bool = True,
         fault_plan: Optional[FaultPlan] = None,
     ):
+        # Autotuned pipeline geometry: an explicit PipelineTuning (from
+        # throughput.autotune_pipeline over measured sweeps) or
+        # n_microbatches="auto" (model-priced grid — no measurements)
+        # overrides microbatch/n_microbatches/overlap/edge_mode.
+        if tuning is None and n_microbatches == "auto":
+            if mesh is None:
+                raise ValueError(
+                    'n_microbatches="auto" needs a mesh to tune for'
+                )
+            from repro.core.dhm.throughput import autotune_pipeline
+
+            tuning = autotune_pipeline(plan, mesh.size)
+        if tuning is not None:
+            microbatch = tuning.microbatch
+            n_microbatches = tuning.n_microbatches
+            overlap = tuning.overlap
+            edge_mode = tuning.edge_mode
+        self.tuning = tuning
         if microbatch < 1:
             raise ValueError(f"microbatch must be >= 1, got {microbatch}")
         admission = admission.replace("-", "_")
@@ -384,7 +411,9 @@ class Engine:
             )
         if max_queue < 0:
             raise ValueError("max_queue must be >= 0 (0 = unbounded)")
-        if mesh is not None and n_microbatches < 1:
+        if mesh is not None and (
+            not isinstance(n_microbatches, int) or n_microbatches < 1
+        ):
             raise ValueError(
                 f"n_microbatches must be >= 1, got {n_microbatches}"
             )
@@ -394,6 +423,8 @@ class Engine:
         self.n_microbatches = n_microbatches
         self.data_axis = data_axis
         self.stage_axis = stage_axis
+        self.overlap = overlap
+        self.edge_mode = edge_mode
         self.donate = donate
         self.warmup = warmup
         self.max_queue = max_queue
@@ -513,7 +544,8 @@ class Engine:
         microbatch, n_microbatches = self.microbatch, self.n_microbatches
         cfg = PipelineConfig(
             plan.n_stages, n_microbatches, stage_axis=self.stage_axis,
-            data_axis=self.data_axis,
+            data_axis=self.data_axis, overlap=self.overlap,
+            edge_mode=self.edge_mode,
         )
         # Box + stack + make the per-stage params resident ONCE, here
         # (eagerly — stacking inside the jit trace would hand shard_map a

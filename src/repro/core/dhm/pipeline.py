@@ -15,16 +15,34 @@ garbage that is masked out) — matching the paper's fully-pipelined,
 always-firing actors.
 
 Real CNN topologies pool/stride down and grow channels between stages, so
-stage bodies are NOT shape-homogeneous. The executor therefore runs on
-**boxed** buffers: every per-edge activation shape (a :class:`StageIOSpec`
-per stage, emitted by the compiler which knows the full geometry) is
-embedded in one max-shape box; a stage slices its true input shape out of
-the box, computes on exact shapes, and zero-pads its output back into the
-box before the ``ppermute``. Since each device executes one stage, the
-per-stage bodies are selected with ``lax.switch`` on the device's stage
-index — one SPMD program, S different actor chains. Parameters are boxed
-the same way (leaf-wise pad-to-max, stacked on a leading stage axis) so
-each device group holds exactly its own stage's weights.
+stage bodies are NOT shape-homogeneous. The executor sizes the ICI stream
+to the actual tensor traffic: the interior edge shapes (stage s ->
+stage s+1, from the compiler's :class:`StageIOSpec` chain) are grouped
+into **shape classes** (:func:`plan_edges`). Each class gets its own
+in-flight buffer and its own *partial* ``ppermute`` — only the devices
+whose out-edge belongs to the class appear as sources, so every edge
+moves exactly its own bytes (the stage-0 input and the final output never
+travel over ICI and never inflate a buffer). When every class holds edges
+of a single shape the stream is **exact** (zero padding, zero slack —
+the default, taken by every real topology); collapsing all edges into one
+max-shape class is the **boxed** general fallback
+(``PipelineConfig.edge_mode="boxed"``), numerics untouched either way.
+Since each device executes one stage, the per-stage bodies are selected
+with ``lax.switch`` on the device's stage index — one SPMD program, S
+different actor chains. Parameters are boxed the old way (leaf-wise
+pad-to-max, stacked on a leading stage axis) so each device group holds
+exactly its own stage's weights.
+
+With ``PipelineConfig.overlap=True`` the edge slots are double-buffered:
+the scan carry holds separate in-flight *send* and *recv* slots, so the
+``ppermute`` of µbatch m (launched from the send slot filled last tick)
+is independent of — and overlaps with — the ``lax.switch`` stage body of
+µbatch m+1 in the same tick. Each edge then costs one extra pipeline tick
+(T = M + 2(S-1) instead of M + S - 1), the classic latency-for-bandwidth
+trade: worth it when collectives run asynchronously beside compute (real
+ICI), not on an emulated host mesh — the µbatch autotuner
+(``repro.core.dhm.throughput``) decides from measured sweeps. Both
+schedules compute bit-identical outputs.
 
 A 2D ``(stage, data)`` mesh composes data-parallel batch sharding with the
 spatial pipeline: the µbatch dimension is sharded along ``data_axis`` and
@@ -108,18 +126,37 @@ class StageIOSpec:
                 )
 
 
+EDGE_MODES = ("auto", "exact", "boxed")
+
+
 @dataclasses.dataclass(frozen=True)
 class PipelineConfig:
     n_stages: int
     n_microbatches: int
     stage_axis: str = "stage"
     data_axis: Optional[str] = None  # optional batch-sharding mesh axis
+    # How interior-edge activations travel over ICI (see plan_edges):
+    # "auto" sends exact-shape per-class buffers, collapsing to one boxed
+    # class only past max_edge_classes; "exact" never collapses; "boxed"
+    # forces the single max-shape box (the general fallback).
+    edge_mode: str = "auto"
+    max_edge_classes: int = 4
+    # Double-buffer the edge slots so the ppermute of µbatch m overlaps
+    # the stage body of µbatch m+1 (one extra tick of latency per edge).
+    overlap: bool = False
 
     def __post_init__(self):
         if self.n_microbatches < 1 or self.n_stages < 1:
             raise ValueError("n_stages and n_microbatches must be >= 1")
         if self.data_axis is not None and self.data_axis == self.stage_axis:
             raise ValueError("data_axis must differ from stage_axis")
+        if self.edge_mode not in EDGE_MODES:
+            raise ValueError(
+                f"unknown edge_mode {self.edge_mode!r}; expected one of "
+                f"{EDGE_MODES}"
+            )
+        if self.max_edge_classes < 1:
+            raise ValueError("max_edge_classes must be >= 1")
 
 
 # ---------------------------------------------------------------------------
@@ -148,6 +185,147 @@ def _unfit(a_box: jax.Array, shape: tuple) -> jax.Array:
     :func:`_fit` — exact, no numerics touched)."""
     idx = tuple(slice(0, d) for d in _aligned(shape, a_box.ndim))
     return a_box[idx].reshape(shape)
+
+
+def _fit_elem(y: jax.Array, class_shape: tuple) -> jax.Array:
+    """Zero-pad a (mb, *elem) activation into (mb, *class_shape) — the
+    element dims are rank-aligned AFTER the µbatch dim. Pad-free (a pure
+    reshape) when the class shape equals the element shape, i.e. on every
+    exact-shape edge."""
+    el = _aligned(y.shape[1:], len(class_shape))
+    y = y.reshape((y.shape[0],) + el)
+    pad = [(0, 0)] + [(0, b - d) for d, b in zip(el, class_shape)]
+    if all(p == (0, 0) for p in pad):
+        return y
+    return jnp.pad(y, pad)
+
+
+def _unfit_elem(y_box: jax.Array, shape: tuple) -> jax.Array:
+    """Slice the true (mb, *shape) activation back out of a class buffer
+    (inverse of :func:`_fit_elem` — exact, no numerics touched)."""
+    idx = (slice(None),) + tuple(
+        slice(0, d) for d in _aligned(shape, y_box.ndim - 1)
+    )
+    return y_box[idx].reshape((y_box.shape[0],) + tuple(shape))
+
+
+# ---------------------------------------------------------------------------
+# Edge planning: size the ICI stream to the actual tensor traffic.
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgePlan:
+    """How stage-boundary activations travel over ICI.
+
+    The pipeline's S-1 *interior* edges (stage s -> s+1; the stage-0 input
+    and final output never cross ICI) are grouped into shape classes. Each
+    class owns one in-flight buffer of ``class_shapes[c]`` and one partial
+    ``ppermute`` whose pairs are exactly the class's edges — devices whose
+    out-edge is in another class send nothing, so per-tick edge traffic is
+    the sum of the true edge payloads, not S-1 copies of the global max
+    box.
+
+    ``mode`` is ``"exact"`` when every class holds edges of one shape
+    (class buffers carry zero padding — the fast path every chain-CNN
+    topology takes) and ``"boxed"`` when classes were collapsed into a
+    max-shape box (the general fallback, numerics identical).
+    """
+
+    mode: str
+    edge_shapes: tuple  # per interior edge: the exact element shape
+    class_shapes: tuple  # per class: the (rank-aligned) buffer elem shape
+    edge_class: tuple  # per interior edge: index into class_shapes
+
+    @property
+    def n_edges(self) -> int:
+        return len(self.edge_shapes)
+
+    @property
+    def n_classes(self) -> int:
+        return len(self.class_shapes)
+
+    def class_pairs(self, c: int) -> list:
+        """The ``ppermute`` permutation of class ``c``: (s, s+1) for every
+        stage s whose out-edge belongs to the class."""
+        return [
+            (e, e + 1) for e in range(self.n_edges) if self.edge_class[e] == c
+        ]
+
+    def class_bytes(self, itemsize: int = 4) -> tuple:
+        """Per-class buffer bytes for one element (no µbatch dim)."""
+        out = []
+        for cs in self.class_shapes:
+            n = 1
+            for d in cs:
+                n *= d
+            out.append(n * itemsize)
+        return tuple(out)
+
+    def padding_fraction(self, itemsize: int = 4) -> float:
+        """Fraction of the per-tick ICI traffic that is zero padding
+        (0.0 on the exact path)."""
+        sent = sum(
+            self.class_bytes(itemsize)[self.edge_class[e]]
+            for e in range(self.n_edges)
+        )
+        true = sum(
+            itemsize * _prod(self.edge_shapes[e]) for e in range(self.n_edges)
+        )
+        return 1.0 - true / sent if sent else 0.0
+
+
+def _prod(shape: tuple) -> int:
+    n = 1
+    for d in shape:
+        n *= d
+    return n
+
+
+def plan_edges(
+    io_specs: Sequence[StageIOSpec],
+    *,
+    mode: str = "auto",
+    max_classes: int = 4,
+) -> EdgePlan:
+    """Group the pipeline's interior edge shapes into ICI shape classes.
+
+    ``mode="auto"`` emits one class per distinct (rank-aligned) edge shape
+    — the exact-shape stream — collapsing everything into a single
+    max-shape box only when that would exceed ``max_classes`` in-flight
+    buffers; ``"exact"`` never collapses; ``"boxed"`` always does (the
+    general fallback the boxed executor used for every topology).
+    """
+    if mode not in EDGE_MODES:
+        raise ValueError(
+            f"unknown edge mode {mode!r}; expected one of {EDGE_MODES}"
+        )
+    io_specs = tuple(io_specs)
+    edges = tuple(
+        tuple(io_specs[s].out_shape) for s in range(len(io_specs) - 1)
+    )
+    if not edges:
+        return EdgePlan(
+            mode="exact", edge_shapes=(), class_shapes=(), edge_class=()
+        )
+    rank = max(len(e) for e in edges)
+    aligned = [_aligned(e, rank) for e in edges]
+    distinct = []
+    for a in aligned:
+        if a not in distinct:
+            distinct.append(a)
+    if mode == "boxed" or (mode == "auto" and len(distinct) > max_classes):
+        return EdgePlan(
+            mode="boxed",
+            edge_shapes=edges,
+            class_shapes=(_box_of(edges),),
+            edge_class=(0,) * len(edges),
+        )
+    return EdgePlan(
+        mode="exact",
+        edge_shapes=edges,
+        class_shapes=tuple(distinct),
+        edge_class=tuple(distinct.index(a) for a in aligned),
+    )
 
 
 def _box_stage_params(per_stage_params: Sequence):
@@ -252,6 +430,7 @@ class PipelinedRunner:
 
     cfg: PipelineConfig
     io_specs: tuple
+    edge_plan: EdgePlan  # how interior edges travel over ICI (see plan_edges)
     stacked_leaves: list  # (S, *box) per leaf slot, sharded P(stage_axis)
     _apply: Callable
 
@@ -340,11 +519,13 @@ def build_pipeline(
         raise ValueError(f"got {len(io_specs)} io specs for {S} stages")
     _validate_io_chain(io_specs)
 
-    # One box embeds every edge shape of the pipeline: stages slice their
-    # true input out, compute on exact shapes, and pad back in.
-    elem_box = _box_of(
-        [io.in_shape for io in io_specs] + [io.out_shape for io in io_specs]
+    # Size the ICI stream to the actual tensor traffic: group the S-1
+    # interior edges into shape classes (stage-0 input and final output
+    # never travel over ICI, so they inflate no buffer).
+    edge_plan = plan_edges(
+        io_specs, mode=cfg.edge_mode, max_classes=cfg.max_edge_classes
     )
+    class_pairs = [edge_plan.class_pairs(c) for c in range(edge_plan.n_classes)]
     elem_shape = tuple(io_specs[0].in_shape)
     out_elem = tuple(io_specs[-1].out_shape)
     box_dtype = dtype
@@ -354,26 +535,41 @@ def build_pipeline(
     sharding = jax.sharding.NamedSharding(mesh, P(ax))
     stacked_leaves = [jax.device_put(l, sharding) for l in stacked_leaves]
 
+    # Each edge adds one tick of pipeline delay per hop; the overlapped
+    # schedule double-buffers every hop (send slot this tick, ppermute
+    # next tick), doubling the fill/drain delay in exchange for making the
+    # collective independent of the same-tick stage body.
+    delay = (2 if cfg.overlap else 1) * (S - 1)
+    n_ticks = M + delay
+
     def _per_stage(leaves, mb_stream):
         # Inside shard_map: each boxed leaf has leading dim 1 (this stage's
         # slice); mb_stream is this data column's (M, mb_local, *elem).
         local = [l[0] for l in leaves]
         mb_local = mb_stream.shape[1]
-        box = (mb_local,) + elem_box
         stage_id = jax.lax.axis_index(ax)
+        slot_shapes = [
+            (mb_local,) + tuple(cs) for cs in edge_plan.class_shapes
+        ]
 
         def make_branch(s):
             shapes_s = meta["shapes"][s]
             dtypes_s = meta["dtypes"][s]
 
             def branch(operand):
-                x_box, lv_box = operand
+                x0, recv, lv_box = operand
                 lv = [
                     _unfit(lv_box[i], shapes_s[i]).astype(dtypes_s[i])
                     for i in range(len(shapes_s))
                 ]
                 params = jax.tree_util.tree_unflatten(meta["treedefs"][s], lv)
-                x = _unfit(x_box, (mb_local,) + tuple(io_specs[s].in_shape))
+                if s == 0:
+                    x = x0  # injected directly; never crossed ICI
+                else:
+                    x = _unfit_elem(
+                        recv[edge_plan.edge_class[s - 1]],
+                        io_specs[s].in_shape,
+                    )
                 y = stage_fns[s](params, x)
                 want = (mb_local,) + tuple(io_specs[s].out_shape)
                 if tuple(y.shape) != want:
@@ -381,49 +577,88 @@ def build_pipeline(
                         f"stage {s} produced {tuple(y.shape)}, but its "
                         f"StageIOSpec promises {want}"
                     )
-                return _fit(y.astype(box_dtype), box)
+                y = y.astype(box_dtype)
+                # Every branch returns identical avals: one send slot per
+                # class (this stage fills only its own out-edge's class)
+                # and the exact final-edge output (zeros off-final).
+                sends = tuple(
+                    _fit_elem(y, edge_plan.class_shapes[c])
+                    if s < S - 1 and edge_plan.edge_class[s] == c
+                    else jnp.zeros(slot_shapes[c], box_dtype)
+                    for c in range(edge_plan.n_classes)
+                )
+                out = (
+                    y
+                    if s == S - 1
+                    else jnp.zeros((mb_local,) + out_elem, box_dtype)
+                )
+                return sends, out
 
             return branch
 
         branches = [make_branch(s) for s in range(S)]
-        zero = jnp.zeros(box, box_dtype)
-        out_buf = jnp.zeros((M,) + box, box_dtype)
-
-        def tick(carry, t):
-            buf, out_buf = carry
-            # Stage 0 injects µbatch t (zeros once the stream is drained).
-            inject = jnp.where(t < M, t, 0)
-            x0 = jax.lax.dynamic_index_in_dim(
-                mb_stream, inject, axis=0, keepdims=False
-            )
-            x = jnp.where(stage_id == 0, _fit(x0.astype(box_dtype), box), buf)
-            y = jax.lax.switch(stage_id, branches, (x, local))
-            # µbatch index this stage just processed; valid window check.
-            mb_idx = t - stage_id
-            valid_out = jnp.logical_and(
-                stage_id == S - 1,
-                jnp.logical_and(mb_idx >= 0, mb_idx < M),
-            )
-            slot = jnp.clip(mb_idx, 0, M - 1)
-            out_buf = jax.lax.dynamic_update_index_in_dim(
-                out_buf,
-                jnp.where(
-                    valid_out,
-                    y,
-                    jax.lax.dynamic_index_in_dim(
-                        out_buf, slot, axis=0, keepdims=False
-                    ),
-                ),
-                slot,
-                axis=0,
-            )
-            # Stream the activation to the next stage (edge = physical link).
-            nxt = jax.lax.ppermute(y, ax, [(i, i + 1) for i in range(S - 1)])
-            return (nxt, out_buf), None
-
-        (_, out_buf), _ = jax.lax.scan(
-            tick, (zero, out_buf), jnp.arange(M + S - 1)
+        zero_slots = tuple(
+            jnp.zeros(shp, box_dtype) for shp in slot_shapes
         )
+        out_buf0 = jnp.zeros((M, mb_local) + out_elem, box_dtype)
+
+        def shift(slots):
+            # One ICI hop per shape class: partial permutation — only the
+            # stages whose out-edge is in the class send; everyone else's
+            # slot arrives as zeros (ppermute semantics).
+            return tuple(
+                jax.lax.ppermute(slots[c], ax, class_pairs[c])
+                for c in range(edge_plan.n_classes)
+            )
+
+        def write_out(out_buf, out, t):
+            # µbatch index this stage just finished; masked fill/drain.
+            mb_idx = t - (2 if cfg.overlap else 1) * stage_id
+            valid = jnp.logical_and(mb_idx >= 0, mb_idx < M)
+            slot = jnp.clip(mb_idx, 0, M - 1)
+            prev = jax.lax.dynamic_index_in_dim(
+                out_buf, slot, axis=0, keepdims=False
+            )
+            return jax.lax.dynamic_update_index_in_dim(
+                out_buf, jnp.where(valid, out, prev), slot, axis=0
+            )
+
+        def inject(t):
+            # Stage 0 injects µbatch t (zeros once the stream is drained).
+            i = jnp.where(t < M, t, 0)
+            x0 = jax.lax.dynamic_index_in_dim(
+                mb_stream, i, axis=0, keepdims=False
+            )
+            return x0.astype(box_dtype)
+
+        if cfg.overlap:
+
+            def tick(carry, t):
+                recv, send, out_buf = carry
+                # The hop of last tick's send slot is data-independent of
+                # this tick's switch body — XLA overlaps them.
+                new_recv = shift(send)
+                sends, out = jax.lax.switch(
+                    stage_id, branches, (inject(t), recv, local)
+                )
+                return (new_recv, sends, write_out(out_buf, out, t)), None
+
+            carry0 = (zero_slots, zero_slots, out_buf0)
+            (_, _, out_buf), _ = jax.lax.scan(
+                tick, carry0, jnp.arange(n_ticks)
+            )
+        else:
+
+            def tick(carry, t):
+                recv, out_buf = carry
+                sends, out = jax.lax.switch(
+                    stage_id, branches, (inject(t), recv, local)
+                )
+                return (shift(sends), write_out(out_buf, out, t)), None
+
+            (_, out_buf), _ = jax.lax.scan(
+                tick, (zero_slots, out_buf0), jnp.arange(n_ticks)
+            )
         # Leading singleton stage axis so out_specs can shard it.
         return out_buf[None]
 
@@ -451,17 +686,13 @@ def build_pipeline(
                 f"µbatch size {mb} not divisible by data axis "
                 f"{cfg.data_axis!r} ({D} devices)"
             )
-        stacked = shmap(leaves, microbatches)  # (S, M, mb, *elem_box)
-        final = stacked[-1]  # only stage S-1 wrote valid outputs
-        # Slice the true final-edge shape back out of the box (exact).
-        idx = (slice(None), slice(None)) + tuple(
-            slice(0, d) for d in _aligned(out_elem, len(elem_box))
-        )
-        return final[idx].reshape((M, mb) + out_elem)
+        stacked = shmap(leaves, microbatches)  # (S, M, mb, *out_elem)
+        # Output buffers are exact-shape; only stage S-1 wrote real values.
+        return stacked[-1]
 
     return PipelinedRunner(
-        cfg=cfg, io_specs=io_specs, stacked_leaves=stacked_leaves,
-        _apply=_apply,
+        cfg=cfg, io_specs=io_specs, edge_plan=edge_plan,
+        stacked_leaves=stacked_leaves, _apply=_apply,
     )
 
 

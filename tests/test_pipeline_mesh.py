@@ -7,12 +7,14 @@ multi-device job sets the flag and runs this file directly; on a normal
 (``test_mesh_suite_subprocess``) re-launches the file with forced host
 devices so the coverage survives everywhere.
 
-The property under test: the GPipe fill/steady/drain executor over boxed
-ICI buffers produces **bit-exact** outputs vs the single-device
-``CompiledDHM`` plan run at the same batch grain, for heterogeneous stage
-shapes (pool/stride shrink, channel growth), fp32 and quantized, across
-stage counts 2-4 and with data-parallel batch sharding on a 2D
-``(stage, data)`` mesh.
+The property under test: the GPipe fill/steady/drain executor produces
+**bit-exact** outputs vs the single-device ``CompiledDHM`` plan run at
+the same batch grain, for heterogeneous stage shapes (pool/stride
+shrink, channel growth), fp32 and quantized, across stage counts 2-4,
+with data-parallel batch sharding on a 2D ``(stage, data)`` mesh, on
+BOTH interior-edge paths (exact shape classes and the boxed max-shape
+fallback) and BOTH schedules (serial and overlapped double-buffered
+collectives).
 """
 import os
 import pathlib
@@ -191,6 +193,90 @@ class TestHeterogeneousPipeline:
 
 
 @needs_mesh
+class TestEdgePaths:
+    """The exact-shape and boxed ICI edge paths are interchangeable in
+    value space: bit-identical to each other and to the single-device
+    plan, for every topology and precision."""
+
+    @pytest.mark.parametrize("quant", ["fp32", "quant"])
+    @pytest.mark.parametrize("name", sorted(ALL_TOPOLOGIES))
+    def test_exact_vs_boxed_bit_identical(self, name, quant):
+        topo = ALL_TOPOLOGIES[name]
+        n_stages = min(3, len(topo.conv_layers))
+        bits = PAPER_BITS[name] if quant == "quant" else None
+        params = init_cnn(jax.random.PRNGKey(0), topo)
+        plan = _compile(topo, params, bits, n_stages)
+        mbs = _mbs(topo, m=3, mb=2)
+        mesh = jax.make_mesh((n_stages,), ("stage",))
+        exact = plan.run_pipelined(mbs, mesh=mesh, edge_mode="exact")
+        boxed = plan.run_pipelined(mbs, mesh=mesh, edge_mode="boxed")
+        ref = np.asarray(_seq_features(plan, mbs))
+        np.testing.assert_array_equal(np.asarray(exact), ref)
+        np.testing.assert_array_equal(np.asarray(boxed), ref)
+
+    @pytest.mark.parametrize("n_microbatches", [1, 2, 3, 6])
+    def test_overlap_matches_serial(self, n_microbatches):
+        """The overlapped double-buffered schedule computes the same bits
+        as the serial schedule at every µbatch count in {1, 2, S, 2S}
+        (S=3): only the tick count changes, never the values."""
+        topo = ALL_TOPOLOGIES["cifar10"]
+        params = init_cnn(jax.random.PRNGKey(0), topo)
+        plan = _compile(topo, params, None, 3)
+        mbs = _mbs(topo, m=n_microbatches, mb=2)
+        mesh = jax.make_mesh((3,), ("stage",))
+        serial = plan.run_pipelined(mbs, mesh=mesh, overlap=False)
+        overlapped = plan.run_pipelined(mbs, mesh=mesh, overlap=True)
+        ref = np.asarray(_seq_features(plan, mbs))
+        np.testing.assert_array_equal(np.asarray(serial), ref)
+        np.testing.assert_array_equal(np.asarray(overlapped), ref)
+
+    def test_overlap_with_data_sharding_and_quant(self):
+        """Overlap composes with 2D batch sharding and quantized stage
+        bodies — still bit-exact at the local grain."""
+        topo = ALL_TOPOLOGIES["svhn"]
+        params = init_cnn(jax.random.PRNGKey(0), topo)
+        plan = _compile(topo, params, PAPER_BITS["svhn"], 3)
+        D = 2
+        mbs = _mbs(topo, m=4, mb=4)
+        mesh = jax.make_mesh((3, D), ("stage", "data"))
+        out = plan.run_pipelined(
+            mbs, mesh=mesh, data_axis="data", overlap=True
+        )
+        np.testing.assert_array_equal(
+            np.asarray(out), np.asarray(_sharded_ref(plan, mbs, D))
+        )
+
+    def test_runner_reports_edge_path(self):
+        """Structural: the built runner exposes which edge path it took —
+        exact shape classes by default (every real topology), the boxed
+        max-shape class when forced or when auto exceeds the class
+        budget."""
+        from repro.core.dhm.engine import build_plan_pipeline
+        from repro.core.dhm.pipeline import PipelineConfig
+
+        topo = ALL_TOPOLOGIES["cifar10"]
+        params = init_cnn(jax.random.PRNGKey(0), topo)
+        plan = _compile(topo, params, None, 3)
+        mesh = jax.make_mesh((3,), ("stage",))
+        auto = build_plan_pipeline(
+            plan, mesh=mesh, cfg=PipelineConfig(3, 4)
+        )
+        assert auto.edge_plan.mode == "exact"
+        assert auto.edge_plan.n_classes == 2
+        assert auto.edge_plan.padding_fraction() == 0.0
+        boxed = build_plan_pipeline(
+            plan, mesh=mesh, cfg=PipelineConfig(3, 4, edge_mode="boxed")
+        )
+        assert boxed.edge_plan.mode == "boxed"
+        assert boxed.edge_plan.n_classes == 1
+        assert boxed.edge_plan.padding_fraction() > 0.0
+        squeezed = build_plan_pipeline(
+            plan, mesh=mesh, cfg=PipelineConfig(3, 4, max_edge_classes=1)
+        )
+        assert squeezed.edge_plan.mode == "boxed"
+
+
+@needs_mesh
 class TestEngineOnMesh:
     @pytest.mark.parametrize("quant", ["fp32", "quant"])
     def test_engine_pipelined_matches_single_device(self, quant):
@@ -215,6 +301,33 @@ class TestEngineOnMesh:
         )
         st = eng.stats()
         assert st.n_frames == 12 and st.frames_per_s > 0
+
+    def test_engine_tuned_config(self):
+        """A PipelineTuning overrides the engine's pipeline knobs
+        (µbatch count, grain, overlap, edge path) and the served logits
+        still match the single-device plan."""
+        from repro.core.dhm.engine import Engine
+        from repro.core.dhm.throughput import autotune_pipeline
+
+        topo = ALL_TOPOLOGIES["lenet5"]
+        params = init_cnn(jax.random.PRNGKey(0), topo)
+        plan = _compile(topo, params, None, 2)
+        measured = [{
+            "n_stages": 2, "n_microbatches": 2, "microbatch": 4,
+            "data": 2, "overlap": True, "edge_mode": "boxed",
+            "frames_per_s": 123.0,
+        }]
+        tuning = autotune_pipeline(plan, 4, measurements=measured)
+        assert tuning.source == "measured" and tuning.overlap
+        mesh = jax.make_mesh((2, 2), ("stage", "data"))
+        eng = Engine(plan, mesh=mesh, data_axis="data", tuning=tuning)
+        assert eng.group == 8 and eng.overlap
+        assert eng._runner.edge_plan.mode == "boxed"
+        x = jax.random.normal(jax.random.PRNGKey(5), (8, 28, 28, 1))
+        np.testing.assert_allclose(
+            np.asarray(eng.infer(x)), np.asarray(plan(x)),
+            rtol=1e-5, atol=1e-5,
+        )
 
     def test_engine_partial_group_padding(self):
         """Requests that don't fill a pipeline group are zero-padded and

@@ -1,0 +1,349 @@
+"""Unit tests for the throughput models and the µbatch autotuner.
+
+Three layers, none needing a mesh:
+- the paper's FPGA streaming law (Table 4 values must not drift);
+- edge planning (``plan_edges``): exact shape classes vs the boxed
+  fallback, per-class partial-permutation pairs, padding accounting —
+  including the structural guarantee that every real topology takes the
+  exact path;
+- the pipeline cost model + autotuner: estimate arithmetic, least-squares
+  recovery of the machine constants from synthetic sweeps, and the
+  measured-sweep-outranks-model rule.
+"""
+import json
+import types
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.dhm.pipeline import EdgePlan, StageIOSpec, plan_edges
+from repro.core.dhm.throughput import (
+    PipelineCostConstants,
+    autotune_pipeline,
+    candidate_grid,
+    dhm_throughput_gops,
+    estimate_pipeline,
+    fit_constants,
+    load_sweep_measurements,
+    pipeline_workload,
+    streaming_throughput,
+    sweep_sample,
+)
+from repro.models.cnn import ALL_TOPOLOGIES, init_cnn
+
+
+class TestStreamingLaw:
+    def test_streaming_throughput(self):
+        op_per_s, frames = streaming_throughput(100.0, 10.0, 1000.0)
+        assert frames == 100.0
+        assert op_per_s == 10000.0
+
+    def test_table4_values_unchanged(self):
+        """The thin wrapper reproduces the repo's Table 4 numbers
+        bit-for-bit (the paper-reproduction contract)."""
+        topo = ALL_TOPOLOGIES["lenet5"]
+        r = dhm_throughput_gops(topo, 65.71)
+        ops = topo.feature_extractor_ops()
+        samples = 28 * 28 * 1
+        assert r.frames_per_s == pytest.approx(65.71e6 / samples)
+        assert r.gops == pytest.approx(65.71e6 * ops / samples / 1e9)
+        assert r.gops == pytest.approx(316.48, abs=0.1)
+        assert "Gop/s" in r.summary()
+
+
+def _specs(*shapes):
+    return tuple(
+        StageIOSpec(in_shape=a, out_shape=b)
+        for a, b in zip(shapes[:-1], shapes[1:])
+    )
+
+
+class TestPlanEdges:
+    def test_exact_classes(self):
+        specs = _specs((8, 8, 4), (4, 4, 8), (4, 4, 8), (2, 2, 16))
+        ep = plan_edges(specs)
+        assert ep.mode == "exact"
+        assert ep.n_edges == 2
+        assert ep.edge_shapes == ((4, 4, 8), (4, 4, 8))
+        assert ep.n_classes == 1  # both interior edges share one shape
+        assert ep.class_pairs(0) == [(0, 1), (1, 2)]
+        assert ep.padding_fraction() == 0.0
+
+    def test_distinct_shapes_get_distinct_classes(self):
+        specs = _specs((8, 8, 4), (4, 4, 8), (2, 2, 16), (1, 1, 32))
+        ep = plan_edges(specs)
+        assert ep.mode == "exact"
+        assert ep.n_classes == 2
+        assert ep.edge_class == (0, 1)
+        assert ep.class_pairs(0) == [(0, 1)]
+        assert ep.class_pairs(1) == [(1, 2)]
+        assert ep.padding_fraction() == 0.0
+
+    def test_boxed_fallback(self):
+        specs = _specs((8, 8, 4), (4, 4, 8), (2, 2, 16), (1, 1, 32))
+        ep = plan_edges(specs, mode="boxed")
+        assert ep.mode == "boxed"
+        assert ep.n_classes == 1
+        assert ep.class_shapes == ((4, 4, 16),)  # elementwise max box
+        assert ep.edge_class == (0, 0)
+        assert ep.class_pairs(0) == [(0, 1), (1, 2)]
+        assert ep.padding_fraction() > 0.0
+
+    def test_auto_collapses_past_class_budget(self):
+        specs = _specs((8, 8, 4), (4, 4, 8), (2, 2, 16), (1, 1, 32))
+        ep = plan_edges(specs, max_classes=1)
+        assert ep.mode == "boxed"
+        assert plan_edges(specs, max_classes=2).mode == "exact"
+
+    def test_single_stage_has_no_edges(self):
+        ep = plan_edges(_specs((8, 8, 4), (4, 4, 8)))
+        assert ep.n_edges == 0 and ep.n_classes == 0
+        assert ep.mode == "exact"
+
+    def test_bad_mode_raises(self):
+        with pytest.raises(ValueError, match="edge mode"):
+            plan_edges(_specs((4,), (2,)), mode="wat")
+
+    @pytest.mark.parametrize("name", sorted(ALL_TOPOLOGIES))
+    def test_every_topology_takes_exact_path(self, name):
+        """Structural: every shipped topology's interior edges fit the
+        class budget, so the compiled plan streams exact-shape edges —
+        the boxed fallback exists but nothing in the repo needs it."""
+        from repro.core.dhm.compiler import compile_dhm
+
+        topo = ALL_TOPOLOGIES[name]
+        params = init_cnn(jax.random.PRNGKey(0), topo)
+        plan = compile_dhm(
+            topo, params, n_stages=min(3, len(topo.conv_layers))
+        )
+        ep = plan.edge_plan()
+        assert ep.mode == "exact"
+        assert ep.padding_fraction() == 0.0
+        assert ep.edge_shapes == plan.edge_shapes()
+        assert plan.edge_plan(mode="boxed").mode == "boxed"
+
+
+def _fake_plan(stage_flops, shapes):
+    """A duck-typed plan: .stages with cost_flops + io, .n_stages."""
+    specs = _specs(*shapes)
+    stages = [
+        types.SimpleNamespace(cost_flops=f, io=s)
+        for f, s in zip(stage_flops, specs)
+    ]
+    return types.SimpleNamespace(stages=stages, n_stages=len(stages))
+
+
+PLAN_A = _fake_plan(
+    (1.0e6, 2.0e6, 1.5e6),
+    ((16, 16, 4), (8, 8, 8), (4, 4, 16), (2, 2, 32)),
+)
+PLAN_B = _fake_plan(
+    (4.0e6, 3.0e6, 5.0e6),
+    ((12, 12, 6), (6, 6, 24), (3, 3, 48), (1, 1, 96)),
+)
+
+
+class TestEstimate:
+    def test_workload(self):
+        flops, edge_bytes = pipeline_workload(PLAN_A)
+        assert flops == (1.0e6, 2.0e6, 1.5e6)
+        assert edge_bytes == (4.0 * 8 * 8 * 8, 4.0 * 4 * 4 * 16)
+
+    def test_serial_arithmetic(self):
+        c = PipelineCostConstants(1e9, 1e9, 1e-4)
+        est = estimate_pipeline(
+            PLAN_A, n_microbatches=4, microbatch=8, data=2, constants=c
+        )
+        # mb_local=4; slowest stage 2e6 flops -> 8e-6 s compute.
+        assert est.t_compute_s == pytest.approx(2e6 * 4 / 1e9)
+        sent = 4.0 * (8 * 8 * 8 + 4 * 4 * 16)
+        assert est.t_comm_s == pytest.approx(sent * 4 / 1e9)
+        assert est.n_ticks == 4 + 2
+        assert est.t_tick_s == pytest.approx(
+            1e-4 + est.t_compute_s + est.t_comm_s
+        )
+        assert est.frames_per_s == pytest.approx(
+            4 * 8 / (est.n_ticks * est.t_tick_s)
+        )
+        assert est.bubble_fraction == pytest.approx(2 / 6)
+        assert est.imbalance == pytest.approx(2.0e6 / 1.5e6)
+
+    def test_overlap_hides_comm_but_adds_ticks(self):
+        c = PipelineCostConstants(1e9, 1e9, 0.0)
+        ser = estimate_pipeline(
+            PLAN_A, n_microbatches=8, microbatch=8, constants=c
+        )
+        ov = estimate_pipeline(
+            PLAN_A, n_microbatches=8, microbatch=8, overlap=True,
+            constants=c,
+        )
+        assert ov.n_ticks == 8 + 4 and ser.n_ticks == 8 + 2
+        assert ov.t_tick_s == pytest.approx(
+            max(ser.t_compute_s, ser.t_comm_s)
+        )
+        assert ser.t_tick_s == pytest.approx(
+            ser.t_compute_s + ser.t_comm_s
+        )
+
+    def test_boxed_edges_cost_their_padding(self):
+        c = PipelineCostConstants(1e9, 1e9, 0.0)
+        exact = estimate_pipeline(
+            PLAN_A, n_microbatches=4, microbatch=8, constants=c
+        )
+        boxed = estimate_pipeline(
+            PLAN_A, n_microbatches=4, microbatch=8, edge_mode="boxed",
+            constants=c,
+        )
+        assert boxed.t_comm_s > exact.t_comm_s
+
+    def test_indivisible_grain_raises(self):
+        with pytest.raises(ValueError, match="not divisible"):
+            estimate_pipeline(
+                PLAN_A, n_microbatches=2, microbatch=9, data=2
+            )
+
+
+class TestFit:
+    def test_recovers_planted_constants(self):
+        """Synthetic sweeps generated from known machine constants are
+        inverted exactly by the least-squares fit (two plans with
+        different compute/comm ratios make the system full-rank)."""
+        true = PipelineCostConstants(3e9, 2e9, 5e-5)
+        samples = []
+        for plan in (PLAN_A, PLAN_B):
+            for M in (2, 4, 8):
+                for mb in (8, 16):
+                    est = estimate_pipeline(
+                        plan, n_microbatches=M, microbatch=mb,
+                        constants=true,
+                    )
+                    samples.append(
+                        sweep_sample(
+                            plan, n_microbatches=M, microbatch=mb,
+                            data=1, frames_per_s=est.frames_per_s,
+                        )
+                    )
+        fit = fit_constants(samples)
+        assert fit.source == "fitted"
+        assert fit.flops_per_s == pytest.approx(3e9, rel=1e-6)
+        assert fit.bytes_per_s == pytest.approx(2e9, rel=1e-6)
+        assert fit.tick_overhead_s == pytest.approx(5e-5, rel=1e-6)
+
+    def test_degenerate_sweep_falls_back_to_defaults(self):
+        # One plan only: the FLOP and byte features are collinear.
+        true = PipelineCostConstants(3e9, 2e9, 5e-5)
+        samples = []
+        for M in (2, 4, 8):
+            est = estimate_pipeline(
+                PLAN_A, n_microbatches=M, microbatch=8, constants=true
+            )
+            samples.append(
+                sweep_sample(
+                    PLAN_A, n_microbatches=M, microbatch=8, data=1,
+                    frames_per_s=est.frames_per_s,
+                )
+            )
+        assert fit_constants(samples).source == "default"
+
+    def test_too_few_samples_fall_back(self):
+        assert fit_constants([]).source == "default"
+
+    def test_overlap_samples_excluded(self):
+        s = sweep_sample(
+            PLAN_A, n_microbatches=4, microbatch=8, data=1,
+            frames_per_s=100.0, overlap=True,
+        )
+        assert fit_constants([s] * 5).source == "default"
+
+
+class TestAutotune:
+    MEASURED = [
+        {"n_stages": 3, "n_microbatches": 4, "microbatch": 16, "data": 2,
+         "overlap": False, "edge_mode": "auto", "frames_per_s": 400.0},
+        {"n_stages": 3, "n_microbatches": 8, "microbatch": 32, "data": 2,
+         "overlap": False, "edge_mode": "auto", "frames_per_s": 700.0},
+        {"n_stages": 3, "n_microbatches": 2, "microbatch": 16, "data": 2,
+         "overlap": True, "edge_mode": "auto", "frames_per_s": 250.0},
+    ]
+
+    def test_measured_outranks_model(self):
+        """With sweep measurements on record the tuner returns the best
+        measured point — by construction within 20% (indeed 0%) of the
+        best measured sweep fps, the acceptance contract."""
+        t = autotune_pipeline(PLAN_A, 8, measurements=self.MEASURED)
+        assert t.source == "measured"
+        assert t.n_microbatches == 8 and t.microbatch == 32
+        assert t.frames_per_s == 700.0
+        best = max(m["frames_per_s"] for m in self.MEASURED)
+        assert t.frames_per_s >= 0.8 * best
+        assert t.estimate is not None
+
+    def test_mismatched_measurements_ignored(self):
+        """Measurements for a different mesh split don't leak in."""
+        other = [dict(self.MEASURED[0], data=4, frames_per_s=9999.0)]
+        t = autotune_pipeline(PLAN_A, 8, measurements=other)
+        assert t.source == "model"
+
+    def test_model_fallback_picks_grid_best(self):
+        c = PipelineCostConstants(1e9, 1e9, 1e-3)
+        t = autotune_pipeline(PLAN_A, 8, constants=c)
+        assert t.source == "model"
+        cands = candidate_grid(PLAN_A, 8)
+        ests = [
+            estimate_pipeline(PLAN_A, constants=c, **cand)
+            for cand in cands
+        ]
+        assert t.frames_per_s == pytest.approx(
+            max(e.frames_per_s for e in ests)
+        )
+
+    def test_candidate_grid_respects_data_split(self):
+        cands = candidate_grid(PLAN_A, 8, grains=(6, 8, 16))
+        assert cands and all(c["data"] == 2 for c in cands)
+        # grain 6 doesn't divide across data=2... it does; 7 would not.
+        cands7 = candidate_grid(PLAN_A, 8, grains=(7,))
+        assert cands7 == []
+
+    def test_no_candidates_raises(self):
+        with pytest.raises(ValueError, match="no pipeline candidate"):
+            autotune_pipeline(PLAN_A, 8, grains=(7,))
+
+    def test_summary_strings(self):
+        t = autotune_pipeline(PLAN_A, 8, measurements=self.MEASURED)
+        assert "measured" in t.summary()
+        assert t.estimate.summary()
+
+
+class TestLoadSweep:
+    def test_filters_topology_and_label(self, tmp_path):
+        rows = [
+            {"path": "pipeline_sweep", "topology": "cifar10",
+             "label": "fp32", "frames_per_s": 100.0},
+            {"path": "pipeline_sweep", "topology": "svhn",
+             "label": "fp32", "frames_per_s": 200.0},
+            {"path": "e2e_pipelined", "topology": "cifar10",
+             "label": "fp32", "frames_per_s": 300.0},
+        ]
+        hist = tmp_path / "BENCH_history.jsonl"
+        hist.write_text(
+            json.dumps({"git_sha": "x", "rows": rows}) + "\n"
+            + "not json\n"
+            + json.dumps({"git_sha": "y", "rows": rows[:1]}) + "\n"
+        )
+        got = load_sweep_measurements(hist, "cifar10")
+        assert [r["frames_per_s"] for r in got] == [100.0, 100.0]
+        assert load_sweep_measurements(hist, "svhn")[0]["frames_per_s"] == 200.0
+        assert load_sweep_measurements(tmp_path / "absent.jsonl", "x") == []
+
+
+class TestEngineKnobs:
+    def test_auto_tuning_needs_mesh(self):
+        from repro.core.dhm.engine import Engine
+        from repro.core.dhm.compiler import compile_dhm
+
+        topo = ALL_TOPOLOGIES["lenet5"]
+        params = init_cnn(jax.random.PRNGKey(0), topo)
+        plan = compile_dhm(topo, params, n_stages=2)
+        with pytest.raises(ValueError, match="needs a mesh"):
+            Engine(plan, n_microbatches="auto")
