@@ -27,6 +27,11 @@ else
 fi
 python -m pytest "${PYTEST_ARGS[@]}"
 
+echo "== static plan verifier (no-FLOPs invariant check) =="
+# Fast subset: trace-and-verify two topologies. CI's `static` job runs
+# the full matrix (all topologies, fp32 + quant, + AST lint + ruff).
+python -m repro.analysis verify --topology lenet5,cifar10
+
 HISTORY_LINES_BEFORE=0
 [[ -f BENCH_history.jsonl ]] && HISTORY_LINES_BEFORE=$(wc -l < BENCH_history.jsonl)
 export HISTORY_LINES_BEFORE

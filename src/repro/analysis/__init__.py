@@ -1,0 +1,35 @@
+"""Static analysis for DHM plans: a plan verifier (named jaxpr/resource
+invariants over ``CompiledDHM`` artifacts, no FLOPs executed) and an AST
+linter (this repo's jax sharp edges as DHM0xx rules).
+
+CLI: ``python -m repro.analysis [verify|lint|all] --topology all``.
+
+Exports resolve lazily so importing the package never pulls in jax —
+``__main__`` must be able to set XLA_FLAGS first, and the linter runs
+accelerator-free.
+"""
+
+_EXPORTS = {
+    "Finding": "repro.analysis.findings",
+    "render_report": "repro.analysis.findings",
+    "count_primitive": "repro.analysis.jaxpr_utils",
+    "count_primitive_in_pallas": "repro.analysis.jaxpr_utils",
+    "Invariant": "repro.analysis.invariants",
+    "REGISTRY": "repro.analysis.invariants",
+    "verify_plan": "repro.analysis.verify",
+    "check_plan": "repro.analysis.verify",
+    "make_pipeline_probe": "repro.analysis.verify",
+    "RULES": "repro.analysis.ast_lint",
+    "lint_paths": "repro.analysis.ast_lint",
+    "lint_source": "repro.analysis.ast_lint",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        import importlib
+
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

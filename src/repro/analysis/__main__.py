@@ -1,0 +1,17 @@
+"""Module entrypoint. The pipelined-closure probe needs a stage mesh, so
+force 8 emulated host devices BEFORE anything imports jax — the flag is
+read once at backend init and ignored afterwards."""
+
+import os
+import sys
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=8"
+    ).strip()
+
+from repro.analysis.cli import main  # noqa: E402 — after the env mutation
+
+if __name__ == "__main__":
+    sys.exit(main())

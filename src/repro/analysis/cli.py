@@ -1,0 +1,212 @@
+"""``python -m repro.analysis [verify|lint|all]`` — the static gate.
+
+``verify`` compiles each requested topology (fp32 + quant, mirroring the
+e2e bench's per-network paper bitwidths) and abstractly interprets three
+artifacts per combination against the invariant registry:
+
+- the default-backend single-device plan (plan/structure/resource scopes),
+- a ``pallas_interpret`` probe plan, the only CPU path where pallas_call
+  bodies are visible to tracing (kernel-structure + traced-working-set),
+- the pipelined closure on a stage mesh (pipeline scope: the EdgePlan's
+  collectives). The module entrypoint forces 8 host devices before jax
+  loads, so this works from single-device CI runners.
+
+``lint`` runs the DHM rule set over ``src/repro`` and ``benchmarks``.
+No model is ever executed. Exit status 1 iff any error-severity finding.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# Per-network paper bitwidths for the "quant" variant — same contract the
+# e2e bench measures (benchmarks/e2e_bench.py PAPER_BITS).
+PAPER_BITS = {
+    "lenet5": 3, "cifar10": 6, "svhn": 6,
+    "cifar10_full": 6, "cifar10_strided": 6,
+}
+_DEFAULT_BITS = 6
+_MAX_PIPELINE_STAGES = 4
+
+
+def _parse_args(argv):
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="DHM static analysis: plan verifier + AST lint",
+    )
+    p.add_argument(
+        "command", choices=("verify", "lint", "all"),
+        help="verify compiled plans, lint sources, or both",
+    )
+    p.add_argument(
+        "--topology", default="all",
+        help="comma-separated topology names, or 'all' (default)",
+    )
+    p.add_argument(
+        "--quant", default="all", choices=("all", "fp32", "quant"),
+        help="which quantization variants to verify (default all)",
+    )
+    p.add_argument(
+        "--format", default="text", choices=("text", "json"),
+        dest="fmt", help="report format on stdout",
+    )
+    p.add_argument(
+        "--out", default=None,
+        help="also write the JSON findings report to this path",
+    )
+    p.add_argument(
+        "--paths", nargs="*", default=None,
+        help="lint roots (default: src/repro and benchmarks)",
+    )
+    p.add_argument(
+        "--no-pipeline", action="store_true",
+        help="skip the pipelined-closure probe (single-device quick mode)",
+    )
+    p.add_argument(
+        "--batch", type=int, default=2,
+        help="abstract batch size used by the probe traces",
+    )
+    return p.parse_args(argv)
+
+
+def _repo_paths():
+    """(repo_root, default lint roots) derived from the installed
+    package, so the CLI works from any cwd."""
+    import os
+
+    import repro
+
+    pkg_dir = os.path.abspath(list(repro.__path__)[0])
+    repo_root = os.path.dirname(os.path.dirname(pkg_dir))
+    roots = [pkg_dir]
+    bench = os.path.join(repo_root, "benchmarks")
+    if os.path.isdir(bench):
+        roots.append(bench)
+    return repo_root, roots
+
+
+def _select_topologies(spec: str):
+    from repro.models.cnn import ALL_TOPOLOGIES
+
+    if spec == "all":
+        return dict(ALL_TOPOLOGIES)
+    out = {}
+    for name in spec.split(","):
+        name = name.strip()
+        if name not in ALL_TOPOLOGIES:
+            raise SystemExit(
+                f"unknown topology {name!r}; have {sorted(ALL_TOPOLOGIES)}"
+            )
+        out[name] = ALL_TOPOLOGIES[name]
+    return out
+
+
+def run_verify(
+    topologies, *, quants="all", batch=2, pipeline=True, log=lambda s: None
+):
+    """Verify every requested topology x quant; returns findings."""
+    import jax
+
+    from repro.analysis.verify import make_pipeline_probe, verify_plan
+    from repro.core.dhm.compiler import QuantSpec, compile_dhm
+    from repro.models.cnn import init_cnn
+
+    findings = []
+    for name, topo in topologies.items():
+        params = init_cnn(jax.random.PRNGKey(0), topo)
+        bits = PAPER_BITS.get(name, _DEFAULT_BITS)
+        variants = [
+            ("fp32", QuantSpec()),
+            ("quant", QuantSpec(weight_bits=bits, act_bits=bits)),
+        ]
+        if quants != "all":
+            variants = [v for v in variants if v[0] == quants]
+        for qlabel, qs in variants:
+            where = f"{name}/{qlabel}"
+            log(f"verify {where}")
+            plan = compile_dhm(topo, params, quant=qs)
+            findings += verify_plan(
+                plan,
+                scopes=("plan", "structure", "resource"),
+                where=where,
+                batch=batch,
+            )
+            # pallas_call bodies are only visible to tracing on the
+            # interpret backend (CPU "pallas" falls back to XLA): run the
+            # kernel-body invariants against a dedicated probe plan.
+            probe_plan = compile_dhm(
+                topo, params, quant=qs, backend="pallas_interpret"
+            )
+            findings += verify_plan(
+                probe_plan,
+                ids=("V001", "V002", "V003", "V007", "V203"),
+                where=f"{where}/interpret",
+                batch=batch,
+            )
+            if pipeline:
+                S = min(
+                    len(topo.conv_layers), _MAX_PIPELINE_STAGES,
+                    len(jax.devices()),
+                )
+                if S >= 2:
+                    pipe_plan = compile_dhm(
+                        topo, params, quant=qs, n_stages=S
+                    )
+                    probe = make_pipeline_probe(pipe_plan, microbatch=batch)
+                    findings += verify_plan(
+                        pipe_plan,
+                        scopes=("plan", "pipeline"),
+                        where=f"{where}/pipelined",
+                        batch=batch,
+                        pipeline=probe,
+                    )
+                else:
+                    log(f"  pipelined probe skipped for {where}: "
+                        f"{len(jax.devices())} device(s)")
+    return findings
+
+
+def run_lint(paths=None):
+    from repro.analysis.ast_lint import lint_paths
+
+    root, default_roots = _repo_paths()
+    return lint_paths(paths or default_roots, root=root)
+
+
+def main(argv=None) -> int:
+    args = _parse_args(argv if argv is not None else sys.argv[1:])
+    from repro.analysis.findings import render_report
+
+    log = (lambda s: print(s, file=sys.stderr)) if args.fmt == "text" else (
+        lambda s: None
+    )
+    findings = []
+    if args.command in ("verify", "all"):
+        findings += run_verify(
+            _select_topologies(args.topology),
+            quants=args.quant,
+            batch=args.batch,
+            pipeline=not args.no_pipeline,
+            log=log,
+        )
+    if args.command in ("lint", "all"):
+        findings += run_lint(args.paths)
+
+    n_err = sum(1 for f in findings if f.is_error)
+    report = {
+        "command": args.command,
+        "findings": [f.to_json() for f in findings],
+        "errors": n_err,
+        "warnings": len(findings) - n_err,
+    }
+    if args.out:
+        with open(args.out, "w", encoding="utf-8") as fh:
+            json.dump(report, fh, indent=2)
+            fh.write("\n")
+    if args.fmt == "json":
+        print(json.dumps(report, indent=2))
+    else:
+        print(render_report(findings, header=f"== repro.analysis {args.command} =="))
+    return 1 if n_err else 0

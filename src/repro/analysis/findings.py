@@ -1,0 +1,59 @@
+"""Finding: the one record type both analysis engines emit.
+
+Kept free of jax imports so the AST linter (and the CLI's ``--format``
+plumbing) can run without touching the accelerator stack.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+SEVERITIES = ("error", "warning")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One diagnostic from the plan verifier or the AST linter.
+
+    ``rule`` is the stable ID (``V0xx``/``V1xx``/``V2xx``/``V3xx`` for
+    plan invariants, ``DHM0xx`` for lint rules); ``where`` locates it —
+    ``file:line`` for lint, ``topology/quant/artifact`` for plan checks.
+    """
+
+    rule: str
+    name: str
+    severity: str  # "error" | "warning"
+    message: str
+    where: str = ""
+
+    def __post_init__(self):
+        if self.severity not in SEVERITIES:
+            raise ValueError(
+                f"severity must be one of {SEVERITIES}, got {self.severity!r}"
+            )
+
+    @property
+    def is_error(self) -> bool:
+        return self.severity == "error"
+
+    def render(self) -> str:
+        loc = f"{self.where}: " if self.where else ""
+        return f"{loc}{self.severity.upper()} [{self.rule}] {self.message}"
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def has_errors(findings) -> bool:
+    return any(f.is_error for f in findings)
+
+
+def render_report(findings, *, header: str = "") -> str:
+    """Human-readable multi-line report (``--format text``)."""
+    lines = [header] if header else []
+    for f in findings:
+        lines.append(f.render())
+    n_err = sum(1 for f in findings if f.is_error)
+    n_warn = len(findings) - n_err
+    lines.append(f"{n_err} error(s), {n_warn} warning(s)")
+    return "\n".join(lines)

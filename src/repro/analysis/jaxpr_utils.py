@@ -1,0 +1,112 @@
+"""Jaxpr-walking helpers — the ONE home of ``count_primitive``.
+
+Previously three tests each hand-rolled their own ``_count_primitive``;
+they (and the plan verifier) now share these. Everything duck-types on
+``.eqns`` / ``.jaxpr`` rather than isinstance-checking ``jax.core``
+classes, so the module imports without pulling in jax — the CLI's lint
+path stays accelerator-free.
+"""
+
+from __future__ import annotations
+
+
+def subjaxprs(val):
+    """Yield every (open) jaxpr reachable from an ``eqn.params`` value —
+    a ClosedJaxpr, a bare Jaxpr, or (nested) lists/tuples of either."""
+    if hasattr(val, "jaxpr") and hasattr(getattr(val, "jaxpr"), "eqns"):
+        yield val.jaxpr  # ClosedJaxpr
+    elif hasattr(val, "eqns"):
+        yield val  # Jaxpr
+    elif isinstance(val, (list, tuple)):
+        for v in val:
+            yield from subjaxprs(v)
+
+
+def as_jaxpr(j):
+    """Accept a Jaxpr or ClosedJaxpr (or anything make_jaxpr returned)."""
+    return j.jaxpr if hasattr(j, "jaxpr") and hasattr(j.jaxpr, "eqns") else j
+
+
+def iter_eqns(jaxpr, *, into: str = "all"):
+    """Depth-first over every eqn of ``jaxpr`` and its sub-jaxprs.
+
+    ``into="all"`` descends into every sub-jaxpr (pjit, scan, cond,
+    pallas_call bodies alike); ``into="outside_pallas"`` stops at
+    pallas_call boundaries (yields the pallas_call eqn itself but not its
+    body); ``into="inside_pallas"`` yields only eqns that live inside
+    some pallas_call body.
+    """
+    jaxpr = as_jaxpr(jaxpr)
+
+    def walk(j, in_pallas):
+        for eqn in j.eqns:
+            is_pallas = eqn.primitive.name == "pallas_call"
+            if into == "all":
+                yield eqn
+            elif into == "outside_pallas" and not in_pallas:
+                yield eqn
+            elif into == "inside_pallas" and in_pallas:
+                yield eqn
+            if into == "outside_pallas" and is_pallas:
+                continue
+            for v in eqn.params.values():
+                for sub in subjaxprs(v):
+                    yield from walk(sub, in_pallas or is_pallas)
+
+    yield from walk(jaxpr, False)
+
+
+def count_primitive(jaxpr, name: str, *, into: str = "all") -> int:
+    """Recursively count occurrences of primitive ``name`` in a jaxpr
+    (descends into pjit/scan/pallas_call sub-jaxprs per ``into``)."""
+    return sum(
+        1 for eqn in iter_eqns(jaxpr, into=into) if eqn.primitive.name == name
+    )
+
+
+def count_primitive_in_pallas(jaxpr, name: str) -> int:
+    """Count occurrences of ``name`` that live INSIDE pallas_call bodies."""
+    return count_primitive(jaxpr, name, into="inside_pallas")
+
+
+def find_primitive(jaxpr, name: str, *, into: str = "all") -> list:
+    """All eqns whose primitive is ``name`` (same descent as iter_eqns)."""
+    return [
+        eqn for eqn in iter_eqns(jaxpr, into=into)
+        if eqn.primitive.name == name
+    ]
+
+
+def aval_bytes(aval) -> int:
+    """Bytes of one abstract value (0 for non-array avals)."""
+    shape = getattr(aval, "shape", None)
+    dtype = getattr(aval, "dtype", None)
+    if shape is None or dtype is None:
+        return 0
+    n = 1
+    for d in shape:
+        n *= int(d)
+    return n * dtype.itemsize
+
+
+def _is_float(dt) -> bool:
+    # kind == "f" misses the ml_dtypes extension types (bfloat16, fp8
+    # variants register with kind "V") — match on the dtype name too.
+    return dt is not None and (dt.kind == "f" or "float" in str(dt))
+
+
+def float_avals(jaxpr, *, into: str = "all"):
+    """Every floating-point aval appearing as an eqn output (plus the
+    jaxpr's own outputs) — the surface the dtype-drift invariant scans."""
+    jaxpr = as_jaxpr(jaxpr)
+    seen = []
+    for eqn in iter_eqns(jaxpr, into=into):
+        for var in eqn.outvars:
+            aval = getattr(var, "aval", None)
+            if _is_float(getattr(aval, "dtype", None)):
+                seen.append(aval)
+    for var in jaxpr.outvars:
+        aval = getattr(var, "aval", None)
+        if _is_float(getattr(aval, "dtype", None)):
+            seen.append(aval)
+    return seen

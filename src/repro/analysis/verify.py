@@ -1,0 +1,208 @@
+"""Plan verifier: abstract-interpret a ``CompiledDHM`` against the
+invariant registry — ``jax.eval_shape`` / ``jax.make_jaxpr`` only, no
+FLOPs executed.
+
+``verify_plan`` returns findings; ``check_plan`` (what
+``CompiledDHM.self_check`` now delegates to) raises ``PlanCheckError``
+carrying the failed invariant IDs, so the serving engine's rung probe
+and the CLI enforce the same registry.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Optional
+
+from repro.analysis.findings import Finding
+from repro.analysis.invariants import REGISTRY, SCOPES
+
+
+@dataclasses.dataclass
+class PipelineProbe:
+    """A traced ``run_pipelined`` closure plus the EdgePlan it must
+    realize: what the pipeline-scope invariants inspect."""
+
+    jaxpr: object  # make_jaxpr(runner.apply)(leaves, microbatches)
+    edge_plan: object
+    cfg: object
+    mb_local: int  # per-device microbatch rows each ppermute moves
+
+
+class ProbeContext:
+    """Cached abstract traces of one plan artifact; the argument every
+    invariant check receives."""
+
+    def __init__(self, plan, *, where: str = "", batch: int = 2,
+                 pipeline: Optional[PipelineProbe] = None):
+        self.plan = plan
+        self.batch = batch
+        self.where = where or getattr(plan.topo, "name", "plan")
+        self.pipeline = pipeline
+        self._features_jaxpr = None
+        self._forward_jaxpr = None
+        self._donated = None
+
+    # -- finding constructors ------------------------------------------------
+
+    def error(self, rule: str, message: str) -> Finding:
+        return Finding(
+            rule=rule, name=REGISTRY[rule].name, severity="error",
+            message=message, where=self.where,
+        )
+
+    def warning(self, rule: str, message: str) -> Finding:
+        return Finding(
+            rule=rule, name=REGISTRY[rule].name, severity="warning",
+            message=message, where=self.where,
+        )
+
+    # -- cached abstract traces ----------------------------------------------
+
+    def _input_spec(self):
+        import jax
+        import jax.numpy as jnp
+
+        h, w = self.plan.topo.input_shape
+        c = self.plan.topo.input_channels
+        return jax.ShapeDtypeStruct((self.batch, h, w, c), jnp.float32)
+
+    def features_jaxpr(self):
+        """Trace of the conv stack alone (no FC head): the surface the
+        kernel-structure counts run against."""
+        import jax
+
+        if self._features_jaxpr is None:
+            self._features_jaxpr = jax.make_jaxpr(self.plan.features)(
+                self._input_spec()
+            )
+        return self._features_jaxpr
+
+    def forward_jaxpr(self):
+        """Trace of the end-to-end jitted closure (features + head)."""
+        import jax
+
+        if self._forward_jaxpr is None:
+            self._forward_jaxpr = jax.make_jaxpr(
+                self.plan.jitted_forward()
+            )(self._input_spec())
+        return self._forward_jaxpr
+
+    def lower_donated(self):
+        """(lowered_text, donation_warning_fired) of
+        ``jitted_forward(donate=True)``; (None, False) when the plan has
+        no such surface."""
+        if self._donated is None:
+            fwd = getattr(self.plan, "jitted_forward", None)
+            if fwd is None:
+                self._donated = (None, False)
+            else:
+                with warnings.catch_warnings(record=True) as caught:
+                    warnings.simplefilter("always")
+                    lowered = fwd(donate=True).lower(self._input_spec())
+                    text = lowered.as_text()
+                    if (
+                        "jax.buffer_donor" not in text
+                        and "tf.aliasing_output" not in text
+                        and not _donation_warned(caught)
+                    ):
+                        # Lowering alone may defer the donation check to
+                        # compile time — pay the compile before concluding
+                        # the donation was dropped.
+                        lowered.compile()
+                self._donated = (text, _donation_warned(caught))
+        return self._donated
+
+
+def _donation_warned(caught) -> bool:
+    return any("donated" in str(w.message).lower() for w in caught)
+
+
+def verify_plan(
+    plan,
+    *,
+    scopes=None,
+    ids=None,
+    where: str = "",
+    batch: int = 2,
+    pipeline: Optional[PipelineProbe] = None,
+) -> list:
+    """Run the invariant registry against one plan artifact.
+
+    ``scopes`` restricts to registry scopes (default: all);
+    ``ids`` restricts to specific invariant IDs. Returns the findings
+    (possibly empty); never executes the model.
+    """
+    if scopes is None:
+        scopes = SCOPES
+    unknown = set(scopes) - set(SCOPES)
+    if unknown:
+        raise ValueError(f"unknown scopes {sorted(unknown)}; have {SCOPES}")
+    ctx = ProbeContext(plan, where=where, batch=batch, pipeline=pipeline)
+    findings = []
+    for inv in REGISTRY.values():
+        if inv.scope not in scopes:
+            continue
+        if ids is not None and inv.id not in ids:
+            continue
+        findings.extend(inv.fn(ctx))
+    return findings
+
+
+def check_plan(plan) -> None:
+    """The serving-fitness probe: run the ``plan``-scope invariants and
+    raise ``PlanCheckError`` (carrying the failed invariant IDs) on any
+    error — what ``CompiledDHM.self_check`` and the engine's rung
+    activation enforce."""
+    findings = [f for f in verify_plan(plan, scopes=("plan",)) if f.is_error]
+    if findings:
+        from repro.core.dhm.compiler import PlanCheckError
+
+        ids = sorted({f.rule for f in findings})
+        detail = "; ".join(f.message for f in findings)
+        raise PlanCheckError(
+            f"{getattr(plan.topo, 'name', 'plan')}: plan check failed "
+            f"[{', '.join(ids)}]: {detail}",
+            invariants=ids,
+        )
+
+
+def make_pipeline_probe(
+    plan, *, mesh=None, n_microbatches: Optional[int] = None,
+    microbatch: int = 2, overlap: bool = False, edge_mode: str = "auto",
+) -> PipelineProbe:
+    """Build and TRACE (never run) the plan's pipelined closure on a
+    stage mesh; returns the :class:`PipelineProbe` the pipeline-scope
+    invariants consume. Requires ``len(mesh devices) >= plan.n_stages``
+    (the CLI forces 8 host devices before importing jax)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.dhm.engine import build_plan_pipeline
+    from repro.core.dhm.pipeline import PipelineConfig
+
+    S = plan.n_stages
+    if mesh is None:
+        devs = jax.devices()
+        if len(devs) < S:
+            raise ValueError(
+                f"pipeline probe needs >= {S} devices, have {len(devs)} — "
+                "set XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+                "before importing jax (the analysis CLI does this)"
+            )
+        mesh = jax.sharding.Mesh(np.asarray(devs[:S]), ("stage",))
+    M = n_microbatches if n_microbatches is not None else max(S, 2)
+    cfg = PipelineConfig(
+        S, M, stage_axis=mesh.axis_names[0], overlap=overlap,
+        edge_mode=edge_mode,
+    )
+    runner = build_plan_pipeline(plan, mesh=mesh, cfg=cfg, microbatch=microbatch)
+    h, w = plan.topo.input_shape
+    mbs = jax.ShapeDtypeStruct(
+        (M, microbatch, h, w, plan.topo.input_channels), jnp.float32
+    )
+    jaxpr = jax.make_jaxpr(runner.apply)(runner.stacked_leaves, mbs)
+    return PipelineProbe(
+        jaxpr=jaxpr, edge_plan=runner.edge_plan, cfg=cfg, mb_local=microbatch
+    )

@@ -57,7 +57,6 @@ import jax.numpy as jnp
 
 from repro.core.dhm.fusion import (
     DEFAULT_VMEM_BUDGET,
-    FusionGroup,
     plan_fusion_groups,
 )
 from repro.core.dhm.graph import DataflowGraph, cnn_to_dpn
@@ -71,7 +70,15 @@ PADDINGS = ("SAME", "VALID")
 
 class PlanCheckError(ValueError):
     """A compiled plan failed its self-check (non-finite baked parameters
-    or inconsistent stage IO geometry) — the plan is not fit to serve."""
+    or inconsistent stage IO geometry) — the plan is not fit to serve.
+
+    ``invariants`` names the registry IDs (``repro.analysis.invariants``)
+    that failed, so demotion records and CI findings cite the same IDs.
+    """
+
+    def __init__(self, message: str, *, invariants=()):
+        super().__init__(message)
+        self.invariants = tuple(invariants)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -508,59 +515,20 @@ class CompiledDHM:
 
 
 def check_plan(plan: CompiledDHM) -> None:
-    """Self-check a compiled plan: every baked parameter is finite, and
-    the per-stage IO geometry is consistent (edges chain, and the emitted
-    stage bodies actually produce the shapes their :class:`StageIOSpec`
-    promises, via ``jax.eval_shape`` — no FLOPs spent).
+    """Self-check a compiled plan: the ``plan``-scope invariants of the
+    ``repro.analysis`` registry — every baked parameter finite (V301),
+    the per-stage IO geometry chains (V302), every emitted stage body and
+    the head produce the shapes their :class:`StageIOSpec` promises via
+    ``jax.eval_shape`` (V303/V304) — no FLOPs spent.
 
-    Raises :class:`PlanCheckError` with the failing stage/tensor named.
+    Raises :class:`PlanCheckError` carrying the failed invariant IDs.
     This doubles as the serving engine's health probe: a rung of the
     degradation ladder is only promoted into service after the plan it
-    runs passes this check.
+    runs passes this check, so serving and CI enforce the SAME registry.
     """
-    for li, p in enumerate(plan.conv_params):
-        for k, v in p.items():
-            if not bool(jnp.isfinite(v).all()):
-                raise PlanCheckError(
-                    f"{plan.topo.name}: conv layer {li} parameter {k!r} "
-                    "contains non-finite values — the plan cannot serve"
-                )
-    ios = [st.io for st in plan.stages]
-    if any(io is None for io in ios):
-        raise PlanCheckError(
-            f"{plan.topo.name}: plan stages miss StageIOSpec geometry"
-        )
-    h, w = plan.topo.input_shape
-    if tuple(ios[0].in_shape) != (h, w, plan.topo.input_channels):
-        raise PlanCheckError(
-            f"{plan.topo.name}: stage 0 input {ios[0].in_shape} does not "
-            f"match the topology input {(h, w, plan.topo.input_channels)}"
-        )
-    for s in range(len(ios) - 1):
-        if tuple(ios[s].out_shape) != tuple(ios[s + 1].in_shape):
-            raise PlanCheckError(
-                f"{plan.topo.name}: stage {s} output {ios[s].out_shape} "
-                f"does not chain into stage {s + 1} input "
-                f"{ios[s + 1].in_shape}"
-            )
-    for st in plan.stages:
-        try:
-            out = jax.eval_shape(
-                st.fn,
-                plan.stage_params(st.index),
-                jax.ShapeDtypeStruct((1,) + tuple(st.io.in_shape), jnp.float32),
-            )
-        except Exception as e:  # noqa: BLE001 — surfaced as a check failure
-            raise PlanCheckError(
-                f"{plan.topo.name}: stage {st.index} body fails to trace "
-                f"on its declared input {st.io.in_shape}: {e}"
-            ) from e
-        if tuple(out.shape[1:]) != tuple(st.io.out_shape):
-            raise PlanCheckError(
-                f"{plan.topo.name}: stage {st.index} body produces "
-                f"{tuple(out.shape[1:])}, but its StageIOSpec promises "
-                f"{tuple(st.io.out_shape)}"
-            )
+    from repro.analysis.verify import check_plan as _registry_check
+
+    _registry_check(plan)
 
 
 def compile_dhm(

@@ -571,12 +571,28 @@ class Engine:
         )
         return lambda frames: pipe_jit(runner.stacked_leaves, frames)
 
-    def _activate_rung(self, idx: int, reason: Optional[str]) -> bool:
+    @staticmethod
+    def _demotion_record(rung: str, cause) -> dict:
+        """A demotion ledger entry; when the cause is a
+        :class:`PlanCheckError` (or anything else carrying registry
+        ``invariants``), the record cites the failed invariant IDs so the
+        ledger names the same checks CI's static gate enforces."""
+        rec = {"rung": rung, "reason": str(cause)}
+        ids = getattr(cause, "invariants", ())
+        if ids:
+            rec["invariants"] = list(ids)
+        return rec
+
+    def _activate_rung(
+        self, idx: int, reason: Optional[str], cause=None
+    ) -> bool:
         """Walk the ladder from ``idx`` until a rung builds and passes its
         warmup probe; record every rung skipped or left as a demotion.
         Returns False when the ladder is exhausted (current rung kept)."""
         if reason is not None and self._rung_name:
-            self.demotions.append({"rung": self._rung_name, "reason": reason})
+            self.demotions.append(
+                self._demotion_record(self._rung_name, cause or reason)
+            )
             _LOG.warning(
                 "engine demoting off rung %r: %s", self._rung_name, reason
             )
@@ -604,7 +620,7 @@ class Engine:
                             "logits"
                         )
             except Exception as e:  # noqa: BLE001 — any failure demotes
-                self.demotions.append({"rung": name, "reason": str(e)})
+                self.demotions.append(self._demotion_record(name, e))
                 _LOG.warning(
                     "engine rung %r failed its warmup probe: %s", name, e
                 )
@@ -617,7 +633,9 @@ class Engine:
         return False
 
     def _demote(self, cause: BaseException) -> None:
-        if not self._activate_rung(self._rung_idx + 1, reason=str(cause)):
+        if not self._activate_rung(
+            self._rung_idx + 1, reason=str(cause), cause=cause
+        ):
             raise LadderExhausted(
                 f"every execution-ladder rung failed (last: {cause})"
             ) from cause

@@ -60,6 +60,21 @@ def group_working_set(
     """Costed per-block VMEM bytes of fusing ``layer_indices`` (contiguous
     run) of ``topo`` — the quantity the planner compares to its budget.
     Exposed so tests (and users sizing a budget) can read the model."""
+    return working_set_bytes(_group_geom(topo, layer_indices, block_rows))
+
+
+def group_working_set_breakdown(
+    topo, layer_indices: Sequence[int], *, block_rows: int = 0
+) -> dict:
+    """Per-component bytes behind :func:`group_working_set` (see
+    ``halo.working_set_breakdown``) — what the plan verifier cites when
+    a group's recorded cost and the model disagree."""
+    from repro.kernels.stream_conv.halo import working_set_breakdown
+
+    return working_set_breakdown(_group_geom(topo, layer_indices, block_rows))
+
+
+def _group_geom(topo, layer_indices: Sequence[int], block_rows: int):
     idxs = tuple(layer_indices)
     h, w = topo.input_shape
     for spec in topo.conv_layers[: idxs[0]]:
@@ -70,14 +85,13 @@ def group_working_set(
         else topo.conv_layers[idxs[0] - 1].n_out
     )
     specs = [topo.conv_layers[i] for i in idxs]
-    geom = group_geometry(
+    return group_geometry(
         h, w, c,
         as_pyramid_layers(specs),
         tuple(s.kernel for s in specs),
         tuple(s.n_out for s in specs),
         block_rows=block_rows,
     )
-    return working_set_bytes(geom)
 
 
 def _fit_block_rows(topo, idxs, budget: int) -> Optional[tuple]:

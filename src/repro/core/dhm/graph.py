@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Iterable, Mapping, Sequence
+from typing import Mapping, Sequence
 
 
 class ActorKind(enum.Enum):

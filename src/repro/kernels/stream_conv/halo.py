@@ -245,16 +245,32 @@ def working_set_bytes(geom: GroupGeometry, *, elem_bytes: int = 4) -> int:
     the quantized stream is a *rounding* contract, not a storage format,
     on this substrate.
     """
+    return sum(working_set_breakdown(geom, elem_bytes=elem_bytes).values())
+
+
+def working_set_breakdown(
+    geom: GroupGeometry, *, elem_bytes: int = 4
+) -> dict:
+    """Per-component bytes of :func:`working_set_bytes` — ``frame`` for
+    the resident input frame plus, per layer i, ``L{i}/slab_in``, ``z``,
+    ``patches``, ``conv``, ``out`` and ``weights``. The plan verifier's
+    resource findings (V201/V202) cite this so a budget blow-up names the
+    component that grew, not just the total."""
     g0 = geom.layers[0]
     cols0 = g0.in_cols + sum(geom.in_pad_cols)
-    total = geom.in_pad_rows_total * cols0 * g0.in_ch * elem_bytes
-    for g in geom.layers:
+    parts = {
+        "frame": geom.in_pad_rows_total * cols0 * g0.in_ch * elem_bytes
+    }
+    for i, g in enumerate(geom.layers):
         padded_cols = g.in_cols + g.pads[1][0] + g.pads[1][1]
-        slab_in = g.in_slab_rows * padded_cols * g.in_ch
-        z = g.in_slab_rows * g.conv_cols * g.k * g.in_ch
-        patches = g.conv_slab_rows * g.conv_cols * g.k * g.k * g.in_ch
-        conv = g.conv_slab_rows * g.conv_cols * g.n_out
-        out = g.out_slab_rows * g.out_cols * g.n_out
-        weights = g.k * g.k * g.in_ch * g.n_out + g.n_out
-        total += (slab_in + z + patches + conv + out + weights) * elem_bytes
-    return total
+        parts[f"L{i}/slab_in"] = g.in_slab_rows * padded_cols * g.in_ch
+        parts[f"L{i}/z"] = g.in_slab_rows * g.conv_cols * g.k * g.in_ch
+        parts[f"L{i}/patches"] = (
+            g.conv_slab_rows * g.conv_cols * g.k * g.k * g.in_ch
+        )
+        parts[f"L{i}/conv"] = g.conv_slab_rows * g.conv_cols * g.n_out
+        parts[f"L{i}/out"] = g.out_slab_rows * g.out_cols * g.n_out
+        parts[f"L{i}/weights"] = g.k * g.k * g.in_ch * g.n_out + g.n_out
+        for key in ("slab_in", "z", "patches", "conv", "out", "weights"):
+            parts[f"L{i}/{key}"] *= elem_bytes
+    return parts

@@ -32,50 +32,12 @@ from repro.models.cnn import (
 )
 
 
-def _count_primitive(jaxpr, name: str) -> int:
-    """Recursively count occurrences of a primitive in a jaxpr (descends
-    into pjit/scan/pallas_call sub-jaxprs)."""
-
-    def subjaxprs(val):
-        if isinstance(val, jax.core.ClosedJaxpr):
-            yield val.jaxpr
-        elif isinstance(val, jax.core.Jaxpr):
-            yield val
-        elif isinstance(val, (list, tuple)):
-            for v in val:
-                yield from subjaxprs(v)
-
-    n = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == name:
-            n += 1
-        for v in eqn.params.values():
-            for j in subjaxprs(v):
-                n += _count_primitive(j, name)
-    return n
-
-
-def _count_primitive_in_pallas(jaxpr, name: str) -> int:
-    """Count occurrences of ``name`` that live INSIDE pallas_call bodies."""
-
-    def subjaxprs(val):
-        if isinstance(val, jax.core.ClosedJaxpr):
-            yield val.jaxpr
-        elif isinstance(val, jax.core.Jaxpr):
-            yield val
-        elif isinstance(val, (list, tuple)):
-            for v in val:
-                yield from subjaxprs(v)
-
-    n = 0
-    for eqn in jaxpr.eqns:
-        for v in eqn.params.values():
-            for j in subjaxprs(v):
-                if eqn.primitive.name == "pallas_call":
-                    n += _count_primitive(j, name)
-                else:
-                    n += _count_primitive_in_pallas(j, name)
-    return n
+# The ONE jaxpr-walking helper pair, shared with the static-analysis
+# engine (tests and the `repro.analysis` CLI can never drift apart).
+from repro.analysis.jaxpr_utils import (  # noqa: E402
+    count_primitive as _count_primitive,
+    count_primitive_in_pallas as _count_primitive_in_pallas,
+)
 
 
 def _mk_inputs(topo, seed=4, batch=2):
@@ -441,18 +403,18 @@ class TestFusedStreamQuant:
 
     def test_compiled_plan_uses_in_kernel_quant(self):
         """The whole quantized plan traces with its only feature-stream
-        rounding inside pallas_call bodies (one per conv stage)."""
+        rounding inside pallas_call bodies (one per conv stage) —
+        enforced through the static-analysis registry (invariant V007),
+        so this test and the CLI gate can never drift apart."""
+        from repro.analysis.verify import verify_plan
+
         topo = LENET5
-        params, x = _mk_inputs(topo, batch=1)
+        params, _x = _mk_inputs(topo, batch=1)
         plan = compile_dhm(
             topo, params, quant=QuantSpec(act_bits=4),
             backend="pallas_interpret",
         )
-        jaxpr = jax.make_jaxpr(plan.features)(x).jaxpr
-        inside = _count_primitive_in_pallas(jaxpr, "round")
-        total = _count_primitive(jaxpr, "round")
-        assert inside == len(topo.conv_layers)
-        assert total == inside
+        assert verify_plan(plan, ids=("V007",)) == []
 
 
 class TestStructureCompilerPath:
@@ -470,12 +432,13 @@ class TestStructureCompilerPath:
             ),
             fc_dims=(), n_classes=2,
         )
+        from repro.analysis.verify import verify_plan
+
         params = init_cnn(jax.random.PRNGKey(0), topo)
         plan = compile_dhm(topo, params, backend=backend)
-        x = jnp.ones((1, 32, 32, 3))
-        jaxpr = jax.make_jaxpr(plan.features)(x).jaxpr
-        assert _count_primitive(jaxpr, "dot_general") == 1
-        assert _count_primitive(jaxpr, "conv_general_dilated") == 0
+        # one conv layer -> exactly one dot_general and zero lax.conv:
+        # registry invariants V001/V003 (same checks the CLI gate runs)
+        assert verify_plan(plan, ids=("V001", "V003")) == []
 
     def test_make_conv_stage_is_compiler_emitted(self):
         """The pipeline stage-body builder and emit_conv_stage produce the

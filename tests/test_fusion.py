@@ -25,26 +25,9 @@ from repro.models.cnn import (
 )
 
 
-def _count_primitive(jaxpr, name: str) -> int:
-    """Recursively count a primitive in a jaxpr (descends into sub-jaxprs)."""
-
-    def subjaxprs(val):
-        if isinstance(val, jax.core.ClosedJaxpr):
-            yield val.jaxpr
-        elif isinstance(val, jax.core.Jaxpr):
-            yield val
-        elif isinstance(val, (list, tuple)):
-            for v in val:
-                yield from subjaxprs(v)
-
-    n = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == name:
-            n += 1
-        for v in eqn.params.values():
-            for j in subjaxprs(v):
-                n += _count_primitive(j, name)
-    return n
+# The ONE jaxpr-walking helper, shared with the static-analysis engine
+# (tests and the `repro.analysis` CLI can never drift apart).
+from repro.analysis.jaxpr_utils import count_primitive as _count_primitive
 
 
 def _mk_inputs(topo, seed=4, batch=2):
@@ -248,36 +231,34 @@ class TestStructure:
     def test_one_pallas_call_per_fusion_group(self):
         """Structural: a fused plan traces to exactly ONE pallas_call per
         fusion group — the whole feature extractor of a paper topology is
-        a single kernel invocation."""
+        a single kernel invocation. Enforced through the static-analysis
+        registry (invariant V002), so this test and the CLI gate can
+        never drift apart."""
+        from repro.analysis.verify import verify_plan
+
         topo = PAPER_TOPOLOGIES["cifar10"]
-        params, x = _mk_inputs(topo, batch=1)
+        params, _x = _mk_inputs(topo, batch=1)
         plan = compile_dhm(topo, params, backend="pallas_interpret")
-        jaxpr = jax.make_jaxpr(plan.features)(x).jaxpr
-        assert _count_primitive(jaxpr, "pallas_call") == len(
-            plan.fusion_groups
-        )
+        assert verify_plan(plan, ids=("V002",)) == []
         assert len(plan.fusion_groups) == 1
-        # and the per-layer plan traces to one pallas_call per layer
+        # and the per-layer plan keeps one pallas_call per (single-layer
+        # group ==) layer
         plan_pl = compile_dhm(
             topo, params, backend="pallas_interpret", vmem_budget=0
         )
-        jaxpr = jax.make_jaxpr(plan_pl.features)(x).jaxpr
-        assert _count_primitive(jaxpr, "pallas_call") == len(
-            topo.conv_layers
-        )
+        assert verify_plan(plan_pl, ids=("V002",)) == []
+        assert len(plan_pl.fusion_groups) == len(topo.conv_layers)
 
     def test_one_matmul_per_layer_inside_group(self):
         """The fused pyramid keeps the one-MXU-matmul-per-layer contract:
-        a fused 3-layer group traces to exactly 3 dot_generals (and no
-        lax.conv) per row block."""
+        a fused 3-layer group traces to exactly 3 dot_generals and no
+        lax.conv (registry invariants V001/V003)."""
+        from repro.analysis.verify import verify_plan
+
         topo = PAPER_TOPOLOGIES["cifar10"]
-        params, x = _mk_inputs(topo, batch=1)
+        params, _x = _mk_inputs(topo, batch=1)
         plan = compile_dhm(topo, params, backend="pallas_interpret")
-        jaxpr = jax.make_jaxpr(plan.features)(x).jaxpr
-        assert _count_primitive(jaxpr, "dot_general") == len(
-            topo.conv_layers
-        )
-        assert _count_primitive(jaxpr, "conv_general_dilated") == 0
+        assert verify_plan(plan, ids=("V001", "V003")) == []
 
     def test_boundary_stream_bytes_reports_pooled_frame(self):
         """The DPN boundary-stream payload (what fusion keeps on-chip per

@@ -21,27 +21,9 @@ from repro.kernels.stream_conv import (
 )
 
 
-def _count_primitive(jaxpr, name: str) -> int:
-    """Recursively count occurrences of a primitive in a jaxpr (descends
-    into pjit/scan/pallas_call sub-jaxprs)."""
-
-    def subjaxprs(val):
-        if isinstance(val, jax.core.ClosedJaxpr):
-            yield val.jaxpr
-        elif isinstance(val, jax.core.Jaxpr):
-            yield val
-        elif isinstance(val, (list, tuple)):
-            for v in val:
-                yield from subjaxprs(v)
-
-    n = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == name:
-            n += 1
-        for v in eqn.params.values():
-            for j in subjaxprs(v):
-                n += _count_primitive(j, name)
-    return n
+# The ONE jaxpr-walking helper, shared with the static-analysis engine
+# (tests and the `repro.analysis` CLI can never drift apart).
+from repro.analysis.jaxpr_utils import count_primitive as _count_primitive
 
 
 class TestPow2Matmul:
