@@ -70,7 +70,8 @@ if missing:
     sys.exit(f"FATAL: BENCH_kernels.json is missing expected rows: {missing}\n"
              f"present: {sorted(rows)}")
 paths = {r.get("path") for r in rec["rows"]}
-assert {"seed", "fused", "fused_group", "serve_load"} <= paths, \
+assert {"seed", "fused", "fused_group", "serve_load",
+        "serve_multitenant"} <= paths, \
     f"missing kernel paths in record: {paths}"
 
 # -- serving-under-load rows: p50/p99 + shed rate vs offered load must be
@@ -91,6 +92,25 @@ for r in serve_rows:
           f"p50 {r['p50_ms']:.2f} ms p99 {r['p99_ms']:.2f} ms, "
           f"shed {r['shed_rate']:.1%}")
 expected += expected_serve
+
+# -- multi-tenant serving row: per-tenant p50/p99 + shed/error rates and
+# the isolation ratio (faulted p99 / clean p99) must be on record — the
+# bulkhead's blast-radius trajectory across PRs.
+mt_rows = [r for r in rec["rows"] if r.get("path") == "serve_multitenant"]
+if "serve/lenet5_multitenant_faulted_vs_clean" not in rows or not mt_rows:
+    sys.exit("FATAL: BENCH_kernels.json misses the serve_multitenant row")
+for r in mt_rows:
+    for field in ("clean_p50_ms", "clean_p99_ms", "faulted_p50_ms",
+                  "faulted_p99_ms", "clean_shed_rate", "faulted_shed_rate",
+                  "clean_error_rate", "faulted_error_rate",
+                  "isolation_ratio"):
+        if field not in r:
+            sys.exit(f"FATAL: serve_multitenant row {r['name']} misses "
+                     f"{field!r}")
+    print(f"serve {r['name']}: clean p99 {r['clean_p99_ms']:.2f} ms, "
+          f"faulted p99 {r['faulted_p99_ms']:.2f} ms, isolation ratio "
+          f"{r['isolation_ratio']:.2f}")
+expected.append("serve/lenet5_multitenant_faulted_vs_clean")
 
 # -- pipelined rows: every e2e_pipelined row must carry its speedup vs
 # the single-device plan (the cross-PR gap trajectory) plus the autotuned

@@ -17,6 +17,10 @@ diagnostics:
 - ``DHM005`` float64 on the device path — jax silently truncates to
   f32 without x64 enabled, so the cast is at best a no-op and at worst
   a 2x memory surprise when x64 is on.
+- ``DHM006`` a background thread created in serving code with no
+  timeout-bounded ``join`` anywhere in the module — a wedged dispatch
+  leaks the thread past interpreter shutdown (the PR-9 ``stop()`` bug
+  class); shutdown paths must join with a timeout and fail loudly.
 
 Rules are scoped by path pattern (``fnmatch``; ``*`` crosses
 directories) so e.g. the serving-path rules never fire on kernel
@@ -37,7 +41,7 @@ from repro.analysis.findings import Finding
 # travel (engine.py) — swallowing one hides a serving failure (DHM004).
 _REQUEST_ERRORS = {
     "RequestError", "DeadlineExceeded", "Rejected", "Shed",
-    "InvalidRequest", "BatchFailed",
+    "InvalidRequest", "BatchFailed", "CircuitOpen",
 }
 
 _TIME_CALLS = {
@@ -322,6 +326,53 @@ def _float64(tree, src, relpath):
                         "truncates to f32 without x64",
                     ))
     return out
+
+
+@rule(
+    "DHM006",
+    name="unbounded-background-thread",
+    path_globs=(
+        "*core/dhm/engine.py", "*core/dhm/multitenant.py", "*serve*.py",
+    ),
+)
+def _unbounded_background_thread(tree, src, relpath):
+    """A serving module that constructs ``threading.Thread`` must also
+    contain a timeout-bounded ``.join(...)`` — an unbounded (or absent)
+    join lets a dispatch wedged past the watchdog leak the thread into
+    interpreter shutdown. Bound the join and fail loudly on expiry."""
+    thread_ctors = []
+    bounded_join = False
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        nm = _dotted(node.func)
+        if nm in ("threading.Thread", "Thread"):
+            thread_ctors.append(node)
+        if (
+            isinstance(node.func, ast.Attribute)
+            and node.func.attr == "join"
+            # a str.join ('; '.join(...)) is not a thread join
+            and not (
+                isinstance(node.func.value, ast.Constant)
+                and isinstance(node.func.value.value, str)
+            )
+            and (
+                node.args
+                or any(kw.arg == "timeout" for kw in node.keywords)
+            )
+        ):
+            bounded_join = True
+    if bounded_join:
+        return []
+    return [
+        (
+            node.lineno,
+            "background thread created but the module has no "
+            "timeout-bounded .join(...) — a wedged dispatch leaks the "
+            "thread past shutdown; join with a timeout and fail loudly",
+        )
+        for node in thread_ctors
+    ]
 
 
 # ---------------------------------------------------------------------------

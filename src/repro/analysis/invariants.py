@@ -210,6 +210,41 @@ def _head_io(ctx):
     return []
 
 
+@invariant("V305", name="serving-surface", scope="plan")
+def _serving_surface(ctx):
+    """The plan exposes the full surface the serving layer consumes —
+    ``topo.input_shape``/``input_channels`` (frame geometry), callable
+    ``features`` and ``head_fn``, and at least one stage — so a hot-swap
+    target missing any of it is rejected by ``verify_plan`` instead of
+    crashing the tenant's warmup dispatch."""
+    plan = ctx.plan
+    out = []
+    topo = getattr(plan, "topo", None)
+    shape = getattr(topo, "input_shape", None)
+    if (
+        topo is None
+        or not isinstance(shape, (tuple, list))
+        or len(shape) != 2
+        or not isinstance(getattr(topo, "input_channels", None), int)
+    ):
+        out.append(ctx.error(
+            "V305",
+            "plan topology does not declare the serving frame geometry "
+            "(input_shape pair + integer input_channels)",
+        ))
+    if not callable(getattr(plan, "features", None)):
+        out.append(ctx.error(
+            "V305", "plan has no callable ``features`` extractor"
+        ))
+    if not callable(getattr(plan, "head_fn", None)):
+        out.append(ctx.error(
+            "V305", "plan has no callable ``head_fn``"
+        ))
+    if not getattr(plan, "stages", ()):
+        out.append(ctx.error("V305", "plan has no stages"))
+    return out
+
+
 # ---------------------------------------------------------------------------
 # structure scope (V0xx)
 

@@ -93,6 +93,15 @@ class ProbeContext:
         ``jitted_forward(donate=True)``; (None, False) when the plan has
         no such surface."""
         if self._donated is None:
+            # Memoized on the plan: the unusable-donation warning only
+            # fires on a FRESH compile, so re-verifying the same plan
+            # (hot-swap admission does) would misread the jit-cache hit
+            # as a dropped donation. The verdict is a property of the
+            # plan's closure and cannot change after first probe.
+            cached = getattr(self.plan, "_donation_probe", None)
+            if cached is not None:
+                self._donated = cached
+                return self._donated
             fwd = getattr(self.plan, "jitted_forward", None)
             if fwd is None:
                 self._donated = (None, False)
@@ -111,6 +120,12 @@ class ProbeContext:
                         # the donation was dropped.
                         lowered.compile()
                 self._donated = (text, _donation_warned(caught))
+            try:
+                object.__setattr__(
+                    self.plan, "_donation_probe", self._donated
+                )
+            except (AttributeError, TypeError):
+                pass  # probe-only stand-ins (e.g. test doubles w/ slots)
         return self._donated
 
 

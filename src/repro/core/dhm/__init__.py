@@ -31,7 +31,12 @@ as a compiler pipeline:
   degradation ladder, structured per-request errors).
 - ``faults``: deterministic, seed-driven fault injection (delayed flush,
   dispatch errors, stalled collectives, NaN activations, device loss)
-  wired through ``Engine(fault_plan=...)`` for the chaos suite.
+  wired through ``Engine(fault_plan=...)`` for the chaos suite; fault
+  windows can be scoped to one tenant for bulkhead testing.
+- ``multitenant``: N compiled plans resident behind one ``Router`` —
+  per-tenant queues/SLOs, deficit-round-robin weighted-fair scheduling,
+  per-tenant circuit breakers, and verified hot plan swap with one-call
+  rollback.
 - ``resources``: the FPGA resource model for the three multiplier
   strategies (paper Tables 2 & 3).
 - ``throughput``: the streaming-throughput model (paper Table 4) plus the
@@ -54,12 +59,20 @@ from repro.core.dhm.engine import (
     DeadlineExceeded,
     Engine,
     EngineStats,
+    FlusherWedged,
     InvalidRequest,
     LadderExhausted,
     Rejected,
     RequestError,
     Shed,
     run_pipelined,
+)
+from repro.core.dhm.multitenant import (
+    CircuitBreaker,
+    CircuitOpen,
+    Router,
+    SwapRejected,
+    UnknownTenant,
 )
 from repro.core.dhm.faults import (
     DelayedFlush,
@@ -126,9 +139,15 @@ __all__ = [
     "DelayedFlush",
     "DeviceLoss",
     "DispatchError",
+    "CircuitBreaker",
+    "CircuitOpen",
     "Engine",
     "EngineStats",
     "FaultPlan",
+    "FlusherWedged",
+    "Router",
+    "SwapRejected",
+    "UnknownTenant",
     "InjectedDeviceLoss",
     "InjectedDispatchError",
     "InjectedFault",

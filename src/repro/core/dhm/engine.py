@@ -31,6 +31,7 @@ kernel closures); this module is where compiled plans *execute*:
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import logging
 import threading
@@ -168,6 +169,15 @@ class LadderExhausted(RuntimeError):
     the engine stays on its last rung and keeps accepting work."""
 
 
+class FlusherWedged(RuntimeError):
+    """``stop()`` could not join the background flush thread within its
+    timeout — a dispatch is stuck past the watchdog. The engine has
+    already completed every still-queued request with :class:`Shed`
+    (nothing hangs), but the wedged thread may leak; the condition is
+    raised loudly instead of being silently swallowed at interpreter
+    shutdown."""
+
+
 class _PoisonedBatch(RuntimeError):
     """Internal: a packed batch carries non-finite input frames — rerun
     the requests isolated instead of retrying or demoting."""
@@ -253,13 +263,33 @@ class Request:
         return self._result
 
 
+# Per-rung latency reservoir size: enough samples for a stable p99 at
+# serving rates, bounded so a long-lived engine never grows without limit.
+_LAT_WINDOW = 2048
+
+
+def _percentile_ms(samples, q: float) -> float:
+    """q-th percentile of a latency sample list, in milliseconds
+    (nearest-rank; 0.0 on an empty pool)."""
+    if not samples:
+        return 0.0
+    xs = sorted(samples)
+    idx = min(len(xs) - 1, max(0, int(round(q / 100.0 * (len(xs) - 1)))))
+    return xs[idx] * 1e3
+
+
 @dataclasses.dataclass(frozen=True)
 class EngineStats:
-    """Aggregate serving statistics since engine construction.
+    """Aggregate serving statistics since engine construction (or the
+    last :meth:`Engine.reset_stats`).
 
     Counts every terminal outcome, not only successes: rejected / shed
     admissions, deadline-exceeded and gate-invalid requests, batch
-    failures, plus dispatch retries and ladder demotions."""
+    failures, plus dispatch retries and ladder demotions.
+    ``rung_latency_ms`` records p50/p99 **per execution-ladder rung**
+    (over a bounded window of recent completions), so a demotion is
+    visible as a latency regime change instead of vanishing into one
+    aggregate pool."""
 
     n_requests: int
     n_frames: int
@@ -276,6 +306,8 @@ class EngineStats:
     n_retries: int = 0
     n_demotions: int = 0
     rung: str = ""
+    # rung name -> {"p50_ms", "p99_ms", "n"} over the recent window.
+    rung_latency_ms: dict = dataclasses.field(default_factory=dict)
 
     @property
     def frames_per_s(self) -> float:
@@ -308,6 +340,11 @@ class EngineStats:
             s += f"; {self.n_demotions} demotions"
         if self.rung:
             s += f" (rung: {self.rung})"
+        for rung, lat in self.rung_latency_ms.items():
+            s += (
+                f"\n  rung {rung}: p50 {lat['p50_ms']:.2f} ms "
+                f"p99 {lat['p99_ms']:.2f} ms ({lat['n']} samples)"
+            )
         return s
 
 
@@ -357,6 +394,7 @@ class Engine:
         self,
         plan,
         *,
+        name: Optional[str] = None,
         microbatch: int = 8,
         mesh=None,
         n_microbatches=4,  # int, or "auto" to run the µbatch autotuner
@@ -443,6 +481,10 @@ class Engine:
         self.max_retries = max_retries
         self.retry_backoff_s = retry_backoff_s
         self._faults = fault_plan
+        # Tenant name: threaded into fault hooks so a FaultPlan can scope
+        # its trigger windows to ONE tenant's engine (bulkhead chaos
+        # testing); None = the untenanted single-engine stream.
+        self.name = name
 
         h, w = plan.topo.input_shape
         self._frame_shape = (h, w, plan.topo.input_channels)
@@ -457,6 +499,9 @@ class Engine:
         self._queue: list = []  # pending Requests (frames attached)
         self._queue_frames = 0
         self._requests = 0
+        # Stats report requests relative to this base so ``reset_stats``
+        # can zero the window without reusing request indices.
+        self._requests_base = 0
         self._frames = 0
         self._batches = 0
         self._busy_s = 0.0
@@ -465,6 +510,10 @@ class Engine:
         self._lat_n = 0
         self._lat_sum = 0.0
         self._lat_max = 0.0
+        # Per-rung latency reservoirs (rung -> deque of recent latencies):
+        # a demotion shows up as a new rung key with its own p50/p99
+        # instead of smearing into the aggregate pool.
+        self._rung_lat: dict = {}
         # Terminal-outcome counters beyond success.
         self._n_ok = 0
         self._n_rejected = 0
@@ -475,6 +524,11 @@ class Engine:
         self._n_retries = 0
         self.demotions: list = []  # [{"rung", "reason"}] per rung left
         self._flusher: Optional[threading.Thread] = None
+        # A router's scheduler registers itself here (a zero-arg liveness
+        # predicate): while it is alive the engine behaves as if a
+        # background flusher runs — ``result()`` waits and block-policy
+        # submits park on the condition instead of inline-draining.
+        self._external_flusher: Optional[Callable[[], bool]] = None
         self._stop = threading.Event()
 
         # The execution ladder, best rung first. Each entry is
@@ -658,6 +712,19 @@ class Engine:
         must never enter a packed batch). A full queue is handled per the
         engine's admission policy.
         """
+        req = self._new_request(x, deadline_ms=deadline_ms)
+        if req.done:  # failed at the validation gate
+            return req
+        return self._enqueue(req)
+
+    def _new_request(
+        self, x: jax.Array, *, deadline_ms: Optional[float] = None
+    ) -> Request:
+        """Parse + gate-validate frames into a :class:`Request` WITHOUT
+        enqueueing it (the router uses this to fail a request fast —
+        e.g. circuit open — before it ever touches the queue). Malformed
+        shapes raise ``ValueError``; gate failures return the request
+        already completed with :class:`InvalidRequest`."""
         # Queued frames live on the HOST: the flush packs variable request
         # counts with numpy (eager device concats would compile per
         # distinct shape) and only the fixed-shape packed group is staged
@@ -705,6 +772,11 @@ class Engine:
                     ),
                 )
                 return req
+        return req
+
+    def _enqueue(self, req: Request) -> Request:
+        """Admit a gate-validated request into the bounded queue per the
+        engine's admission policy (block | reject | shed_oldest)."""
         while True:
             with self._cv:
                 if not self.max_queue or len(self._queue) < self.max_queue:
@@ -772,6 +844,9 @@ class Engine:
             self._lat_n += 1
             self._lat_sum += lat
             self._lat_max = max(self._lat_max, lat)
+            self._rung_lat.setdefault(
+                self._rung_name, collections.deque(maxlen=_LAT_WINDOW)
+            ).append(lat)
             self._n_ok += 1
             self._frames += req.n_frames
 
@@ -808,7 +883,9 @@ class Engine:
         retries_left = self.max_retries
         while True:
             eff = (
-                self._faults.dispatch_effects(rung=self._rung_name)
+                self._faults.dispatch_effects(
+                    rung=self._rung_name, tenant=self.name
+                )
                 if self._faults is not None
                 else None
             )
@@ -870,28 +947,49 @@ class Engine:
 
     # -- flushing -------------------------------------------------------------
 
-    def flush(self) -> None:
+    def flush(self, max_frames: Optional[int] = None) -> int:
         """Drain the queue: pack pending frames into ``group``-sized
         micro-batches (zero-padded tail), run each through the active
         rung, and scatter the logits back to their requests. Expired
         deadlines complete with :class:`DeadlineExceeded` at pack time; a
         failed batch is isolated per request so invalid requests fail
         alone. Explicitly a no-op on an empty queue (double-flush safe);
-        thread-safe against the background flusher."""
-        with self._flush_lock:
-            self._flush_once()
+        thread-safe against the background flusher.
 
-    def _flush_once(self) -> None:
+        ``max_frames`` bounds one call to roughly that many frames from
+        the queue head (always at least one request) — the router's
+        deficit-round-robin scheduler uses this to dispatch exactly one
+        scheduling quantum per turn. Returns the number of frames taken
+        off the queue (0 = nothing pending)."""
+        with self._flush_lock:
+            return self._flush_once(max_frames)
+
+    def _flush_once(self, max_frames: Optional[int] = None) -> int:
         if self._faults is not None:
-            delay = self._faults.on_flush()
+            delay = self._faults.on_flush(tenant=self.name)
             if delay:
                 time.sleep(delay)
         with self._cv:
             if not self._queue:
-                return
-            pending, self._queue = self._queue, []
-            self._queue_frames = 0
+                return 0
+            if max_frames is None:
+                pending, self._queue = self._queue, []
+                self._queue_frames = 0
+            else:
+                # Take whole requests from the head up to ~max_frames
+                # (never split a request; always take at least one).
+                pending = []
+                taken = 0
+                while self._queue and (
+                    not pending
+                    or taken + self._queue[0].n_frames <= max_frames
+                ):
+                    r = self._queue.pop(0)
+                    pending.append(r)
+                    taken += r.n_frames
+                self._queue_frames -= taken
             self._cv.notify_all()
+        n_taken = sum(r.n_frames for r in pending)
         t0 = time.perf_counter()
         live = []
         for req in pending:
@@ -907,7 +1005,7 @@ class Engine:
             else:
                 live.append(req)
         if not live:
-            return
+            return n_taken
         try:
             # Pack on the HOST: the request count (and so the concat/pad
             # shapes) varies per flush, and eager jnp ops compile once per
@@ -938,7 +1036,7 @@ class Engine:
             self._isolate(live)
             with self._lock:
                 self._busy_s += time.perf_counter() - t0
-            return
+            return n_taken
         except LadderExhausted as e:
             for req in live:
                 self._fail(
@@ -947,7 +1045,7 @@ class Engine:
                 )
             with self._lock:
                 self._busy_s += time.perf_counter() - t0
-            return
+            return n_taken
         except Exception as e:  # noqa: BLE001 — never drop requests silently
             _LOG.exception("unexpected flush failure")
             for req in live:
@@ -960,7 +1058,7 @@ class Engine:
                 )
             with self._lock:
                 self._busy_s += time.perf_counter() - t0
-            return
+            return n_taken
         done = time.perf_counter()
         off = 0
         for req in live:
@@ -968,6 +1066,7 @@ class Engine:
             off += req.n_frames
         with self._lock:
             self._busy_s += done - t0
+        return n_taken
 
     def _isolate(self, reqs: list) -> None:
         """Rerun a poisoned batch one request at a time: invalid requests
@@ -1009,7 +1108,10 @@ class Engine:
     # -- background flush loop ------------------------------------------------
 
     def _flusher_alive(self) -> bool:
-        return self._flusher is not None and self._flusher.is_alive()
+        if self._flusher is not None and self._flusher.is_alive():
+            return True
+        ext = self._external_flusher
+        return bool(ext is not None and ext())
 
     def start(self) -> "Engine":
         """Start the background flush loop (idempotent): micro-batches are
@@ -1025,15 +1127,45 @@ class Engine:
         self._flusher.start()
         return self
 
-    def stop(self, *, drain: bool = True) -> None:
+    def _shed_all(self, why: str) -> int:
+        """Complete every still-queued request with a structured
+        :class:`Shed` error (exactly-once semantics hold: a request a
+        late-waking flusher already picked up is a no-op here and vice
+        versa). Returns the number of requests shed."""
+        with self._cv:
+            pending, self._queue = self._queue, []
+            self._queue_frames = 0
+            self._cv.notify_all()
+        for req in pending:
+            self._fail(req, Shed(f"request {req.index}: {why}"))
+        return len(pending)
+
+    def stop(self, *, drain: bool = True, join_timeout_s: float = 30.0) -> None:
         """Stop the background flush loop; by default drain what is still
-        queued (every in-flight request still completes)."""
-        if self._flusher is not None:
+        queued (every in-flight request still completes).
+
+        The join is bounded: if the flusher does not exit within
+        ``join_timeout_s`` (a dispatch wedged past the watchdog), every
+        still-queued request is completed with :class:`Shed` — nothing
+        hangs — and :class:`FlusherWedged` is raised loudly instead of
+        leaking the thread silently into interpreter shutdown."""
+        flusher = self._flusher
+        if flusher is not None:
             self._stop.set()
             with self._cv:
                 self._cv.notify_all()
-            self._flusher.join(timeout=30.0)
+            flusher.join(timeout=join_timeout_s)
             self._flusher = None
+            if flusher.is_alive():
+                shed = self._shed_all(
+                    "engine stopping with a wedged flush thread"
+                )
+                raise FlusherWedged(
+                    f"flush thread did not exit within {join_timeout_s:.1f}s "
+                    f"of stop(); {shed} queued request(s) completed with "
+                    "Shed. A dispatch is stuck past the watchdog — inspect "
+                    "engine.demotions and the active rung."
+                )
         if drain:
             self.flush()
 
@@ -1094,7 +1226,7 @@ class Engine:
     def stats(self) -> EngineStats:
         with self._lock:
             return EngineStats(
-                n_requests=self._requests,
+                n_requests=self._requests - self._requests_base,
                 n_frames=self._frames,
                 n_batches=self._batches,
                 busy_s=self._busy_s,
@@ -1111,4 +1243,34 @@ class Engine:
                 n_retries=self._n_retries,
                 n_demotions=len(self.demotions),
                 rung=self._rung_name,
+                rung_latency_ms={
+                    rung: {
+                        "p50_ms": _percentile_ms(lat, 50.0),
+                        "p99_ms": _percentile_ms(lat, 99.0),
+                        "n": len(lat),
+                    }
+                    for rung, lat in self._rung_lat.items()
+                },
             )
+
+    def reset_stats(self) -> None:
+        """Zero every counter and latency reservoir so a measurement run
+        (load bench, SLO window) excludes warmup / prior-phase samples.
+        The demotion ledger is kept — it is an audit trail, not a metric
+        — and the queue and rung state are untouched."""
+        with self._lock:
+            self._requests_base = self._requests
+            self._frames = 0
+            self._batches = 0
+            self._busy_s = 0.0
+            self._lat_n = 0
+            self._lat_sum = 0.0
+            self._lat_max = 0.0
+            self._rung_lat = {}
+            self._n_ok = 0
+            self._n_rejected = 0
+            self._n_shed = 0
+            self._n_deadline = 0
+            self._n_invalid = 0
+            self._n_failed = 0
+            self._n_retries = 0

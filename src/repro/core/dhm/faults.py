@@ -22,7 +22,13 @@ Each fault fires on a trigger window of dispatch/flush events
 (``at``-th event onwards, for ``times`` events; ``times=None`` = forever)
 or probabilistically via the plan's seeded RNG (``prob``), and can be
 restricted to one execution-ladder rung (``rung="mesh"`` models a fault
-of the collective path that vanishes after demotion to single-device).
+of the collective path that vanishes after demotion to single-device)
+and/or to one serving **tenant** (``tenant="A"`` models a fault whose
+blast radius the multi-tenant router's bulkheads must contain: only
+tenant A's engine sees it, and the chaos suite asserts tenant B's error
+rate and latency stay untouched). Event counters are kept **per tenant**
+(the ``None`` tenant is the single-engine legacy stream), so "fault A's
+2nd dispatch" stays deterministic no matter how B's traffic interleaves.
 Everything is reproducible from ``(faults, seed)`` — no wall-clock or
 global randomness.
 """
@@ -52,18 +58,23 @@ class InjectedDeviceLoss(InjectedFault):
 class Fault:
     """Base fault spec: a trigger window over the fault's event counter.
 
-    ``at``: 0-based event index the window opens at.
+    ``at``: 0-based event index the window opens at (counted per tenant).
     ``times``: events the window stays open for (``None`` = forever).
     ``prob``: if > 0, ignore the window and fire per-event with this
       probability from the plan's seeded RNG (deterministic per seed).
     ``rung``: only fire while the engine serves on this ladder rung
       (``None`` = any rung). Flush-scoped faults ignore it.
+    ``tenant``: only fire for the engine serving this tenant (``None`` =
+      any tenant, including the untenanted single-engine stream). A
+      tenant-scoped fault never fires for an engine that does not carry
+      that tenant name — the bulkhead-isolation contract.
     """
 
     at: int = 0
     times: Optional[int] = 1
     prob: float = 0.0
     rung: Optional[str] = None
+    tenant: Optional[str] = None
 
     def _in_window(self, count: int) -> bool:
         if count < self.at:
@@ -146,10 +157,18 @@ class FaultPlan:
         self.seed = seed
         self._rng = random.Random(seed)
         self._lock = threading.Lock()
-        self._flushes = 0
-        self._dispatches = 0
+        # Event counters are PER TENANT (key None = the untenanted
+        # single-engine stream) so a tenant-scoped window is deterministic
+        # regardless of how other tenants' traffic interleaves.
+        self._flushes: dict = {}
+        self._dispatches: dict = {}
 
-    def _fires(self, f: Fault, count: int, rung: Optional[str]) -> bool:
+    def _fires(
+        self, f: Fault, count: int, rung: Optional[str],
+        tenant: Optional[str],
+    ) -> bool:
+        if f.tenant is not None and f.tenant != tenant:
+            return False
         if f.rung is not None and rung is not None and f.rung != rung:
             return False
         if f.prob > 0:
@@ -158,27 +177,31 @@ class FaultPlan:
 
     # -- hooks ---------------------------------------------------------------
 
-    def on_flush(self) -> float:
+    def on_flush(self, *, tenant: Optional[str] = None) -> float:
         """Seconds the flush should stall before packing (0 = clean).
-        Advances the flush event counter."""
+        Advances ``tenant``'s flush event counter."""
         with self._lock:
-            count = self._flushes
-            self._flushes += 1
+            count = self._flushes.get(tenant, 0)
+            self._flushes[tenant] = count + 1
             delay = 0.0
             for f in self.faults:
-                if isinstance(f, DelayedFlush) and self._fires(f, count, None):
+                if isinstance(f, DelayedFlush) and self._fires(
+                    f, count, None, tenant
+                ):
                     delay += f.delay_s
             return delay
 
-    def dispatch_effects(self, *, rung: Optional[str] = None) -> DispatchEffects:
-        """The effects to apply to the next dispatch attempt on ``rung``.
-        Advances the dispatch event counter."""
+    def dispatch_effects(
+        self, *, rung: Optional[str] = None, tenant: Optional[str] = None
+    ) -> DispatchEffects:
+        """The effects to apply to ``tenant``'s next dispatch attempt on
+        ``rung``. Advances ``tenant``'s dispatch event counter."""
         with self._lock:
-            count = self._dispatches
-            self._dispatches += 1
+            count = self._dispatches.get(tenant, 0)
+            self._dispatches[tenant] = count + 1
             stall, exc, corrupt = 0.0, None, None
             for f in self.faults:
-                if not self._fires(f, count, rung):
+                if not self._fires(f, count, rung, tenant):
                     continue
                 if isinstance(f, StalledDispatch):
                     stall += f.stall_s
@@ -198,10 +221,20 @@ class FaultPlan:
 
     @property
     def n_dispatch_events(self) -> int:
+        """Total dispatch events across every tenant stream."""
         with self._lock:
-            return self._dispatches
+            return sum(self._dispatches.values())
 
     @property
     def n_flush_events(self) -> int:
+        """Total flush events across every tenant stream."""
         with self._lock:
-            return self._flushes
+            return sum(self._flushes.values())
+
+    def n_dispatch_events_for(self, tenant: Optional[str]) -> int:
+        with self._lock:
+            return self._dispatches.get(tenant, 0)
+
+    def n_flush_events_for(self, tenant: Optional[str]) -> int:
+        with self._lock:
+            return self._flushes.get(tenant, 0)

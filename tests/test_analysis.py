@@ -78,7 +78,7 @@ class TestRegistry:
             "V001", "V002", "V003", "V004", "V005", "V006", "V007",
             "V101", "V102", "V103",
             "V201", "V202", "V203",
-            "V301", "V302", "V303", "V304",
+            "V301", "V302", "V303", "V304", "V305",
         }
         assert want <= set(REGISTRY)
 
@@ -415,6 +415,47 @@ class TestLintRules:
         assert _ids(findings) == ["DHM005"]
         assert len(findings) == 2  # the astype and the jnp.float64
 
+    def test_unbounded_background_thread_is_DHM006(self):
+        # the PR-9 stop() bug class: a serving thread with no
+        # timeout-bounded join leaks past interpreter shutdown
+        src = (
+            "import threading\n"
+            "def start(loop):\n"
+            "    t = threading.Thread(target=loop, daemon=True)\n"
+            "    t.start()\n"
+            "    return t\n"
+        )
+        ids = _ids(lint_source(src, _ENGINE_PATH))
+        assert ids == ["DHM006"]
+        assert _ids(
+            lint_source(src, "src/repro/core/dhm/multitenant.py")
+        ) == ["DHM006"]
+
+    def test_bounded_join_is_clean_DHM006(self):
+        src = (
+            "import threading\n"
+            "def start(loop):\n"
+            "    t = threading.Thread(target=loop, daemon=True)\n"
+            "    t.start()\n"
+            "    return t\n"
+            "def stop(t):\n"
+            "    t.join(timeout=30.0)\n"
+            "    if t.is_alive():\n"
+            "        raise RuntimeError('wedged')\n"
+        )
+        assert lint_source(src, _ENGINE_PATH) == []
+
+    def test_str_join_does_not_satisfy_DHM006(self):
+        # '; '.join(msgs) is not a thread join — the rule must still fire
+        src = (
+            "import threading\n"
+            "def start(loop, msgs):\n"
+            "    t = threading.Thread(target=loop)\n"
+            "    t.start()\n"
+            "    return '; '.join(msgs)\n"
+        )
+        assert _ids(lint_source(src, _ENGINE_PATH)) == ["DHM006"]
+
     def test_rules_are_scoped_by_path(self):
         # a kernel body may stack taps eagerly — serving rules must not
         # fire outside their path scope
@@ -424,6 +465,14 @@ class TestLintRules:
             "    return jnp.stack(taps, axis=2)\n"
         )
         assert lint_source(src, "src/repro/kernels/stream_conv/conv.py") == []
+        # DHM006 is a serving-file rule: kernel/pipeline modules may own
+        # unjoined worker threads (the watchdog does)
+        src = (
+            "import threading\n"
+            "def watch(fn):\n"
+            "    threading.Thread(target=fn, daemon=True).start()\n"
+        )
+        assert lint_source(src, "src/repro/core/dhm/pipeline.py") == []
 
     def test_findings_carry_file_and_line(self):
         src = (

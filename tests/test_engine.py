@@ -14,10 +14,12 @@ from repro.core.dhm.compiler import QuantSpec, compile_dhm
 from repro.core.dhm.engine import (
     DeadlineExceeded,
     Engine,
+    FlusherWedged,
     Shed,
     forward,
     plan_jitted_forward,
 )
+from repro.core.dhm.faults import DelayedFlush, FaultPlan
 from repro.core.dhm.pipeline import StageIOSpec, derive_io_specs
 from repro.models.cnn import ALL_TOPOLOGIES, LENET5, init_cnn
 
@@ -270,6 +272,80 @@ class TestFlushSemantics:
         eng.stop()  # also idempotent
         # After stop, the engine still serves synchronously.
         assert eng.infer(_frames(topo, 2)).shape == (2, topo.n_classes)
+
+
+class TestStatsWindowAndStop:
+    """Satellites: per-rung latency percentiles, stats reset, the bounded
+    flush quantum, and the loud wedged-stop path."""
+
+    def test_per_rung_latency_percentiles(self):
+        topo, plan = _plan("lenet5")
+        eng = Engine(plan, microbatch=4)
+        for i in range(8):
+            eng.infer(_frames(topo, 4, seed=i))
+        st = eng.stats()
+        lat = st.rung_latency_ms["fused"]
+        assert lat["n"] == 8
+        assert 0 < lat["p50_ms"] <= lat["p99_ms"]
+        assert "rung fused" in st.summary()
+
+    def test_reset_stats_zeroes_window_but_keeps_ledger(self):
+        topo, plan = _plan("lenet5")
+        eng = Engine(plan, microbatch=4)
+        eng.infer(_frames(topo, 4))
+        assert eng.stats().n_ok == 1
+        eng.reset_stats()
+        st = eng.stats()
+        assert st.n_requests == 0
+        assert st.n_frames == 0
+        assert st.n_ok == 0
+        assert st.rung_latency_ms == {}
+        # The engine still serves, and fresh completions repopulate.
+        eng.infer(_frames(topo, 4, seed=2))
+        st = eng.stats()
+        assert st.n_ok == 1
+        assert st.rung_latency_ms["fused"]["n"] == 1
+
+    def test_flush_max_frames_is_one_quantum(self):
+        topo, plan = _plan("lenet5")
+        eng = Engine(plan, microbatch=2)
+        reqs = [eng.submit(_frames(topo, 2, seed=i)) for i in range(3)]
+        # One bounded flush takes whole requests up to ~max_frames from
+        # the head — here exactly the first request.
+        assert eng.flush(max_frames=2) == 2
+        assert reqs[0].done
+        assert not reqs[1].done and not reqs[2].done
+        # The rest drains with an unbounded flush.
+        assert eng.flush() == 4
+        assert all(r.done for r in reqs)
+        assert eng.flush() == 0
+
+    def test_wedged_stop_raises_and_sheds(self):
+        topo, plan = _plan("lenet5")
+        eng = Engine(
+            plan,
+            microbatch=2,
+            auto_flush=True,
+            fault_plan=FaultPlan(
+                [DelayedFlush(at=0, times=None, delay_s=2.0)], seed=0
+            ),
+        )
+        # The flusher wakes for this and stalls 2 s inside the flush —
+        # the stall hits before the queue pop, so both requests are
+        # still queued when the bounded join gives up.
+        first = eng.submit(_frames(topo, 2))
+        time.sleep(0.3)
+        second = eng.submit(_frames(topo, 2, seed=2))
+        with pytest.raises(FlusherWedged, match="did not exit"):
+            eng.stop(join_timeout_s=0.2)
+        # Every queued request completed with a structured Shed — no
+        # request left hanging, no silent thread leak.
+        for req in (first, second):
+            with pytest.raises(Shed):
+                req.result(timeout=1.0)
+        # The wedged flusher eventually wakes, finds nothing, and exits;
+        # stop() is idempotent afterwards.
+        eng.stop()
 
 
 class TestExtractedExecution:

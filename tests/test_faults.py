@@ -105,6 +105,23 @@ class TestFaultPlan:
         with pytest.raises(TypeError, match="Fault specs"):
             FaultPlan(["boom"])
 
+    def test_tenant_scoped_window_is_deterministic_under_interleaving(self):
+        """Each tenant advances its OWN event counter, so a tenant-scoped
+        window fires at the same point in that tenant's stream no matter
+        how other tenants' dispatches interleave."""
+        fp = FaultPlan([DispatchError(at=1, times=1, tenant="A")])
+        fired = []
+        for _ in range(3):  # A/B/untenanted round-robin
+            fired.append(fp.dispatch_effects(rung="fused", tenant="A"))
+            assert fp.dispatch_effects(rung="fused", tenant="B").clean
+            assert fp.dispatch_effects(rung="fused", tenant=None).clean
+        # Only A's SECOND event is faulted — B and the untenanted stream
+        # never see it even though they pass through the same plan.
+        assert [e.exc is not None for e in fired] == [False, True, False]
+        assert fp.n_dispatch_events_for("A") == 3
+        assert fp.n_dispatch_events_for("B") == 3
+        assert fp.n_dispatch_events_for(None) == 3
+
 
 class TestWatchdog:
     def test_timeout_raises_instead_of_hanging(self):
