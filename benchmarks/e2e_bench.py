@@ -4,7 +4,10 @@ For each benchmarked topology — the three paper nets plus the generalized
 non-paper ones (cifar10_full: overlapping 3x3/stride-2 pool;
 cifar10_strided: stride-2 downsampling convs) — lower a full plan through
 ``compile_dhm`` (the single lowering path everything routes through)
-twice per quantization variant:
+twice per quantization variant (fp32, fake-quant at the paper bitwidths,
+and ``int8`` — the true-integer compute path, whose fused row carries
+``int8_speedup`` vs the fp32 fused plan plus the dtype-aware fusion
+widening probe fields):
 
 - the **fused** plan (default VMEM budget): the feature extractor runs as
   cross-layer fusion groups — one fused pyramid kernel per group, with
@@ -322,6 +325,11 @@ def _pipelined_rows_here(handoff_path: str) -> list:
             fps = group / (us * 1e-6)
             fps_single = float(handoff[f"{name}|{label}|{group}|fps"])
             edge_path = eng._runner.edge_plan.mode
+            bits_fields = (
+                {"weight_bits": bits, "act_bits": bits}
+                if label == "quant"
+                else {}
+            )
             rows.append(
                 {
                     "name": f"e2e/{name}_{label}_pipelined_plan",
@@ -329,6 +337,7 @@ def _pipelined_rows_here(handoff_path: str) -> list:
                     "path": "e2e_pipelined",
                     "frames_per_s": fps,
                     "pipeline_speedup": fps / fps_single,
+                    **bits_fields,
                     "n_microbatches": tuning.n_microbatches,
                     "microbatch": tuning.microbatch,
                     "tuning_source": tuning.source,
@@ -398,6 +407,8 @@ def run_pipelined() -> list:
 
 
 def run() -> list:
+    from repro.core.dhm.fusion import widening_budget
+
     rows = []
     for name in PIPE_TOPOS:
         topo = ALL_TOPOLOGIES[name]
@@ -411,7 +422,14 @@ def run() -> list:
         variants = (
             ("fp32", QuantSpec()),
             ("quant", QuantSpec(weight_bits=bits, act_bits=bits)),
+            (
+                "int8",
+                QuantSpec(
+                    weight_bits=bits, act_bits=bits, int8_compute=True
+                ),
+            ),
         )
+        fused_fps = {}
         for label, quant in variants:
             plan = compile_dhm(topo, params, quant=quant)
             plan_pl = compile_dhm(topo, params, quant=quant, vmem_budget=0)
@@ -419,13 +437,17 @@ def run() -> list:
             us = _measure_plan(plan, x)
             fps = BATCH / (us * 1e-6)
             fps_pl = BATCH / (us_pl * 1e-6)
+            fused_fps[label] = fps
             gops = topo.feature_extractor_ops() * fps / 1e9
             speedup = us_pl / us
-            qdesc = (
-                "fp32"
-                if label == "fp32"
-                else f"w{bits}b + in-kernel act{bits}b stream quant"
-            )
+            qdesc = {
+                "fp32": "fp32",
+                "quant": f"w{bits}b + in-kernel act{bits}b stream quant",
+                "int8": (
+                    f"true int8 compute: w{bits}b codes, int32 accumulate, "
+                    f"requantizing act{bits}b epilogue"
+                ),
+            }[label]
             gdesc = "+".join(
                 str(len(g.layers)) for g in plan.fusion_groups
             )
@@ -437,36 +459,60 @@ def run() -> list:
                 for g in plan.fusion_groups
                 for li in g.layers[:-1]
             )
-            rows.append(
-                {
-                    "name": f"e2e/{name}_{label}_plan",
-                    "us_per_call": us,
-                    "path": f"e2e_{label}",
-                    "frames_per_s": fps,
-                    "fusion_speedup": speedup,
-                    "derived": (
-                        f"{fps:.0f} frames/s ({gops:.2f} effective Gop/s) "
-                        f"for the full compiled plan (batch={BATCH}, "
-                        f"{qdesc}, fused groups [{gdesc} layers/kernel] + "
-                        f"FC head, one jitted closure): x{speedup:.2f} vs "
-                        f"per-layer stages, {onchip / 1024:.0f} KiB/frame "
-                        f"of inter-layer streams stay on-chip"
-                    ),
-                }
-            )
-            rows.append(
-                {
-                    "name": f"e2e/{name}_{label}_perlayer_plan",
-                    "us_per_call": us_pl,
-                    "path": f"e2e_{label}_perlayer",
-                    "frames_per_s": fps_pl,
-                    "derived": (
-                        f"{fps_pl:.0f} frames/s pre-fusion baseline "
-                        f"(vmem_budget=0: one kernel call per conv layer, "
-                        f"intermediates round-trip through memory)"
-                    ),
-                }
-            )
+            fused_row = {
+                "name": f"e2e/{name}_{label}_plan",
+                "us_per_call": us,
+                "path": f"e2e_{label}",
+                "frames_per_s": fps,
+                "fusion_speedup": speedup,
+                "derived": (
+                    f"{fps:.0f} frames/s ({gops:.2f} effective Gop/s) "
+                    f"for the full compiled plan (batch={BATCH}, "
+                    f"{qdesc}, fused groups [{gdesc} layers/kernel] + "
+                    f"FC head, one jitted closure): x{speedup:.2f} vs "
+                    f"per-layer stages, {onchip / 1024:.0f} KiB/frame "
+                    f"of inter-layer streams stay on-chip"
+                ),
+            }
+            perlayer_row = {
+                "name": f"e2e/{name}_{label}_perlayer_plan",
+                "us_per_call": us_pl,
+                "path": f"e2e_{label}_perlayer",
+                "frames_per_s": fps_pl,
+                "derived": (
+                    f"{fps_pl:.0f} frames/s pre-fusion baseline "
+                    f"(vmem_budget=0: one kernel call per conv layer, "
+                    f"intermediates round-trip through memory)"
+                ),
+            }
+            if label != "fp32":
+                for row in (fused_row, perlayer_row):
+                    row["weight_bits"] = bits
+                    row["act_bits"] = bits
+            if label == "int8":
+                int8_speedup = fps / fused_fps["fp32"]
+                fused_row["int8_speedup"] = int8_speedup
+                # Dtype-aware fusion widening: the budget (1 B under the
+                # cheapest fp32 whole-run cost) at which int8 slab costing
+                # fuses a strictly larger group than fp32 costing.
+                probe = widening_budget(
+                    topo, tuple(range(len(topo.conv_layers)))
+                )
+                if probe is not None:
+                    fused_row["widening_budget"] = probe["budget"]
+                    fused_row["fp32_max_group"] = probe["fp32_max_group"]
+                    fused_row["int8_max_group"] = probe["int8_max_group"]
+                fused_row["derived"] += (
+                    f"; x{int8_speedup:.2f} vs the fp32 fused plan"
+                )
+                if probe is not None:
+                    fused_row["derived"] += (
+                        f"; at a {probe['budget']}-B budget int8 slab "
+                        f"costing fuses {probe['int8_max_group']} layers "
+                        f"where fp32 fits {probe['fp32_max_group']}"
+                    )
+            rows.append(fused_row)
+            rows.append(perlayer_row)
     rows += run_pipelined()
     return rows
 

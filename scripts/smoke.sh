@@ -61,7 +61,8 @@ expected = [
     f"e2e/{net}_{variant}_plan"
     for net in nets
     for variant in (
-        "fp32", "quant", "fp32_perlayer", "quant_perlayer",
+        "fp32", "quant", "int8",
+        "fp32_perlayer", "quant_perlayer", "int8_perlayer",
         "fp32_pipelined", "quant_pipelined",
     )
 ]
@@ -139,17 +140,44 @@ print(f"pipeline sweep: {len(sweep_rows)} points recorded, best "
       f"{best_sweep['name']} at {best_sweep['frames_per_s']:.0f} frames/s "
       f"(x{best_sweep['pipeline_speedup']:.2f} vs single device)")
 
+# -- true-int8 rows: every topology must record an e2e_int8 row carrying
+# its measured speedup vs the fp32 fused plan, and every quantized row
+# (fake-quant and int8, fused/per-layer/pipelined) must record the
+# bitwidths it ran at — the mixed-bitwidth trajectory is unreadable
+# without them.
+int8_rows = [r for r in rec["rows"] if r.get("path") == "e2e_int8"]
+if len(int8_rows) < len(nets):
+    sys.exit(f"FATAL: expected one e2e_int8 row per topology "
+             f"({len(nets)}), got {len(int8_rows)}")
+for r in int8_rows:
+    for field in ("int8_speedup", "weight_bits", "act_bits",
+                  "fusion_speedup"):
+        if field not in r:
+            sys.exit(f"FATAL: e2e_int8 row {r['name']} misses {field!r}")
+for r in rec["rows"]:
+    if r.get("path", "").startswith(("e2e_quant", "e2e_int8")) or (
+        r.get("path") == "e2e_pipelined" and "_quant_" in r["name"]
+    ):
+        for field in ("weight_bits", "act_bits"):
+            if field not in r:
+                sys.exit(f"FATAL: quantized row {r['name']} misses "
+                         f"{field!r}")
+
 fused = rows["kernel/stream_conv_cifar_c1_fused"]
 print(f"fused stream conv: {fused['us_per_call']:.0f} us/call, "
       f"x{fused['speedup_vs_seed']:.1f} vs seed interpret path")
 for net in nets:
     fp = rows[f"e2e/{net}_fp32_plan"]
     q = rows[f"e2e/{net}_quant_plan"]
+    i8 = rows[f"e2e/{net}_int8_plan"]
     pp = rows[f"e2e/{net}_fp32_pipelined_plan"]
     print(f"e2e {net}: fp32 {fp['frames_per_s']:.0f} frames/s "
           f"(x{fp.get('fusion_speedup', 0):.2f} vs per-layer), "
           f"quant {q['frames_per_s']:.0f} frames/s "
           f"(x{q.get('fusion_speedup', 0):.2f} vs per-layer), "
+          f"int8 {i8['frames_per_s']:.0f} frames/s "
+          f"(x{i8.get('int8_speedup', 0):.2f} vs fp32 fused, "
+          f"w{i8['weight_bits']}/a{i8['act_bits']}), "
           f"pipelined {pp['frames_per_s']:.0f} frames/s on a host mesh "
           f"(x{pp.get('pipeline_speedup', 0):.2f} vs single device)")
 
@@ -209,6 +237,29 @@ if floor_frac > 0:
                      f"(floor {floor_frac}):\n  " + "\n  ".join(failures))
         print(f"perf guard: {len(base.get('e2e_frames_per_s', {}))} fused "
               f"e2e rows above {floor_frac} x baseline")
+
+        # True-int8 rows get the same floor from their own baseline
+        # section, so an int8-path regression cannot hide behind healthy
+        # fake-quant numbers.
+        failures = []
+        for name, base_fps in base.get("int8_frames_per_s", {}).items():
+            row = rows.get(name)
+            if row is None:
+                failures.append(f"{name}: row missing from this run")
+                continue
+            floor = base_fps * floor_frac
+            if row["frames_per_s"] < floor:
+                failures.append(
+                    f"{name}: {row['frames_per_s']:.0f} frames/s < "
+                    f"{floor:.0f} (baseline {base_fps:.0f} x floor "
+                    f"{floor_frac})"
+                )
+        if failures:
+            sys.exit("FATAL: int8 perf regression vs "
+                     "benchmarks/bench_baseline.json "
+                     f"(floor {floor_frac}):\n  " + "\n  ".join(failures))
+        print(f"int8 guard: {len(base.get('int8_frames_per_s', {}))} "
+              f"int8 rows above {floor_frac} x baseline")
 
         # Mesh-job floor: the pipelined serving rows, separately tunable
         # (and more lenient by default — 8 emulated host devices).

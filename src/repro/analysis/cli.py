@@ -45,7 +45,7 @@ def _parse_args(argv):
         help="comma-separated topology names, or 'all' (default)",
     )
     p.add_argument(
-        "--quant", default="all", choices=("all", "fp32", "quant"),
+        "--quant", default="all", choices=("all", "fp32", "quant", "int8"),
         help="which quantization variants to verify (default all)",
     )
     p.add_argument(
@@ -120,6 +120,14 @@ def run_verify(
         variants = [
             ("fp32", QuantSpec()),
             ("quant", QuantSpec(weight_bits=bits, act_bits=bits)),
+            (
+                "int8",
+                QuantSpec(
+                    weight_bits=min(bits, 8),
+                    act_bits=min(bits, 8),
+                    int8_compute=True,
+                ),
+            ),
         ]
         if quants != "all":
             variants = [v for v in variants if v[0] == quants]
@@ -141,7 +149,7 @@ def run_verify(
             )
             findings += verify_plan(
                 probe_plan,
-                ids=("V001", "V002", "V003", "V007", "V203"),
+                ids=("V001", "V002", "V003", "V007", "V008", "V203", "V204"),
                 where=f"{where}/interpret",
                 batch=batch,
             )

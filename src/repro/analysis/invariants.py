@@ -373,7 +373,10 @@ def _in_kernel_stream_quant(ctx):
     """With ``act_bits`` set, the feature-stream quantization rounds live
     INSIDE the fused kernels (one per conv layer), not as separate XLA
     ops between kernel calls — the paper quantizes the pixel flow inside
-    the actor."""
+    the actor. Int8 plans additionally quantize each group's INPUT frame
+    host-side (outside the kernel, so the resident frame is 1-byte codes
+    — the V204 contract): exactly one extra round per fusion group is
+    legal there, and no more."""
     plan = ctx.plan
     if plan.backend != _INTERPRET_BACKEND or plan.quant.act_bits is None:
         return []
@@ -381,6 +384,8 @@ def _in_kernel_stream_quant(ctx):
     n_conv = sum(len(st.conv_layers) for st in plan.stages)
     inside = count_primitive_in_pallas(jaxpr, "round")
     total = count_primitive(jaxpr, "round")
+    int8 = bool(getattr(plan.quant, "int8_compute", False))
+    allowed_outside = len(plan.fusion_groups) if int8 else 0
     out = []
     if inside != n_conv:
         out.append(ctx.error(
@@ -388,12 +393,54 @@ def _in_kernel_stream_quant(ctx):
             f"{inside} in-kernel stream-quant round(s) for {n_conv} conv "
             "layers — expected one per layer inside the pallas bodies",
         ))
-    if total != inside:
+    if total - inside != allowed_outside:
         out.append(ctx.error(
             "V007",
-            f"{total - inside} stream-quant round(s) escaped the kernels "
-            "into the XLA graph",
+            f"{total - inside} stream-quant round(s) outside the kernels "
+            f"in the XLA graph — expected {allowed_outside} "
+            f"({'one input-quantize per fusion group' if int8 else 'none'})",
         ))
+    return out
+
+
+@invariant("V008", name="integer-conv-compute", scope="structure")
+def _integer_conv_compute(ctx):
+    """An ``int8_compute`` plan really computes in integers: every conv
+    contraction in the feature trace takes integer operands and
+    accumulates into an int32 result (``preferred_element_type``) — no
+    hidden decode-to-fp32 matmul before the requantizing epilogue."""
+    plan = ctx.plan
+    if plan.backend not in _PALLAS_BACKENDS:
+        return []
+    if not bool(getattr(plan.quant, "int8_compute", False)):
+        return []
+    out = []
+    dots = find_primitive(ctx.features_jaxpr(), "dot_general")
+    if not dots:
+        return [ctx.error(
+            "V008", "int8 plan's feature trace contains no dot_general eqns"
+        )]
+    import jax.numpy as jnp
+
+    for di, eqn in enumerate(dots):
+        in_dtypes = [getattr(v.aval, "dtype", None) for v in eqn.invars]
+        if not all(
+            d is not None and jnp.issubdtype(d, jnp.integer) for d in in_dtypes
+        ):
+            out.append(ctx.error(
+                "V008",
+                f"dot_general #{di} takes {[str(d) for d in in_dtypes]} "
+                "operands — an int8 plan upcast to float before the matmul",
+            ))
+            continue
+        out_dtype = getattr(eqn.outvars[0].aval, "dtype", None)
+        if out_dtype != jnp.int32:
+            out.append(ctx.error(
+                "V008",
+                f"dot_general #{di} accumulates into {out_dtype} — int8 "
+                "contractions must accumulate into int32 "
+                "(preferred_element_type)",
+            ))
     return out
 
 
@@ -429,14 +476,17 @@ def _cost_model_consistent(ctx):
     from repro.core.dhm.fusion import (
         group_working_set,
         group_working_set_breakdown,
+        plan_elem_bytes,
     )
 
     plan = ctx.plan
+    elem_bytes = plan_elem_bytes(plan.quant)
     out = []
     for gi, g in enumerate(plan.fusion_groups):
         try:
             want = group_working_set(
-                plan.topo, g.layers, block_rows=g.block_rows
+                plan.topo, g.layers, block_rows=g.block_rows,
+                elem_bytes=elem_bytes,
             )
         except Exception as e:  # noqa: BLE001 — surfaced as a finding
             out.append(ctx.error(
@@ -447,14 +497,16 @@ def _cost_model_consistent(ctx):
             continue
         if want != g.working_set:
             parts = group_working_set_breakdown(
-                plan.topo, g.layers, block_rows=g.block_rows
+                plan.topo, g.layers, block_rows=g.block_rows,
+                elem_bytes=elem_bytes,
             )
             top = max(parts, key=parts.get)
             out.append(ctx.error(
                 "V202",
                 f"fusion group {gi} (layers {tuple(g.layers)}) records a "
                 f"working set of {g.working_set} B but the cost model says "
-                f"{want} B (largest component: {top} = {parts[top]} B)",
+                f"{want} B at {elem_bytes} B/elt (largest component: {top} "
+                f"= {parts[top]} B)",
             ))
     return out
 
@@ -486,6 +538,52 @@ def _traced_working_set(ctx):
                 f"footprint lower bound {bound} B (operands {operands} + "
                 f"widest intermediate {widest}) exceeds the costed working "
                 f"set {g.working_set} B — the planner under-estimated",
+            ))
+    return out
+
+
+@invariant("V204", name="int8-slab-costing", scope="resource")
+def _int8_slab_costing(ctx):
+    """An int8 plan charges int8 slab bytes (1 B/elt for the resident
+    frame, feature slabs and weight codes; int32 accumulators stay 4 B)
+    against ``vmem_budget`` — the recorded working sets must equal the
+    int8 costing and, for multi-layer groups, be strictly below what the
+    same group costs at fp32. A plan that books fp32 bytes under an int8
+    contract wastes the budget headroom the 1-byte slabs buy."""
+    from repro.core.dhm.fusion import group_working_set, plan_elem_bytes
+
+    plan = ctx.plan
+    if plan_elem_bytes(plan.quant) != 1:
+        return []
+    out = []
+    for gi, g in enumerate(plan.fusion_groups):
+        try:
+            want_int8 = group_working_set(
+                plan.topo, g.layers, block_rows=g.block_rows, elem_bytes=1
+            )
+            want_fp32 = group_working_set(
+                plan.topo, g.layers, block_rows=g.block_rows, elem_bytes=4
+            )
+        except Exception as e:  # noqa: BLE001 — surfaced as a finding
+            out.append(ctx.error(
+                "V204",
+                f"fusion group {gi} (layers {tuple(g.layers)}) cannot be "
+                f"re-costed: {e}",
+            ))
+            continue
+        if g.working_set != want_int8:
+            out.append(ctx.error(
+                "V204",
+                f"fusion group {gi} (layers {tuple(g.layers)}) records "
+                f"{g.working_set} B under an int8 plan; the int8 costing "
+                f"says {want_int8} B",
+            ))
+        elif g.working_set >= want_fp32:
+            out.append(ctx.error(
+                "V204",
+                f"fusion group {gi} (layers {tuple(g.layers)}) int8 "
+                f"working set {g.working_set} B is not below the fp32 "
+                f"costing {want_fp32} B — int8 slabs bought no headroom",
             ))
     return out
 

@@ -93,21 +93,84 @@ class QuantSpec:
     ``pow2_weights``: project weights onto the {0, ±2^k} codebook; the FC
     head then lowers through the packed ``pow2_matmul`` kernel (when no
     additional ``weight_bits`` re-quantization is stacked on top).
+    ``int8_compute``: execute the quantized plan in TRUE integer
+    arithmetic: conv weights are baked to int8 codes + a static pow2
+    scale, the feature stream enters each kernel as int8 codes, and the
+    conv matmuls contract integers into int32 accumulators
+    (``preferred_element_type``) with the requantization to the stream's
+    ``act_bits`` grid fused into the existing epilogue. Requires a weight
+    AND act width (<= 8) for every conv layer. Int8 plans are
+    forward-only (serving), not QAT paths.
+    ``per_layer_bits``: per-conv-layer bit widths (a tuple, one entry per
+    conv layer) overriding BOTH ``weight_bits`` and ``act_bits`` for that
+    layer — the paper's Fig. 3 bitwidth sweep as a compile-time plan
+    attribute (see ``repro.core.quant.bitwidth_search``).
     """
 
     weight_bits: Optional[int] = None
     act_bits: Optional[int] = None
     pow2_weights: bool = False
+    int8_compute: bool = False
+    per_layer_bits: Optional[tuple] = None
 
     def __post_init__(self):
         for name in ("weight_bits", "act_bits"):
             v = getattr(self, name)
             if v is not None and v < 2:
                 raise ValueError(f"{name} must be >= 2 (or None), got {v}")
+        if self.per_layer_bits is not None:
+            object.__setattr__(
+                self, "per_layer_bits", tuple(self.per_layer_bits)
+            )
+            for b in self.per_layer_bits:
+                if not isinstance(b, int) or isinstance(b, bool) or b < 2:
+                    raise ValueError(
+                        f"per_layer_bits entries must be ints >= 2, got "
+                        f"{self.per_layer_bits}"
+                    )
+        if self.int8_compute:
+            n = (
+                len(self.per_layer_bits)
+                if self.per_layer_bits is not None
+                else 1
+            )
+            for i in range(n):
+                wb, ab = self.conv_weight_bits(i), self.conv_act_bits(i)
+                if wb is None or ab is None:
+                    raise ValueError(
+                        "int8_compute requires a weight AND act bit width "
+                        "for every conv layer (weight_bits/act_bits or "
+                        "per_layer_bits)"
+                    )
+                if wb > 8 or ab > 8:
+                    raise ValueError(
+                        f"int8_compute requires all conv bit widths <= 8, "
+                        f"got weight={wb} act={ab} for layer {i}"
+                    )
+
+    def conv_weight_bits(self, i: int) -> Optional[int]:
+        """Weight bit width of conv layer ``i`` (per-layer override wins)."""
+        if self.per_layer_bits is not None:
+            return self.per_layer_bits[i]
+        return self.weight_bits
+
+    def conv_act_bits(self, i: int) -> Optional[int]:
+        """Feature-stream bit width AFTER conv layer ``i`` (per-layer
+        override wins)."""
+        if self.per_layer_bits is not None:
+            return self.per_layer_bits[i]
+        return self.act_bits
+
+    @property
+    def mixed_bitwidth(self) -> bool:
+        """Whether the plan carries per-layer bit choices."""
+        return self.per_layer_bits is not None
 
     @property
     def stream_bits(self) -> int:
         """Fixed-point width used to size DPN line buffers and streams."""
+        if self.per_layer_bits is not None:
+            return max(self.per_layer_bits)
         return self.act_bits or self.weight_bits or 32
 
     @property
@@ -116,7 +179,8 @@ class QuantSpec:
 
         With ``weight_bits`` stacked on top of the pow2 projection the
         weights leave the pure codebook, so the head falls back to the
-        dense (projected + fake-quantized) matmul.
+        dense (projected + fake-quantized) matmul. ``per_layer_bits``
+        only governs conv layers, so it does not demote the head.
         """
         return self.pow2_weights and self.weight_bits is None
 
@@ -215,7 +279,8 @@ def emit_conv_stage(
     specs: Sequence,
     *,
     backend: Optional[str] = None,
-    act_bits: Optional[int] = None,
+    act_bits=None,  # int | None | per-layer tuple
+    int8_scales: Optional[Sequence] = None,  # per-layer Int8Scales | None
     block_r: int = 8,
     block_w: int = 0,
     block_c: int = 0,
@@ -235,6 +300,12 @@ def emit_conv_stage(
     ``stream_conv_block`` (with its channel/width blocking knobs).
     ``groups=None`` means all-singleton — the pre-fusion stage body.
 
+    ``act_bits`` may be a single width for the whole stage or a per-layer
+    tuple (mixed-bitwidth plans); ``int8_scales`` (one
+    ``epilogue.Int8Scales`` per stage layer) switches the kernels to the
+    true-integer rendering — int8 weight codes are then expected in
+    ``params``.
+
     The returned ``stage_fn(params, x)`` runs conv -> bias -> act (-> pool
     -> stream quant) per layer. ``params`` is a list with one
     ``{"w": (K, K, C, N), "b": (N,)}`` dict per layer (a bare dict is
@@ -245,6 +316,22 @@ def emit_conv_stage(
     specs = tuple(specs)
     if not specs:
         raise ValueError("a conv stage needs at least one layer spec")
+    bits = (
+        tuple(act_bits)
+        if isinstance(act_bits, (tuple, list))
+        else (act_bits,) * len(specs)
+    )
+    if len(bits) != len(specs):
+        raise ValueError(
+            f"act_bits tuple has {len(bits)} entries for a "
+            f"{len(specs)}-layer stage"
+        )
+    scales = None if int8_scales is None else tuple(int8_scales)
+    if scales is not None and len(scales) != len(specs):
+        raise ValueError(
+            f"int8_scales has {len(scales)} entries for a "
+            f"{len(specs)}-layer stage"
+        )
     layer_kw = []
     for li, spec in enumerate(specs):
         fields = _spec_fields(spec)
@@ -278,7 +365,8 @@ def emit_conv_stage(
                     x,
                     p["w"],
                     p["b"],
-                    act_bits=act_bits,
+                    act_bits=bits[g[0]],
+                    int8_scales=None if scales is None else scales[g[0]],
                     backend=resolved,
                     block_r=block_r,
                     block_w=block_w,
@@ -292,7 +380,12 @@ def emit_conv_stage(
                     [layer_params[li]["w"] for li in g],
                     [layer_params[li]["b"] for li in g],
                     layers=[specs[li] for li in g],
-                    act_bits=act_bits,
+                    act_bits=tuple(bits[li] for li in g),
+                    int8_scales=(
+                        None
+                        if scales is None
+                        else tuple(scales[li] for li in g)
+                    ),
                     block_rows=block_rows,
                     backend=resolved,
                 )
@@ -307,41 +400,64 @@ def emit_conv_stage(
 
 def _bake_conv_params(conv_params, quant: QuantSpec):
     """Mirror the fake-quant reference composition order: pow2 projection
-    (STE) first, then fixed-point fake-quant of every tensor."""
-    from repro.core.quant.fixed_point import fake_quant_dynamic
+    (STE) first, then fixed-point fake-quant of every tensor.
+
+    Returns ``(baked_params, w_scales)``. Under ``quant.int8_compute`` the
+    weights bake to int8 CODES on the same dynamic pow2 grid
+    ``fake_quant_dynamic`` would use (``codes * scale ==
+    fake_quant_dynamic(w, bits)`` exactly), and ``w_scales`` carries the
+    static per-layer pow2 scale the kernels fold into their int32
+    dequantization; otherwise ``w_scales`` is None.
+    """
+    from repro.core.quant.fixed_point import (
+        dynamic_spec,
+        fake_quant_dynamic,
+        quantize_fixed,
+    )
     from repro.core.quant.pow2 import project_pow2_ste
 
-    out = []
-    for p in conv_params:
+    out, w_scales = [], []
+    for i, p in enumerate(conv_params):
         w, b = p["w"], p["b"]
+        wb = quant.conv_weight_bits(i)
         if quant.pow2_weights:
             w = project_pow2_ste(w)
-        if quant.weight_bits is not None:
-            w = fake_quant_dynamic(w, quant.weight_bits)
-            b = fake_quant_dynamic(b, quant.weight_bits)
+        if quant.int8_compute:
+            wspec = dynamic_spec(w, wb)
+            w = quantize_fixed(w, wspec).astype(jnp.int8)
+            b = fake_quant_dynamic(b, wb)
+            w_scales.append(float(wspec.scale))
+        elif wb is not None:
+            w = fake_quant_dynamic(w, wb)
+            b = fake_quant_dynamic(b, wb)
         out.append({"w": w, "b": b})
-    return tuple(out)
+    return tuple(out), (tuple(w_scales) if quant.int8_compute else None)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
-def _pow2_linear_ste(x, w, backend):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _pow2_linear_ste(x, w, backend, x_spec=None):
     """Forward through the packed pow2 kernel (x @ decode(pack(w)));
     backward straight-through, as if the layer were ``x @ project_pow2(w)``
     — so pow2 QAT keeps training while serving-path lowering is exercised
-    in the forward pass."""
+    in the forward pass. A static ``x_spec`` (the activation's fixed-point
+    grid) forwards through the true-integer shift-add rendering where the
+    backend supports it (see ``pow2_matmul``)."""
     from repro.kernels.pow2_matmul import pow2_matmul, quantize_weights
 
     packed, scale = quantize_weights(w)
-    return pow2_matmul(x, packed, scale, backend=backend)
+    return pow2_matmul(x, packed, scale, backend=backend, x_spec=x_spec)
 
 
-def _pow2_linear_ste_fwd(x, w, backend):
+def _pow2_linear_ste_fwd(x, w, backend, x_spec=None):
     from repro.core.quant.pow2 import project_pow2
 
-    return _pow2_linear_ste(x, w, backend), (x, project_pow2(w, channel_axis=1))
+    return (
+        _pow2_linear_ste(x, w, backend, x_spec),
+        (x, project_pow2(w, channel_axis=1)),
+    )
 
 
-def _pow2_linear_ste_bwd(backend, res, g):
+def _pow2_linear_ste_bwd(backend, x_spec, res, g):
     x, w_proj = res
     return (
         jnp.dot(g, w_proj.T.astype(g.dtype)),
@@ -352,10 +468,18 @@ def _pow2_linear_ste_bwd(backend, res, g):
 _pow2_linear_ste.defvjp(_pow2_linear_ste_fwd, _pow2_linear_ste_bwd)
 
 
-def _emit_head(fc_params, quant: QuantSpec, backend: str) -> Callable:
+def _emit_head(
+    fc_params, quant: QuantSpec, backend: str, head_in_bits=None
+) -> Callable:
     """Emit the classifier head: flatten -> FC stack, with the same
     quantization contract as the conv stages (tanh + feature-stream quant
-    between hidden layers; logits unquantized, as in the reference)."""
+    between hidden layers; logits unquantized, as in the reference).
+
+    Under ``int8_compute`` with a packed pow2 head, each FC forwards
+    through the integer shift-add rendering: the first FC's input grid is
+    the LAST conv layer's stream spec (``head_in_bits``), later FCs see
+    the head's own ``act_bits`` stream quant.
+    """
     from repro.core.quant.fixed_point import fake_quant_dynamic, fake_quant_ste
     from repro.core.quant.pow2 import project_pow2_ste
     from repro.kernels.stream_conv.epilogue import stream_quant_spec
@@ -374,12 +498,29 @@ def _emit_head(fc_params, quant: QuantSpec, backend: str) -> Callable:
     qact_spec = (
         stream_quant_spec(quant.act_bits) if quant.act_bits is not None else None
     )
+    int_head = (
+        quant.int8_compute
+        and quant.packed_fc_head
+        and quant.act_bits is not None
+    )
+    # The activation grid each FC's input lives on: the conv stream for the
+    # first FC, the head's own stream quant after that.
+    first_spec = (
+        stream_quant_spec(
+            head_in_bits if head_in_bits is not None else quant.act_bits
+        )
+        if int_head
+        else None
+    )
 
     def head_fn(h):
         h = h.reshape(h.shape[0], -1)
         for i, p in enumerate(baked):
             if quant.packed_fc_head:
-                h = _pow2_linear_ste(h, p["w"], backend) + p["b"]
+                x_spec = (
+                    (first_spec if i == 0 else qact_spec) if int_head else None
+                )
+                h = _pow2_linear_ste(h, p["w"], backend, x_spec) + p["b"]
             else:
                 h = h @ p["w"] + p["b"]
             if i < len(baked) - 1:
@@ -424,10 +565,29 @@ class CompiledDHM:
     conv_params: tuple  # per conv layer {"w", "b"}, quantization baked
     head_fn: Callable
     vmem_budget: int = DEFAULT_VMEM_BUDGET
+    int8_scales: tuple = ()  # per conv layer Int8Scales when int8_compute
 
     @property
     def n_stages(self) -> int:
         return len(self.stages)
+
+    def stage_quant_kwargs(self, stage: int) -> dict:
+        """The quantization kwargs ``emit_conv_stage`` needs to re-emit
+        stage ``stage``'s body (degradation-ladder rebuilds must inherit
+        the plan's int8/mixed-bitwidth contract, not just ``act_bits``)."""
+        st = self.stages[stage]
+        if not self.int8_scales and not self.quant.mixed_bitwidth:
+            return {"act_bits": self.quant.act_bits}
+        kw = {
+            "act_bits": tuple(
+                self.quant.conv_act_bits(i) for i in st.conv_layers
+            )
+        }
+        if self.int8_scales:
+            kw["int8_scales"] = tuple(
+                self.int8_scales[i] for i in st.conv_layers
+            )
+        return kw
 
     @property
     def fusion_groups(self) -> tuple:
@@ -577,6 +737,19 @@ def compile_dhm(
         raise ValueError(
             f"n_stages must be in [1, {n_conv}] for {topo.name}, got {n_stages}"
         )
+    if quant.per_layer_bits is not None and len(quant.per_layer_bits) != n_conv:
+        raise ValueError(
+            f"per_layer_bits has {len(quant.per_layer_bits)} entries but "
+            f"{topo.name} has {n_conv} conv layers"
+        )
+    if quant.int8_compute:
+        for i in range(n_conv):
+            wb, ab = quant.conv_weight_bits(i), quant.conv_act_bits(i)
+            if wb is None or ab is None or wb > 8 or ab > 8:
+                raise ValueError(
+                    f"int8_compute needs weight/act bits <= 8 for every "
+                    f"conv layer; layer {i} has weight={wb} act={ab}"
+                )
     resolved_budget = (
         DEFAULT_VMEM_BUDGET if vmem_budget is None else vmem_budget
     )
@@ -588,7 +761,26 @@ def compile_dhm(
     graph = _cached_dpn(topo, quant.stream_bits)
     assignment = _cached_layout(topo, quant.stream_bits, n_stages)
 
-    conv_params = _bake_conv_params(params["conv"], quant)
+    conv_params, w_scales = _bake_conv_params(params["conv"], quant)
+    if quant.int8_compute:
+        from repro.kernels.stream_conv.epilogue import Int8Scales
+
+        # Layer i's input stream is layer i-1's quantized output; layer 0
+        # quantizes the frame onto its own stream grid (the plan contract
+        # for int8 input ingestion).
+        int8_scales = tuple(
+            Int8Scales(
+                in_bits=quant.conv_act_bits(max(i - 1, 0)),
+                w_scale=w_scales[i],
+            )
+            for i in range(n_conv)
+        )
+    else:
+        int8_scales = ()
+    elem_bytes = 1 if quant.int8_compute else 4
+    per_layer_act = tuple(quant.conv_act_bits(i) for i in range(n_conv))
+    varies = quant.mixed_bitwidth or quant.int8_compute
+
     stages = []
     h, w = topo.input_shape
     c = topo.input_channels
@@ -600,7 +792,9 @@ def compile_dhm(
             h, w = spec.out_hw(h, w)
             c = spec.n_out
         io = StageIOSpec(in_shape=in_shape, out_shape=(h, w, c))
-        groups = plan_fusion_groups(topo, idxs, vmem_budget=resolved_budget)
+        groups = plan_fusion_groups(
+            topo, idxs, vmem_budget=resolved_budget, elem_bytes=elem_bytes
+        )
         local_groups = tuple(
             (tuple(li - idxs[0] for li in g.layers), g.block_rows)
             for g in groups
@@ -613,7 +807,16 @@ def compile_dhm(
                 fn=emit_conv_stage(
                     specs,
                     backend=resolved,
-                    act_bits=quant.act_bits,
+                    act_bits=(
+                        tuple(per_layer_act[i] for i in idxs)
+                        if varies
+                        else quant.act_bits
+                    ),
+                    int8_scales=(
+                        tuple(int8_scales[i] for i in idxs)
+                        if quant.int8_compute
+                        else None
+                    ),
                     block_r=block_r,
                     block_w=block_w,
                     block_c=block_c,
@@ -626,7 +829,9 @@ def compile_dhm(
             )
         )
 
-    head_fn = _emit_head(params["fc"], quant, resolved)
+    head_fn = _emit_head(
+        params["fc"], quant, resolved, head_in_bits=per_layer_act[-1]
+    )
     return CompiledDHM(
         topo=topo,
         quant=quant,
@@ -637,4 +842,5 @@ def compile_dhm(
         conv_params=conv_params,
         head_fn=head_fn,
         vmem_budget=resolved_budget,
+        int8_scales=int8_scales,
     )

@@ -579,7 +579,7 @@ class Engine:
         plan = self.plan
         stage_fns = [
             emit_conv_stage(
-                st.specs, backend=backend, act_bits=plan.quant.act_bits
+                st.specs, backend=backend, **plan.stage_quant_kwargs(st.index)
             )
             for st in plan.stages
         ]

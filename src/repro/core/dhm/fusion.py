@@ -54,24 +54,44 @@ class FusionGroup:
         return len(self.layers) > 1
 
 
+def plan_elem_bytes(quant) -> int:
+    """Streamed-slab byte width of a plan's quantization regime: 1 when
+    the plan computes in true int8 (frames, inter-layer slabs, tap
+    operands and weight codes really are int8 in VMEM), else 4 (the
+    fp32/fake-quant paths, where the quantized stream is a rounding
+    contract, not a storage format). Accepts any ``QuantSpec``-shaped
+    object (or None)."""
+    return 1 if getattr(quant, "int8_compute", False) else 4
+
+
 def group_working_set(
-    topo, layer_indices: Sequence[int], *, block_rows: int = 0
+    topo, layer_indices: Sequence[int], *, block_rows: int = 0,
+    elem_bytes: int = 4,
 ) -> int:
     """Costed per-block VMEM bytes of fusing ``layer_indices`` (contiguous
     run) of ``topo`` — the quantity the planner compares to its budget.
-    Exposed so tests (and users sizing a budget) can read the model."""
-    return working_set_bytes(_group_geom(topo, layer_indices, block_rows))
+    Exposed so tests (and users sizing a budget) can read the model.
+    ``elem_bytes`` is the streamed-slab width (see :func:`plan_elem_bytes`);
+    accumulators are always charged at 4 bytes (int32/fp32 epilogue)."""
+    return working_set_bytes(
+        _group_geom(topo, layer_indices, block_rows),
+        elem_bytes=elem_bytes, acc_bytes=4,
+    )
 
 
 def group_working_set_breakdown(
-    topo, layer_indices: Sequence[int], *, block_rows: int = 0
+    topo, layer_indices: Sequence[int], *, block_rows: int = 0,
+    elem_bytes: int = 4,
 ) -> dict:
     """Per-component bytes behind :func:`group_working_set` (see
     ``halo.working_set_breakdown``) — what the plan verifier cites when
     a group's recorded cost and the model disagree."""
     from repro.kernels.stream_conv.halo import working_set_breakdown
 
-    return working_set_breakdown(_group_geom(topo, layer_indices, block_rows))
+    return working_set_breakdown(
+        _group_geom(topo, layer_indices, block_rows),
+        elem_bytes=elem_bytes, acc_bytes=4,
+    )
 
 
 def _group_geom(topo, layer_indices: Sequence[int], block_rows: int):
@@ -94,10 +114,9 @@ def _group_geom(topo, layer_indices: Sequence[int], block_rows: int):
     )
 
 
-def _fit_block_rows(topo, idxs, budget: int) -> Optional[tuple]:
-    """Largest feasible (block_rows, working_set) for fusing ``idxs``
-    under ``budget``: whole-frame first, then halved row blocks down to
-    one row. None if nothing fits (or the geometry is unsupported)."""
+def _block_row_candidates(topo, idxs) -> list:
+    """The planner's block-size ladder for a group: whole frame first,
+    then halved row blocks down to one row."""
     h, w = topo.input_shape
     for spec in topo.conv_layers[: idxs[-1] + 1]:
         h, w = spec.out_hw(h, w)
@@ -108,9 +127,20 @@ def _fit_block_rows(topo, idxs, budget: int) -> Optional[tuple]:
         if r == 1:
             break
         r = -(-r // 2)
-    for r in candidates:
+    return candidates
+
+
+def _fit_block_rows(
+    topo, idxs, budget: int, elem_bytes: int = 4
+) -> Optional[tuple]:
+    """Largest feasible (block_rows, working_set) for fusing ``idxs``
+    under ``budget``: whole-frame first, then halved row blocks down to
+    one row. None if nothing fits (or the geometry is unsupported)."""
+    for r in _block_row_candidates(topo, idxs):
         try:
-            ws = group_working_set(topo, idxs, block_rows=r)
+            ws = group_working_set(
+                topo, idxs, block_rows=r, elem_bytes=elem_bytes
+            )
         except ValueError:
             return None  # shape the pyramid cannot lower -> no fusion
         if ws <= budget:
@@ -118,11 +148,46 @@ def _fit_block_rows(topo, idxs, budget: int) -> Optional[tuple]:
     return None
 
 
+def widening_budget(topo, layer_indices: Sequence[int]) -> Optional[dict]:
+    """The structural int8-widens-fusion probe: the largest budget at
+    which NO fp32-costed block size can fuse the whole run, paired with
+    what each costing plans there. Returns ``{"budget", "fp32_max_group",
+    "int8_max_group", "n_layers"}`` — int8 widening is demonstrated when
+    ``int8_max_group > fp32_max_group`` — or None when even the probe
+    budget cannot separate the two costings (e.g. a single-layer run).
+    """
+    idxs = tuple(layer_indices)
+    if len(idxs) < 2:
+        return None
+    costs = []
+    for r in _block_row_candidates(topo, idxs):
+        try:
+            costs.append(group_working_set(topo, idxs, block_rows=r))
+        except ValueError:
+            continue
+    if not costs:
+        return None
+    budget = min(costs) - 1  # fp32 cannot fuse the full run at any block
+    plans = {
+        eb: plan_fusion_groups(
+            topo, idxs, vmem_budget=budget, elem_bytes=eb
+        )
+        for eb in (4, 1)
+    }
+    return {
+        "budget": budget,
+        "fp32_max_group": max(len(g.layers) for g in plans[4]),
+        "int8_max_group": max(len(g.layers) for g in plans[1]),
+        "n_layers": len(idxs),
+    }
+
+
 def plan_fusion_groups(
     topo,
     layer_indices: Sequence[int],
     *,
     vmem_budget: Optional[int] = None,
+    elem_bytes: int = 4,
 ) -> tuple:
     """Partition a contiguous run of conv layers into maximal fusion
     groups under the VMEM budget.
@@ -133,7 +198,10 @@ def plan_fusion_groups(
     cannot fuse at all become singleton groups, which lower through the
     single-layer kernel path (bit-identical to the pre-fusion plan).
     ``vmem_budget=None`` means :data:`DEFAULT_VMEM_BUDGET`; ``0`` turns
-    fusion off entirely.
+    fusion off entirely. ``elem_bytes`` is the streamed-slab byte width
+    the costing charges (``plan_elem_bytes(quant)`` — 1 for true-int8
+    plans, whose slabs really occupy a quarter of the fp32 bytes, so the
+    same budget admits strictly wider groups).
     """
     idxs = tuple(layer_indices)
     if not idxs:
@@ -148,7 +216,9 @@ def plan_fusion_groups(
 
     def fit_of(i: int, j: int):
         if (i, j) not in fit_cache:
-            fit_cache[(i, j)] = _fit_block_rows(topo, idxs[i:j], budget)
+            fit_cache[(i, j)] = _fit_block_rows(
+                topo, idxs[i:j], budget, elem_bytes
+            )
         return fit_cache[(i, j)]
 
     def fits(i: int, j: int) -> bool:

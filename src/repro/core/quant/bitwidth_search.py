@@ -54,3 +54,68 @@ def search_bitwidth(
         selected_bits=int(selected),
         max_drop=float(max_drop),
     )
+
+
+def search_plan_bitwidths(
+    topo,
+    params: dict,
+    evaluate: Callable,
+    *,
+    float_accuracy: float,
+    bit_range: Sequence[int] = (2, 3, 4, 5, 6, 7, 8),
+    max_drop: float = 0.04,
+    int8_compute: bool = False,
+    **compile_kw,
+):
+    """The Fig. 3 sweep as a COMPILER knob: each candidate width compiles
+    to a real :class:`~repro.core.dhm.compiler.CompiledDHM` (weights and
+    feature-stream quantization baked at that width) and ``evaluate(plan)``
+    scores it; the selected width lands on the returned plan as a
+    ``QuantSpec.per_layer_bits`` attribute — a compile-time plan property
+    the cost model and invariants can see, not an offline note.
+
+    ``int8_compute=True`` restricts the sweep to widths <= 8 and compiles
+    the candidates (and the final plan) on the true-integer path.
+
+    Returns ``(BitwidthSearchResult, CompiledDHM)`` — the curve plus the
+    plan compiled at the selected width.
+    """
+    from repro.core.dhm.compiler import QuantSpec, compile_dhm
+
+    bits = [int(b) for b in bit_range]
+    if int8_compute:
+        bits = [b for b in bits if b <= 8]
+        if not bits:
+            raise ValueError(
+                f"int8_compute sweep needs widths <= 8, got {bit_range}"
+            )
+
+    def _plan(b: int):
+        return compile_dhm(
+            topo,
+            params,
+            quant=QuantSpec(
+                weight_bits=b, act_bits=b, int8_compute=int8_compute
+            ),
+            **compile_kw,
+        )
+
+    result = search_bitwidth(
+        lambda b: evaluate(_plan(b)),
+        float_accuracy=float_accuracy,
+        bit_range=bits,
+        max_drop=max_drop,
+    )
+    b = result.selected_bits
+    final = compile_dhm(
+        topo,
+        params,
+        quant=QuantSpec(
+            weight_bits=b,
+            act_bits=b,
+            int8_compute=int8_compute,
+            per_layer_bits=(b,) * len(topo.conv_layers),
+        ),
+        **compile_kw,
+    )
+    return result, final

@@ -120,6 +120,22 @@ def fake_quant_ste(x: jax.Array, spec: FixedPointSpec) -> jax.Array:
     )
 
 
+def dynamic_spec(x: jax.Array, bits: int) -> FixedPointSpec:
+    """The STATIC ``FixedPointSpec`` whose pow2 scale equals the in-graph
+    scale ``fake_quant_dynamic`` would derive for this tensor.
+
+    Mirrors ``fake_quant_dynamic`` op-for-op (``jnp`` float32 ``log2`` /
+    ``ceil`` on ``max(|x|, 1e-12)``) rather than going through
+    ``for_tensor``: the two differ when ``max|x|`` lands exactly on a
+    power of two (``for_tensor`` adds 1e-12 before the log, which tips
+    ``ceil`` up a notch), and the true-int8 compile path needs its baked
+    integer codes to reproduce the fake-quant values bit-exactly.
+    """
+    max_abs = jnp.max(jnp.abs(jax.lax.stop_gradient(x)))
+    m = int(jnp.ceil(jnp.log2(jnp.maximum(max_abs, 1e-12))))
+    return FixedPointSpec(bits=bits, frac_bits=(bits - 1) - m)
+
+
 def fake_quant_dynamic(x: jax.Array, bits: int) -> jax.Array:
     """Trace-compatible fake-quant: the power-of-two scale is derived from the
     live tensor max (``for_tensor`` done in-graph), with STE gradients.

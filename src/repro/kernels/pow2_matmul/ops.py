@@ -24,7 +24,7 @@ from repro.kernels.backends import (
 )
 from repro.kernels.padding import pad_axis_to, pad_axis_to_multiple
 from repro.kernels.pow2_matmul.pow2 import pow2_matmul_pallas
-from repro.kernels.pow2_matmul.ref import pow2_matmul_ref
+from repro.kernels.pow2_matmul.ref import pow2_matmul_int_ref, pow2_matmul_ref
 
 
 def quantize_weights(w: jax.Array):
@@ -46,7 +46,9 @@ def quantize_weights(w: jax.Array):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_m", "block_n", "block_k", "out_dtype", "backend"),
+    static_argnames=(
+        "block_m", "block_n", "block_k", "out_dtype", "backend", "x_spec",
+    ),
 )
 def pow2_matmul(
     x: jax.Array,
@@ -58,6 +60,7 @@ def pow2_matmul(
     block_k: int = 128,
     out_dtype=jnp.float32,
     backend: str = DEFAULT_BACKEND,  # pallas | pallas_interpret | ref
+    x_spec=None,  # FixedPointSpec of x's grid -> true-integer rendering
 ) -> jax.Array:
     """out[m, n] = sum_k x[m, k] * decode(codes[k, n]) * scale[n].
 
@@ -66,6 +69,14 @@ def pow2_matmul(
     Shapes need not be block-aligned; inputs are zero-padded here (honoring
     the kernel's "pad in ops.pow2_matmul" contract — zero codes decode to
     0.0, so padding is exact) and the result is sliced back to (M, N).
+
+    ``x_spec`` (a static ``FixedPointSpec``) switches XLA-rendered routes
+    to the true-integer path: pow2 codes decode to int8 shift weights,
+    activations quantize onto ``x_spec``'s grid, and one int8xint8->int32
+    matmul replaces the decode-to-fp32 matmul (exact for on-grid x — both
+    scales are pow2). The compiled TPU Pallas kernel keeps the fp32 decode
+    for now (Mosaic-native shift-add is a roadmap item), so ``x_spec`` is
+    honored on ref / CPU-fallback and ignored on compiled pallas.
     """
     validate_backend(backend)
     n = scale.shape[0]
@@ -77,6 +88,10 @@ def pow2_matmul(
     if backend == "ref" or (
         backend == "pallas" and not compiled_pallas_available()
     ):
+        if x_spec is not None:
+            return pow2_matmul_int_ref(
+                x, packed, scale, x_spec=x_spec, out_dtype=out_dtype
+            )
         return pow2_matmul_ref(x, packed, scale, out_dtype=out_dtype)
     m, k = x.shape
     n_even = packed.shape[1] * 2

@@ -30,3 +30,36 @@ def pow2_matmul_ref(
     # Odd N: the pad column holds zero codes; slice it off before scaling.
     n = scale.shape[0]
     return (acc[:, :n] * scale[None, :]).astype(out_dtype)
+
+
+def pow2_matmul_int_ref(
+    x: jax.Array,  # (M, K) float on the x_spec grid (or int8 codes)
+    packed: jax.Array,  # (K, ceil(N/2)) uint8
+    scale: jax.Array,  # (N,) float32 — N is the true layer width
+    *,
+    x_spec,  # FixedPointSpec of x's grid
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """True-integer rendering: the pow2 codes decode to INTEGER shift
+    weights (0 or ±2^(m-1), magnitude <= 64 — int8), the activations
+    quantize onto their fixed-point grid as int8 codes, and ONE integer
+    matmul accumulates in int32; the per-channel float scale and the
+    activation scale fold in afterwards. Skips the decode-to-fp32 matmul
+    entirely — the shift-add multiplier of the paper's pow2 arithmetic,
+    rendered as int8 MXU arithmetic.
+    """
+    from repro.core.quant.fixed_point import quantize_fixed
+
+    codes = unpack_codes_u4(packed)  # (K, 2 * ceil(N/2)) uint8
+    mag = (codes & 0x7).astype(jnp.int32)
+    wi = jnp.where(mag == 0, 0, 1 << jnp.maximum(mag - 1, 0))
+    wi = jnp.where((codes & 0x8) != 0, -wi, wi).astype(jnp.int8)
+    qx = (
+        quantize_fixed(x, x_spec).astype(jnp.int8)
+        if jnp.issubdtype(x.dtype, jnp.floating)
+        else x
+    )
+    acc = jnp.dot(qx, wi, preferred_element_type=jnp.int32)
+    n = scale.shape[0]
+    out = acc[:, :n].astype(jnp.float32) * (x_spec.scale * scale[None, :])
+    return out.astype(out_dtype)

@@ -67,10 +67,16 @@ from repro.kernels.stream_conv.halo import group_geometry
 
 def _kernel_body(
     x_blk, w_ref, b_ref, o_ref, acc_ref, *, k, s, r_conv, w_conv, act,
-    pool, pool_stride, act_bits, out_dtype,
+    pool, pool_stride, act_bits, int8_scales, out_dtype,
 ):
     """Shared body: x_blk is the assembled ((r_conv-1)*s + k,
-    (w_conv-1)*s + k, bc) input tile (body + halo strips)."""
+    (w_conv-1)*s + k, bc) input tile (body + halo strips).
+
+    With ``int8_scales`` the tile and taps are int8 codes: the single
+    matmul contracts integers into the int32 accumulator scratch and the
+    write-back epilogue dequantizes with one exact pow2 multiply before
+    requantizing onto the ``act_bits`` stream grid — true integer MXU
+    arithmetic, same epilogue contract."""
     cb = pl.program_id(4)
     n_cb = pl.num_programs(4)
 
@@ -93,17 +99,30 @@ def _kernel_body(
                 )
             )
     patches = jnp.stack(taps, axis=2)  # (r_conv, w_conv, k*k, bc)
-    operand = patches.reshape(r_conv * w_conv, k * k * bc).astype(jnp.float32)
-    w_flat = w_ref[...].reshape(k * k * bc, -1).astype(jnp.float32)
-    # ONE MXU matmul per tile (per channel-block accumulation step).
-    acc_ref[...] += jnp.dot(
-        operand, w_flat, preferred_element_type=jnp.float32
-    ).reshape(r_conv, w_conv, -1)
+    if int8_scales is not None:
+        operand = patches.reshape(r_conv * w_conv, k * k * bc)
+        w_flat = w_ref[...].reshape(k * k * bc, -1)
+        # ONE integer MXU matmul per tile, int32 accumulation.
+        acc_ref[...] += jnp.dot(
+            operand, w_flat, preferred_element_type=jnp.int32
+        ).reshape(r_conv, w_conv, -1)
+    else:
+        operand = patches.reshape(
+            r_conv * w_conv, k * k * bc
+        ).astype(jnp.float32)
+        w_flat = w_ref[...].reshape(k * k * bc, -1).astype(jnp.float32)
+        # ONE MXU matmul per tile (per channel-block accumulation step).
+        acc_ref[...] += jnp.dot(
+            operand, w_flat, preferred_element_type=jnp.float32
+        ).reshape(r_conv, w_conv, -1)
 
     @pl.when(cb == n_cb - 1)
     def _write():
+        y = acc_ref[...]
+        if int8_scales is not None:
+            y = y.astype(jnp.float32) * int8_scales.deq_scale
         y = apply_epilogue(
-            acc_ref[...], b_ref[...], act=act, pool=pool,
+            y, b_ref[...], act=act, pool=pool,
             pool_stride=pool_stride, act_bits=act_bits,
         )
         o_ref[0] = y.astype(out_dtype)
@@ -142,7 +161,8 @@ def _block_multiple(k: int, s: int, pw: int, ps: int) -> tuple:
     jax.jit,
     static_argnames=(
         "k", "stride", "act", "pool", "pool_stride", "act_bits",
-        "block_r", "block_w", "block_c", "block_n", "out_dtype", "interpret",
+        "int8_scales", "block_r", "block_w", "block_c", "block_n",
+        "out_dtype", "interpret",
     ),
 )
 def stream_conv_fused_pallas(
@@ -156,6 +176,7 @@ def stream_conv_fused_pallas(
     pool: int = 0,
     pool_stride: int | None = None,
     act_bits: int | None = None,
+    int8_scales=None,
     block_r: int = 8,
     block_w: int = 0,  # 0 = full conv-output width per block
     block_c: int = 0,  # 0 = full C per step
@@ -167,9 +188,22 @@ def stream_conv_fused_pallas(
     square max-pool window (0 = none) sliding with ``pool_stride``
     (default: the window); act in {none, relu, tanh}; ``act_bits``
     quantizes the output feature stream in-kernel. Returns (B, H', W', N)
-    where H', W' are the pooled output dims."""
+    where H', W' are the pooled output dims.
+
+    ``int8_scales`` (``epilogue.Int8Scales``) selects the true-int8
+    rendering: ``x`` must arrive pre-quantized as int8 stream codes (the
+    host wrapper quantizes OUTSIDE the pallas_call so the resident frame
+    is 1 byte/element) and ``w_taps`` as int8 weight codes; the kernel
+    contracts integers into an int32 accumulator scratch and dequantizes
+    at write-back."""
     b, h, wd, c = x.shape
     kk, c2, n = w_taps.shape
+    if int8_scales is not None:
+        if x.dtype != jnp.int8 or w_taps.dtype != jnp.int8:
+            raise ValueError(
+                "int8_scales requires int8 code operands, got "
+                f"x={x.dtype}, w_taps={w_taps.dtype}"
+            )
     if kk != k * k or c2 != c:
         raise ValueError(f"w_taps {w_taps.shape} inconsistent with k={k}, C={c}")
     if bias.shape != (n,):
@@ -224,7 +258,8 @@ def stream_conv_fused_pallas(
     grid = (b, n_rb, n_wb, n_pad // bn, c_pad // bc)
     kw = dict(
         k=k, s=s, r_conv=r_conv, w_conv=w_conv, act=act, pool=pool,
-        pool_stride=pool_stride, act_bits=act_bits, out_dtype=out_dtype,
+        pool_stride=pool_stride, act_bits=act_bits,
+        int8_scales=int8_scales, out_dtype=out_dtype,
     )
 
     in_specs = [
@@ -276,7 +311,12 @@ def stream_conv_fused_pallas(
         out_shape=jax.ShapeDtypeStruct(
             (b, n_rb * r_o, n_wb * wc_o, n_pad), out_dtype
         ),
-        scratch_shapes=[pltpu.VMEM((r_conv, w_conv, bn), jnp.float32)],
+        scratch_shapes=[
+            pltpu.VMEM(
+                (r_conv, w_conv, bn),
+                jnp.int32 if int8_scales is not None else jnp.float32,
+            )
+        ],
         interpret=interpret,
     )(*inputs)
     return out[:, :h_keep, :w_keep, :n]
@@ -314,14 +354,22 @@ def _assemble_taps(slab, k: int, s: int, conv_rows: int, conv_cols: int):
     return patches.reshape(conv_rows * conv_cols, k * k * c)
 
 
-def _pyramid_kernel(*refs, geom, act_bits, out_dtype):
+def _pyramid_kernel(*refs, geom, act_bits, int8_scales, out_dtype):
     """Kernel body: stream one row block of the final output through the
     whole fusion group. refs = (x_ref, w_ref0, b_ref0, w_ref1, b_ref1, ...,
     o_ref). Every inter-layer slab lives in VMEM for the block's lifetime;
-    nothing is written back until the last layer's pooled rows."""
+    nothing is written back until the last layer's pooled rows.
+
+    ``act_bits`` is a per-layer tuple; ``int8_scales`` (None or a
+    per-layer tuple of ``Int8Scales``) selects true integer arithmetic:
+    the resident frame and every inter-layer slab are int8 stream CODES
+    (1 byte/element in VMEM — intermediate epilogues emit ``codes_out``),
+    each layer's single matmul contracts integers into int32, and only
+    the group's final epilogue dequantizes to fp32 grid values."""
     x_ref, o_ref = refs[0], refs[-1]
     wb = refs[1:-1]
     rb = pl.program_id(1)
+    n_layers = len(geom.layers)
 
     g0 = geom.layers[0]
     start0 = g0.in_mult * rb + g0.in_off + geom.input_row_shift
@@ -333,20 +381,26 @@ def _pyramid_kernel(*refs, geom, act_bits, out_dtype):
             slice(None),
             slice(None),
         ),
-    )[0].astype(jnp.float32)
+    )[0]
+    if int8_scales is None:
+        slab = slab.astype(jnp.float32)
 
     for i, g in enumerate(geom.layers):
+        sc = None if int8_scales is None else int8_scales[i]
         if i > 0:
             # The slab is the previous layer's output over an affine row
             # interval that may reach outside the frame: rows outside
             # [0, in_rows) are exactly this layer's SAME zero padding
             # (VALID layers never read them — they only feed rows that
-            # are discarded downstream).
+            # are discarded downstream). Zero is dtype-preserving: on the
+            # int8 path code 0 IS value 0.
             rows = (
                 jax.lax.broadcasted_iota(jnp.int32, slab.shape, 0)
                 + g.in_mult * rb + g.in_off
             )
-            slab = jnp.where((rows >= 0) & (rows < g.in_rows), slab, 0.0)
+            slab = jnp.where(
+                (rows >= 0) & (rows < g.in_rows), slab, jnp.zeros_like(slab)
+            )
             lc, rc = g.pads[1]
             if lc or rc:
                 slab = jnp.pad(slab, ((0, 0), (lc, rc), (0, 0)))
@@ -354,15 +408,24 @@ def _pyramid_kernel(*refs, geom, act_bits, out_dtype):
             slab, g.k, g.stride, g.conv_slab_rows, g.conv_cols
         )
         w_flat = wb[2 * i][...].reshape(g.k * g.k * g.in_ch, g.n_out)
-        # ONE MXU matmul per layer per block.
-        y = jnp.dot(
-            operand,
-            w_flat.astype(jnp.float32),
-            preferred_element_type=jnp.float32,
-        ).reshape(g.conv_slab_rows, g.conv_cols, g.n_out)
+        if sc is not None:
+            # ONE integer MXU matmul per layer per block -> int32 acc ->
+            # exact pow2 dequant.
+            y = jnp.dot(
+                operand, w_flat, preferred_element_type=jnp.int32
+            ).reshape(g.conv_slab_rows, g.conv_cols, g.n_out)
+            y = y.astype(jnp.float32) * sc.deq_scale
+        else:
+            # ONE MXU matmul per layer per block.
+            y = jnp.dot(
+                operand,
+                w_flat.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            ).reshape(g.conv_slab_rows, g.conv_cols, g.n_out)
         slab = apply_epilogue(
             y, wb[2 * i + 1][...], act=g.act, pool=g.pw,
-            pool_stride=g.ps, act_bits=act_bits, pool_first=True,
+            pool_stride=g.ps, act_bits=act_bits[i], pool_first=True,
+            codes_out=sc is not None and i < n_layers - 1,
         )
     o_ref[0] = slab.astype(out_dtype)
 
@@ -370,7 +433,8 @@ def _pyramid_kernel(*refs, geom, act_bits, out_dtype):
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "layers", "act_bits", "block_rows", "out_dtype", "interpret"
+        "layers", "act_bits", "int8_scales", "block_rows", "out_dtype",
+        "interpret",
     ),
 )
 def stream_conv_pyramid_pallas(
@@ -379,7 +443,8 @@ def stream_conv_pyramid_pallas(
     biases: tuple,  # per layer (N,)
     *,
     layers: tuple,  # PyramidLayer per layer
-    act_bits: int | None = None,
+    act_bits=None,  # int | None | per-layer tuple
+    int8_scales=None,  # None | per-layer tuple of Int8Scales
     block_rows: int = 0,  # final-output rows per block; 0 = whole frame
     out_dtype=jnp.float32,
     interpret: bool = False,
@@ -396,6 +461,15 @@ def stream_conv_pyramid_pallas(
     (B, H', W', N_last).
     """
     b, h, w, c = x.shape
+    if int8_scales is not None and x.dtype != jnp.int8:
+        raise ValueError(
+            f"int8_scales requires a pre-quantized int8 frame, got {x.dtype}"
+        )
+    bits = (
+        act_bits
+        if isinstance(act_bits, tuple)
+        else (act_bits,) * len(layers)
+    )
     kernels = tuple(wt.shape[0] for wt in weights)
     n_outs = tuple(wt.shape[3] for wt in weights)
     geom = group_geometry(
@@ -431,7 +505,8 @@ def stream_conv_pyramid_pallas(
     n_last = n_outs[-1]
     out = pl.pallas_call(
         functools.partial(
-            _pyramid_kernel, geom=geom, act_bits=act_bits, out_dtype=out_dtype
+            _pyramid_kernel, geom=geom, act_bits=bits,
+            int8_scales=int8_scales, out_dtype=out_dtype,
         ),
         grid=grid,
         in_specs=in_specs,

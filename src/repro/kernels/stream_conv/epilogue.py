@@ -29,11 +29,45 @@ an (r, w, bn) VMEM block, the XLA path on a (B, r, w, N) row block.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax.numpy as jnp
 
 from repro.core.quant.fixed_point import FixedPointSpec
 
 ACTS = ("none", "relu", "tanh")
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8Scales:
+    """Static (hashable — rides jit ``static_argnames``) descriptor of one
+    conv layer's true-int8 arithmetic contract.
+
+    ``in_bits`` names the input stream's Q-format (the PRODUCER's
+    ``act_bits``; for the first layer, its own stream grid — the plan
+    quantizes the incoming frame onto it). ``w_scale`` is the baked
+    weights' static pow2 scale: ``int8 codes * w_scale`` reproduces the
+    fake-quant weight values bit-exactly, so the integer matmul's int32
+    accumulator dequantizes with one exact pow2 multiply
+    (``in_scale * w_scale``) back to the fp32 values the fake-quant
+    oracle computes.
+    """
+
+    in_bits: int
+    w_scale: float
+
+    @property
+    def in_spec(self) -> FixedPointSpec:
+        return stream_quant_spec(self.in_bits)
+
+    @property
+    def in_scale(self) -> float:
+        return self.in_spec.scale
+
+    @property
+    def deq_scale(self) -> float:
+        """int32 accumulator -> fp32 values (exact: pow2 * pow2)."""
+        return self.in_scale * self.w_scale
 
 
 def normalize_pool(pool: int, pool_stride: int | None = None) -> tuple:
@@ -112,9 +146,21 @@ def _maxpool_window(y, window: int, stride: int):
     return out
 
 
+def quantize_stream(x, act_bits: int):
+    """Quantize fp32 values onto the ``act_bits`` stream grid as int8
+    CODES (value = code * scale). Exact (a pure representation change)
+    when ``x`` already sits on the grid — which every fused-kernel
+    boundary guarantees. int8 holds any stream code: ``act_bits <= 8``
+    is enforced by the compile-time ``int8_compute`` validation."""
+    spec = stream_quant_spec(act_bits)
+    q = jnp.clip(jnp.round(x / spec.scale), spec.qmin, spec.qmax)
+    return q.astype(jnp.int8)
+
+
 def apply_epilogue(
     y, bias, *, act: str, pool: int, pool_stride: int | None = None,
     act_bits: int | None = None, ste: bool = False, pool_first: bool = False,
+    codes_out: bool = False,
 ):
     """y: (..., H, W, N) f32; bias: (N,). Returns the block after
     bias + activation + optional pool x pool / pool_stride max-pool (VALID
@@ -135,8 +181,19 @@ def apply_epilogue(
     activation work by the pool factor, so the cross-layer fused pyramid
     uses it (the single-layer actor chain keeps the paper's
     conv -> act -> pool order).
+
+    ``codes_out=True`` (true-int8 pyramid interiors) returns the stream
+    quantization's int8 CODES instead of the dequantized fp32 values —
+    the inter-layer slab stays 1 byte/element in VMEM and the next
+    layer's integer matmul consumes it directly. Requires ``act_bits``
+    and is mutually exclusive with ``ste`` (the codes path is
+    forward-only).
     """
     validate_epilogue(act, pool, pool_stride, act_bits)
+    if codes_out and (act_bits is None or ste):
+        raise ValueError(
+            "codes_out requires act_bits and is forward-only (ste=False)"
+        )
     pw, ps = normalize_pool(pool, pool_stride)
     y = y + bias.astype(jnp.float32)
     if pool_first and pw:
@@ -155,5 +212,5 @@ def apply_epilogue(
             y = fake_quant_ste(y, spec)
         else:
             q = jnp.clip(jnp.round(y / spec.scale), spec.qmin, spec.qmax)
-            y = q * spec.scale
+            y = q.astype(jnp.int8) if codes_out else q * spec.scale
     return y

@@ -233,44 +233,68 @@ def group_geometry(
     )
 
 
-def working_set_bytes(geom: GroupGeometry, *, elem_bytes: int = 4) -> int:
+def working_set_bytes(
+    geom: GroupGeometry, *, elem_bytes: int = 4, acc_bytes: int | None = None
+) -> int:
     """Per-block VMEM working set of the fused pyramid kernel, in bytes.
 
     Counts the (host-padded) input frame resident per grid cell, and per
     layer: the padded input slab, the column-assembled tap operand, the
     K*K patch operand feeding the single matmul, the conv-output slab, the
     pooled output slab, and the layer's weights + bias. This is the
-    quantity the fusion planner holds against its VMEM budget. All terms
-    are f32 (TPU compute precision) regardless of the stream bit-width:
-    the quantized stream is a *rounding* contract, not a storage format,
-    on this substrate.
+    quantity the fusion planner holds against its VMEM budget.
+
+    The costing is dtype-parametric: ``elem_bytes`` is the byte width of
+    the streamed slabs (frames, inter-layer feature slabs, tap operands,
+    weight codes — 4 on the fp32/fake-quant path, 1 when the plan
+    computes in true int8 and the slabs really are int8 codes) and
+    ``acc_bytes`` the accumulator/epilogue width (the int32 accumulator
+    and its fp32 dequantization — defaults to ``elem_bytes`` so the
+    historic fp32 totals are unchanged). Bias stays f32 on every path.
     """
-    return sum(working_set_breakdown(geom, elem_bytes=elem_bytes).values())
+    return sum(
+        working_set_breakdown(
+            geom, elem_bytes=elem_bytes, acc_bytes=acc_bytes
+        ).values()
+    )
 
 
 def working_set_breakdown(
-    geom: GroupGeometry, *, elem_bytes: int = 4
+    geom: GroupGeometry, *, elem_bytes: int = 4, acc_bytes: int | None = None
 ) -> dict:
     """Per-component bytes of :func:`working_set_bytes` — ``frame`` for
     the resident input frame plus, per layer i, ``L{i}/slab_in``, ``z``,
     ``patches``, ``conv``, ``out`` and ``weights``. The plan verifier's
-    resource findings (V201/V202) cite this so a budget blow-up names the
-    component that grew, not just the total."""
+    resource findings (V201/V202/V204) cite this so a budget blow-up
+    names the component that grew, not just the total.
+
+    Streamed components (frame, input slabs, tap assembly, patches,
+    inter-layer outputs, weight codes) are charged at ``elem_bytes``; the
+    conv accumulator slabs and the group's final fp32 output at
+    ``acc_bytes`` (default: ``elem_bytes``); bias at 4 bytes (f32 on
+    every path)."""
+    acc = elem_bytes if acc_bytes is None else acc_bytes
     g0 = geom.layers[0]
+    last = len(geom.layers) - 1
     cols0 = g0.in_cols + sum(geom.in_pad_cols)
     parts = {
         "frame": geom.in_pad_rows_total * cols0 * g0.in_ch * elem_bytes
     }
     for i, g in enumerate(geom.layers):
         padded_cols = g.in_cols + g.pads[1][0] + g.pads[1][1]
-        parts[f"L{i}/slab_in"] = g.in_slab_rows * padded_cols * g.in_ch
-        parts[f"L{i}/z"] = g.in_slab_rows * g.conv_cols * g.k * g.in_ch
-        parts[f"L{i}/patches"] = (
-            g.conv_slab_rows * g.conv_cols * g.k * g.k * g.in_ch
+        parts[f"L{i}/slab_in"] = (
+            g.in_slab_rows * padded_cols * g.in_ch * elem_bytes
         )
-        parts[f"L{i}/conv"] = g.conv_slab_rows * g.conv_cols * g.n_out
-        parts[f"L{i}/out"] = g.out_slab_rows * g.out_cols * g.n_out
-        parts[f"L{i}/weights"] = g.k * g.k * g.in_ch * g.n_out + g.n_out
-        for key in ("slab_in", "z", "patches", "conv", "out", "weights"):
-            parts[f"L{i}/{key}"] *= elem_bytes
+        parts[f"L{i}/z"] = (
+            g.in_slab_rows * g.conv_cols * g.k * g.in_ch * elem_bytes
+        )
+        parts[f"L{i}/patches"] = (
+            g.conv_slab_rows * g.conv_cols * g.k * g.k * g.in_ch * elem_bytes
+        )
+        parts[f"L{i}/conv"] = g.conv_slab_rows * g.conv_cols * g.n_out * acc
+        out_bytes = acc if i == last else elem_bytes
+        parts[f"L{i}/out"] = g.out_slab_rows * g.out_cols * g.n_out * out_bytes
+        parts[f"L{i}/weights"] = (
+            g.k * g.k * g.in_ch * g.n_out * elem_bytes + g.n_out * 4
+        )
     return parts

@@ -62,23 +62,44 @@ def _pad_same(x: jax.Array, k: int, stride: int = 1) -> jax.Array:
     return jnp.pad(x, ((0, 0), ph, pw, (0, 0)))
 
 
+def _validate_int8(int8_scales, act_bits, w) -> None:
+    if int8_scales is None:
+        return
+    if act_bits is None:
+        raise ValueError("int8_scales requires act_bits (the stream grid)")
+    if not jnp.issubdtype(w.dtype, jnp.signedinteger):
+        raise ValueError(
+            f"int8_scales requires int8 weight codes, got {w.dtype} — bake "
+            "weights with quantize_fixed(w, dynamic_spec(w, bits))"
+        )
+
+
 def _fused_dispatch(
-    x, w, b, *, padding, stride, act, pool, pool_stride, act_bits, out_dtype,
-    backend, block_r, block_w, block_c, block_n,
+    x, w, b, *, padding, stride, act, pool, pool_stride, act_bits,
+    int8_scales, out_dtype, backend, block_r, block_w, block_c, block_n,
 ):
     k = w.shape[0]
     if w.shape[1] != k:
         raise ValueError(f"only square kernels, got {w.shape}")
     validate_backend(backend)
+    _validate_int8(int8_scales, act_bits, w)
     if backend == "ref":
         return stream_conv_block_ref(
             x, w, b, padding=padding, stride=stride, act=act, pool=pool,
             pool_stride=pool_stride, act_bits=act_bits,
+            int8_scales=int8_scales,
         ).astype(out_dtype)
     if padding == "SAME":
         x = _pad_same(x, k, stride)
     elif padding != "VALID":
         raise ValueError(padding)
+    if int8_scales is not None and jnp.issubdtype(x.dtype, jnp.floating):
+        # Quantize onto the input stream grid OUTSIDE the kernel call: the
+        # resident frame is int8 codes (1 byte/element — what the fusion
+        # planner charges), and pad zeros above are code 0 == value 0.
+        from repro.core.quant.fixed_point import quantize_fixed
+
+        x = quantize_fixed(x, int8_scales.in_spec).astype(jnp.int8)
     w_taps = w.reshape(k * k, w.shape[2], w.shape[3])
     if backend == "pallas" and not compiled_pallas_available():
         # Compiled fallback: identical algorithm, lowered through XLA.
@@ -86,7 +107,8 @@ def _fused_dispatch(
         # the block_* tuning knobs are Pallas-only.
         return stream_conv_fused_xla(
             x, w_taps, b, k=k, stride=stride, act=act, pool=pool,
-            pool_stride=pool_stride, act_bits=act_bits, out_dtype=out_dtype,
+            pool_stride=pool_stride, act_bits=act_bits,
+            int8_scales=int8_scales, out_dtype=out_dtype,
         )
     return stream_conv_fused_pallas(
         x,
@@ -98,6 +120,7 @@ def _fused_dispatch(
         pool=pool,
         pool_stride=pool_stride,
         act_bits=act_bits,
+        int8_scales=int8_scales,
         block_r=block_r,
         block_w=block_w,
         block_c=block_c,
@@ -133,7 +156,7 @@ def stream_conv2d(
     return _fused_dispatch(
         x, w, zero_b,
         padding=padding, stride=stride, act="none", pool=0, pool_stride=None,
-        act_bits=None, out_dtype=out_dtype, backend=backend,
+        act_bits=None, int8_scales=None, out_dtype=out_dtype, backend=backend,
         block_r=block_r, block_w=block_w, block_c=block_c, block_n=block_n,
     )
 
@@ -142,7 +165,8 @@ def stream_conv2d(
     jax.jit,
     static_argnames=(
         "padding", "stride", "act", "pool", "pool_stride", "act_bits",
-        "backend", "out_dtype", "block_r", "block_w", "block_c", "block_n",
+        "int8_scales", "backend", "out_dtype", "block_r", "block_w",
+        "block_c", "block_n",
     ),
 )
 def stream_conv_block(
@@ -156,6 +180,7 @@ def stream_conv_block(
     pool: int = 2,
     pool_stride: int | None = None,
     act_bits: int | None = None,
+    int8_scales=None,
     out_dtype=jnp.float32,
     backend: str = DEFAULT_BACKEND,
     block_r: int = 8,
@@ -168,11 +193,18 @@ def stream_conv_block(
     means window == stride (so ``pool=2`` is the classic 2x2/2),
     ``act='none'`` the activation; ``act_bits`` quantizes the output
     feature stream inside the same fused epilogue (the paper's quantized
-    pixel flow — no separate HBM pass)."""
+    pixel flow — no separate HBM pass).
+
+    ``int8_scales`` (a static ``epilogue.Int8Scales``) switches all
+    backends to true integer arithmetic: ``w`` must be int8 weight codes,
+    the input is quantized onto its stream grid (exact for on-grid
+    values), and the conv contracts int8 x int8 -> int32 before the
+    requantizing epilogue — fp32 values on the ``act_bits`` grid out, so
+    the call boundary contract is unchanged."""
     return _fused_dispatch(
         x, w, b,
         padding=padding, stride=stride, act=act, pool=pool,
-        pool_stride=pool_stride, act_bits=act_bits,
+        pool_stride=pool_stride, act_bits=act_bits, int8_scales=int8_scales,
         out_dtype=out_dtype, backend=backend,
         block_r=block_r, block_w=block_w, block_c=block_c, block_n=block_n,
     )
@@ -184,7 +216,8 @@ def stream_conv_pyramid(
     biases,  # sequence of (N,), one per layer
     *,
     layers,  # sequence of layer specs (padding/stride/act/pool[/pool_stride])
-    act_bits: int | None = None,
+    act_bits=None,  # int | None | per-layer tuple
+    int8_scales=None,  # None | per-layer tuple of Int8Scales
     block_rows: int = 0,
     out_dtype=jnp.float32,
     backend: str = DEFAULT_BACKEND,
@@ -205,6 +238,13 @@ def stream_conv_pyramid(
     one-closure XLA rendering elsewhere; ``pallas_interpret`` runs the
     exact multi-layer kernel program as the oracle; ``ref`` is the
     unfused per-layer chain.
+
+    ``act_bits`` may be a per-layer tuple (mixed-bitwidth plans);
+    ``int8_scales`` (per-layer tuple of ``Int8Scales``) selects true
+    integer arithmetic: the frame is quantized onto layer 0's stream grid
+    before the kernel (1-byte resident frame), interior layers consume
+    and emit int8 stream codes, and each ``Int8Scales.in_bits`` must name
+    the previous layer's ``act_bits`` (the code chain contract).
     """
     validate_backend(backend)
     weights = tuple(weights)
@@ -220,18 +260,49 @@ def stream_conv_pyramid(
             raise ValueError(
                 f"pyramid layer {li}: only square HWIO kernels, got {w.shape}"
             )
+    bits = (
+        act_bits if isinstance(act_bits, tuple)
+        else (act_bits,) * len(layers)
+    )
+    if len(bits) != len(layers):
+        raise ValueError(
+            f"act_bits tuple has {len(bits)} entries for "
+            f"{len(layers)} layers"
+        )
+    if int8_scales is not None:
+        int8_scales = tuple(int8_scales)
+        if len(int8_scales) != len(layers):
+            raise ValueError(
+                f"int8_scales has {len(int8_scales)} entries for "
+                f"{len(layers)} layers"
+            )
+        for li, (sc, w) in enumerate(zip(int8_scales, weights)):
+            _validate_int8(sc, bits[li], w)
+            if li and sc.in_bits != bits[li - 1]:
+                raise ValueError(
+                    f"pyramid layer {li}: in_bits={sc.in_bits} must equal "
+                    f"the previous layer's act_bits={bits[li - 1]} (the "
+                    "inter-layer code chain)"
+                )
     pyr = as_pyramid_layers(layers)
     if backend == "ref":
         return stream_conv_pyramid_ref(
-            x, weights, biases, layers=pyr, act_bits=act_bits
+            x, weights, biases, layers=pyr, act_bits=bits,
+            int8_scales=int8_scales,
         ).astype(out_dtype)
     if backend == "pallas" and not compiled_pallas_available():
         return stream_conv_pyramid_xla(
-            x, weights, biases, layers=pyr, act_bits=act_bits,
-            out_dtype=out_dtype,
+            x, weights, biases, layers=pyr, act_bits=bits,
+            int8_scales=int8_scales, out_dtype=out_dtype,
         )
+    if int8_scales is not None and jnp.issubdtype(x.dtype, jnp.floating):
+        # Quantize onto layer 0's stream grid OUTSIDE the pallas_call: the
+        # VMEM-resident frame is int8 codes — what the planner charges.
+        from repro.core.quant.fixed_point import quantize_fixed
+
+        x = quantize_fixed(x, int8_scales[0].in_spec).astype(jnp.int8)
     return stream_conv_pyramid_pallas(
-        x, weights, biases, layers=pyr, act_bits=act_bits,
-        block_rows=block_rows, out_dtype=out_dtype,
+        x, weights, biases, layers=pyr, act_bits=bits,
+        int8_scales=int8_scales, block_rows=block_rows, out_dtype=out_dtype,
         interpret=(backend == "pallas_interpret"),
     )

@@ -17,7 +17,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.quant.fixed_point import FixedPointSpec, fake_quant_ste
+from repro.core.quant.fixed_point import (
+    FixedPointSpec,
+    fake_quant_ste,
+    quantize_fixed,
+)
 from repro.kernels.stream_conv.epilogue import ACTS, normalize_pool
 
 
@@ -46,19 +50,48 @@ def stream_conv_block_ref(
     pool: int = 0,
     pool_stride: int | None = None,
     act_bits: int | None = None,
+    int8_scales=None,
 ) -> jax.Array:
     """Unfused conv -> bias -> act -> NxN/stride-s max-pool -> fake-quant
-    reference composition."""
+    reference composition.
+
+    ``int8_scales`` (an ``epilogue.Int8Scales``) switches the conv to the
+    true-integer rendering: the input is quantized onto its stream grid as
+    int8 codes (exact for on-grid values), ``w`` must already be int8
+    weight codes, and the conv contracts integers into an int32
+    accumulator (``preferred_element_type``) that one exact pow2 multiply
+    dequantizes back to fp32 before the bias/act/pool/quant chain.
+    """
     if act not in ACTS:
         raise ValueError(f"unknown act {act!r}")
     pw, ps = normalize_pool(pool, pool_stride)
-    y = jax.lax.conv_general_dilated(
-        x.astype(jnp.float32),
-        w.astype(jnp.float32),
-        window_strides=(stride, stride),
-        padding=padding,
-        dimension_numbers=("NHWC", "HWIO", "NHWC"),
-    )
+    if int8_scales is not None:
+        if not jnp.issubdtype(w.dtype, jnp.signedinteger):
+            raise ValueError(
+                f"int8_scales given but weights are {w.dtype}, not int codes"
+            )
+        qx = (
+            quantize_fixed(x, int8_scales.in_spec).astype(jnp.int8)
+            if jnp.issubdtype(x.dtype, jnp.floating)
+            else x
+        )
+        y = jax.lax.conv_general_dilated(
+            qx,
+            w.astype(jnp.int8),
+            window_strides=(stride, stride),
+            padding=padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            preferred_element_type=jnp.int32,
+        )
+        y = y.astype(jnp.float32) * int8_scales.deq_scale
+    else:
+        y = jax.lax.conv_general_dilated(
+            x.astype(jnp.float32),
+            w.astype(jnp.float32),
+            window_strides=(stride, stride),
+            padding=padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
     y = y + b.astype(jnp.float32)
     if act == "relu":
         y = jnp.maximum(y, 0.0)
@@ -84,15 +117,19 @@ def stream_conv_pyramid_ref(
     biases,  # per layer (N,)
     *,
     layers,  # PyramidLayer per layer (padding/stride/act/pool/pool_stride)
-    act_bits: int | None = None,
+    act_bits=None,  # int | None | per-layer tuple
+    int8_scales=None,  # None | per-layer tuple of Int8Scales
 ) -> jax.Array:
     """Reference rendering of a fusion group: the plain per-layer
     ``stream_conv_block_ref`` chain. Fusion is a scheduling decision, not
     a semantic one — the group's math is exactly the layer composition."""
-    for layer, w, b in zip(layers, weights, biases):
+    n = len(tuple(layers))
+    bits = act_bits if isinstance(act_bits, tuple) else (act_bits,) * n
+    for i, (layer, w, b) in enumerate(zip(layers, weights, biases)):
         x = stream_conv_block_ref(
             x, w, b, padding=layer.padding, stride=layer.stride,
             act=layer.act, pool=layer.pool, pool_stride=layer.pool_stride,
-            act_bits=act_bits,
+            act_bits=bits[i],
+            int8_scales=None if int8_scales is None else int8_scales[i],
         )
     return x

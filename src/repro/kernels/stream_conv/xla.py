@@ -40,7 +40,8 @@ _BLOCK_BYTES_BUDGET = 128 * 1024 * 1024
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "k", "stride", "act", "pool", "pool_stride", "act_bits", "out_dtype"
+        "k", "stride", "act", "pool", "pool_stride", "act_bits",
+        "int8_scales", "out_dtype",
     ),
 )
 def stream_conv_fused_xla(
@@ -54,8 +55,24 @@ def stream_conv_fused_xla(
     pool: int = 0,
     pool_stride: int | None = None,
     act_bits: int | None = None,
+    int8_scales=None,
     out_dtype=jnp.float32,
 ) -> jax.Array:
+    if int8_scales is not None:
+        # True-int8 rendering: quantize a float input onto its stream grid
+        # (int8 codes; a no-op representation change for on-grid values —
+        # pre-quantized int8 frames pass straight through), contract
+        # integer codes into an int32 accumulator, dequantize with one
+        # exact pow2 multiply. Forward-only (the fp32 path keeps QAT).
+        if not jnp.issubdtype(w_taps.dtype, jnp.signedinteger):
+            raise ValueError(
+                f"int8_scales given but w_taps are {w_taps.dtype}, "
+                "not int codes"
+            )
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            from repro.core.quant.fixed_point import quantize_fixed
+
+            x = quantize_fixed(x, int8_scales.in_spec).astype(jnp.int8)
     b, h, wd, c = x.shape
     kk, c2, n = w_taps.shape
     if kk != k * k or c2 != c:
@@ -92,7 +109,10 @@ def stream_conv_fused_xla(
     h_rows = (n_rb - 1) * r * s + blk_in
     if h_rows > h:
         x = jnp.pad(x, ((0, 0), (0, h_rows - h), (0, 0), (0, 0)))
-    w_flat = w_taps.reshape(k * k * c, n).astype(jnp.float32)
+    if int8_scales is not None:
+        w_flat = w_taps.reshape(k * k * c, n).astype(jnp.int8)
+    else:
+        w_flat = w_taps.reshape(k * k * c, n).astype(jnp.float32)
 
     def block_fn(rb):
         xb = jax.lax.dynamic_slice_in_dim(x, rb * r * s, blk_in, axis=1)
@@ -108,17 +128,26 @@ def stream_conv_fused_xla(
                     ]
                 )
         patches = jnp.stack(taps, axis=3)  # (B, r_conv, w_out, k*k, C)
-        yb = jnp.dot(
-            patches.reshape(b * r_conv * w_out, k * k * c).astype(jnp.float32),
-            w_flat,
-            preferred_element_type=jnp.float32,
-        ).reshape(b, r_conv, w_out, n)
+        operand = patches.reshape(b * r_conv * w_out, k * k * c)
+        if int8_scales is not None:
+            # ONE integer matmul -> int32 accumulator -> exact pow2 dequant.
+            yb = jnp.dot(
+                operand, w_flat, preferred_element_type=jnp.int32
+            ).reshape(b, r_conv, w_out, n)
+            yb = yb.astype(jnp.float32) * int8_scales.deq_scale
+        else:
+            yb = jnp.dot(
+                operand.astype(jnp.float32),
+                w_flat,
+                preferred_element_type=jnp.float32,
+            ).reshape(b, r_conv, w_out, n)
         # ste=True: identical forward values, STE gradients — the XLA
         # rendering is the differentiable fused path, so in-kernel stream
-        # quantization must not zero out QAT gradients.
+        # quantization must not zero out QAT gradients. The int8 path is
+        # forward-only (the input rounding has no gradient anyway).
         return apply_epilogue(
             yb, bias, act=act, pool=pool, pool_stride=pool_stride,
-            act_bits=act_bits, ste=True,
+            act_bits=act_bits, ste=int8_scales is None,
         )
 
     if n_rb == 1:
@@ -149,7 +178,8 @@ def _assemble_taps_xla(xp, k: int, s: int, conv_r: int, conv_c: int):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("layers", "act_bits", "out_dtype")
+    jax.jit,
+    static_argnames=("layers", "act_bits", "int8_scales", "out_dtype"),
 )
 def stream_conv_pyramid_xla(
     x: jax.Array,  # (B, H, W, C0), unpadded
@@ -157,7 +187,8 @@ def stream_conv_pyramid_xla(
     biases: tuple,  # per layer (N,)
     *,
     layers: tuple,  # PyramidLayer per layer
-    act_bits: int | None = None,
+    act_bits=None,  # int | None | per-layer tuple
+    int8_scales=None,  # None | per-layer tuple of Int8Scales
     out_dtype=jnp.float32,
 ) -> jax.Array:
     """XLA rendering of the fused pyramid — the compiled fallback where
@@ -173,13 +204,23 @@ def stream_conv_pyramid_xla(
     """
     from repro.kernels.stream_conv.halo import same_pads
 
+    n_layers = len(layers)
+    bits = act_bits if isinstance(act_bits, tuple) else (act_bits,) * n_layers
     big = any(
         x.shape[0] * g_h * g_w * k * k * c * 4 > _BLOCK_BYTES_BUDGET
         for (g_h, g_w, k, c) in _pyramid_conv_dims(x.shape, weights, layers)
     )
-    for layer, w_t, b_t in zip(layers, weights, biases):
+    for i, (layer, w_t, b_t) in enumerate(zip(layers, weights, biases)):
         k = w_t.shape[0]
         s = layer.stride
+        sc = None if int8_scales is None else int8_scales[i]
+        if sc is not None and jnp.issubdtype(x.dtype, jnp.floating):
+            # Quantize onto the layer's input stream grid before padding:
+            # int8 codes thread through SAME pads (code 0 == value 0) and
+            # the tap assembly unchanged.
+            from repro.core.quant.fixed_point import quantize_fixed
+
+            x = quantize_fixed(x, sc.in_spec).astype(jnp.int8)
         if layer.padding == "SAME":
             ph = same_pads(x.shape[1], s, k)
             pw_ = same_pads(x.shape[2], s, k)
@@ -190,23 +231,32 @@ def stream_conv_pyramid_xla(
             x = stream_conv_fused_xla(
                 x, w_t.reshape(k * k, w_t.shape[2], w_t.shape[3]), b_t,
                 k=k, stride=s, act=layer.act, pool=layer.pool,
-                pool_stride=layer.pool_stride, act_bits=act_bits,
-                out_dtype=jnp.float32,
+                pool_stride=layer.pool_stride, act_bits=bits[i],
+                int8_scales=sc, out_dtype=jnp.float32,
             )
             continue
         b, h, w, c = x.shape
         conv_r, conv_c = (h - k) // s + 1, (w - k) // s + 1
         operand = _assemble_taps_xla(x, k, s, conv_r, conv_c)
-        y = jnp.dot(
-            operand.astype(jnp.float32),
-            w_t.reshape(k * k * c, -1).astype(jnp.float32),
-            preferred_element_type=jnp.float32,
-        ).reshape(b, conv_r, conv_c, -1)
-        # ste=True: the XLA rendering is the differentiable fused path.
+        if sc is not None:
+            y = jnp.dot(
+                operand,
+                w_t.reshape(k * k * c, -1).astype(jnp.int8),
+                preferred_element_type=jnp.int32,
+            ).reshape(b, conv_r, conv_c, -1)
+            y = y.astype(jnp.float32) * sc.deq_scale
+        else:
+            y = jnp.dot(
+                operand.astype(jnp.float32),
+                w_t.reshape(k * k * c, -1).astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            ).reshape(b, conv_r, conv_c, -1)
+        # ste=True: the XLA rendering is the differentiable fused path
+        # (the int8 rendering is forward-only).
         x = apply_epilogue(
             y, b_t, act=layer.act, pool=layer.pool,
-            pool_stride=layer.pool_stride, act_bits=act_bits,
-            ste=True, pool_first=True,
+            pool_stride=layer.pool_stride, act_bits=bits[i],
+            ste=sc is None, pool_first=True,
         )
     return x.astype(out_dtype)
 

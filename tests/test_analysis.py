@@ -75,9 +75,9 @@ class TestRegistry:
 
     def test_expected_invariants_present(self):
         want = {
-            "V001", "V002", "V003", "V004", "V005", "V006", "V007",
+            "V001", "V002", "V003", "V004", "V005", "V006", "V007", "V008",
             "V101", "V102", "V103",
-            "V201", "V202", "V203",
+            "V201", "V202", "V203", "V204",
             "V301", "V302", "V303", "V304", "V305",
         }
         assert want <= set(REGISTRY)
@@ -103,6 +103,31 @@ class TestCleanRun:
                      backend="pallas_interpret")
         assert verify_plan(
             plan, ids=("V001", "V002", "V003", "V007", "V203")
+        ) == []
+
+    def test_int8_plan_verifies_clean(self):
+        """True-int8 plans pass the full single-device registry, including
+        the integer-compute (V008) and int8-slab-costing (V204) gates."""
+        plan = _plan(
+            quant=QuantSpec(weight_bits=8, act_bits=8, int8_compute=True)
+        )
+        assert verify_plan(
+            plan, scopes=("plan", "structure", "resource")
+        ) == []
+
+    def test_int8_interpret_probe_verifies_clean(self):
+        """On the interpret probe the int8 plan keeps one in-kernel quant
+        round per layer plus exactly one host-side input-quantize round
+        per fusion group (the V007 int8 accounting), integer pallas-body
+        dots (V008) and int8 traced footprints under the int8 costing
+        (V203/V204)."""
+        plan = _plan(
+            quant=QuantSpec(weight_bits=8, act_bits=8, int8_compute=True),
+            backend="pallas_interpret",
+        )
+        assert verify_plan(
+            plan,
+            ids=("V001", "V002", "V003", "V007", "V008", "V203", "V204"),
         ) == []
 
     @pytest.mark.slow
@@ -186,6 +211,37 @@ class TestSeededPlanDefects:
         ids = _ids(verify_plan(bad, scopes=("resource",)))
         assert "V203" in ids  # traced footprint exceeds the recorded cost
         assert "V202" in ids  # and the cost model disagrees too
+
+    def test_fp32_compute_under_int8_contract_is_V008(self):
+        """Seeded defect: a plan whose kernels matmul in fp32 (the
+        fake-quant lowering) but whose QuantSpec claims int8_compute —
+        the hidden-upcast class V008 exists to catch."""
+        fq = _plan(quant=QuantSpec(weight_bits=8, act_bits=8))
+        lying = dataclasses.replace(
+            fq, quant=QuantSpec(weight_bits=8, act_bits=8, int8_compute=True)
+        )
+        findings = verify_plan(lying, ids=("V008",))
+        assert _ids(findings) == ["V008"]
+        assert any("float" in f.message for f in findings)
+
+    def test_fp32_bytes_under_int8_contract_is_V204(self):
+        """Seeded defect: an int8 plan whose fusion group books the fp32
+        working set — the budget headroom the 1-byte slabs buy is
+        silently wasted."""
+        from repro.core.dhm.fusion import group_working_set
+
+        plan = _plan(
+            quant=QuantSpec(weight_bits=8, act_bits=8, int8_compute=True)
+        )
+        g = plan.fusion_groups[0]
+        fp32_cost = group_working_set(
+            plan.topo, g.layers, block_rows=g.block_rows, elem_bytes=4
+        )
+        bad = _replace_group(plan, 0, working_set=fp32_cost)
+        findings = verify_plan(bad, ids=("V204",))
+        assert _ids(findings) == ["V204"]
+        # and the honest int8 plan is clean under the same gate
+        assert verify_plan(plan, ids=("V204",)) == []
 
     def test_dtype_drift_is_V004(self):
         plan = _plan()
